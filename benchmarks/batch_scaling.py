@@ -1,0 +1,52 @@
+"""Beyond-paper: whole-sequence vmap batching throughput of the jitted
+TPP-SD sampler (the paper samples one sequence at a time).
+
+  PYTHONPATH=src python -m benchmarks.batch_scaling
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import TPPConfig
+from repro.core import sampler
+from repro.data import synthetic as ds
+from repro.train import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--t-end", type=float, default=20.0)
+    ap.add_argument("--gamma", type=int, default=10)
+    ap.add_argument("--emax", type=int, default=256)
+    ap.add_argument("--epochs", type=int, default=5)
+    args = ap.parse_args()
+    data = ds.make_dataset("hawkes", n_seqs=100, t_end=args.t_end)
+    cfg_t = TPPConfig(encoder="thp", num_layers=4, num_heads=2, d_model=32,
+                      d_ff=64, num_marks=1, num_mix=16)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    tcfg = trainer.TPPTrainConfig(max_epochs=args.epochs)
+    pt, _ = trainer.train_tpp(cfg_t, data, tcfg)
+    pd, _ = trainer.train_tpp(cfg_d, data, tcfg)
+    print("name,us_per_call,derived")
+    for B in (1, 4, 16, 64):
+        fn = lambda: sampler.sample_sd_batch(
+            cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(0), args.t_end,
+            args.gamma, args.emax, B)
+        out = fn()
+        jax.block_until_ready(out.times)
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.times)
+        dt = time.perf_counter() - t0
+        ev = int(np.sum(np.array(out.n)))
+        print(f"batch_scaling/B{B},{dt / B * 1e6:.1f},"
+              f"events={ev};events_per_sec={ev / dt:.0f};"
+              f"seconds={dt:.3f}")
+
+
+if __name__ == "__main__":
+    main()

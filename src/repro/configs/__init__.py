@@ -1,0 +1,4 @@
+from . import archs, base, shapes
+from .archs import ARCHS, get_arch, smoke_variant
+from .base import ModelConfig, TPPConfig, paper_draft, paper_target
+from .shapes import SHAPES, get_shape

@@ -1,0 +1,176 @@
+"""Config dataclasses for every model family in the zoo.
+
+All configs are frozen dataclasses so they can be closed over by jitted
+functions and hashed as static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Unified architecture config.
+
+    A single config class covers every assigned family; family-specific
+    fields are zero/empty when unused.  ``family`` selects the forward
+    implementation in ``repro.models.registry``.
+    """
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # --- attention ---
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0          # 0 = full attention (native)
+    long_context_window: int = 8192  # window used for the long_500k variant
+    logit_softcap: float = 0.0
+
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    moe_group_size: int = 256        # dispatch group (bounds dispatch tensor)
+
+    # --- SSM (mamba-1) ---
+    ssm_state: int = 0
+    d_inner: int = 0                 # 0 -> 2 * d_model
+    conv_width: int = 4
+    dt_rank: int = 0                 # 0 -> d_model // 16
+    ssm_chunk: int = 0               # >0: two-level chunked selective scan
+
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    lru_width: int = 0               # 0 -> d_model
+
+    # --- enc-dec (seamless) ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_seq_divisor: int = 8         # frontend downsampling: enc frames = seq // divisor
+    max_enc_len: int = 4096
+
+    # --- vlm ---
+    vision_prefix_len: int = 0       # patch embeddings provided by input_specs stub
+
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"          # activation dtype
+    param_dtype: str = "bfloat16"
+    remat: bool = True               # checkpoint each scanned layer in training
+    remat_policy: str = "full"       # full | dots (save matmul outputs)
+    scan_layers: bool = True
+    use_pallas: bool = False         # Pallas kernels (TPU target); CPU path uses jnp
+    tie_embeddings: bool = False
+
+    # --- provenance ---
+    source: str = ""                 # citation for the assigned config
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.family == "ssm" and self.d_inner == 0:
+            object.__setattr__(self, "d_inner", 2 * self.d_model)
+        if self.family == "ssm" and self.dt_rank == 0:
+            object.__setattr__(self, "dt_rank", max(1, self.d_model // 16))
+        if self.family == "hybrid" and self.lru_width == 0:
+            object.__setattr__(self, "lru_width", self.d_model)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        H, KV, Dh = self.num_heads, self.num_kv_heads, self.head_dim
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            di, N, R = self.d_inner, self.ssm_state, self.dt_rank
+            per = D * 2 * di + di * self.conv_width + di * (R + 2 * N) \
+                + R * di + di * N + di + di * D + 2 * D
+            return emb - V * D + V * D + L * per  # ssm has single emb + lm head
+        per_attn = D * (H + 2 * KV) * Dh + H * Dh * D
+        if self.is_moe:
+            per_mlp = D * self.num_experts + self.num_experts * 3 * D * F
+        else:
+            per_mlp = 3 * D * F
+        per = per_attn + per_mlp + 2 * D
+        if self.family == "encdec":
+            # encoder (self) + decoder (self + cross)
+            enc = self.enc_layers * (per_attn + per_mlp + 2 * D)
+            dec = self.dec_layers * (2 * per_attn + per_mlp + 3 * D)
+            return emb + enc + dec
+        if self.family == "hybrid":
+            # mix of recurrent and attention temporal blocks
+            n_attn = sum(1 for i in range(L) if self._hybrid_kind(i) == "attn")
+            n_rec = L - n_attn
+            w = self.lru_width
+            per_rec = 2 * D * w + w * self.conv_width + 2 * w * w // 16 + 2 * w + w * D
+            return emb + n_attn * (per_attn + per_mlp + 2 * D) + n_rec * (per_rec + per_mlp + 2 * D)
+        return emb + L * per
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE counts only routed experts)."""
+        if not self.is_moe:
+            return self.n_params
+        D, F, L = self.d_model, self.d_ff, self.num_layers
+        dense = self.n_params - L * self.num_experts * 3 * D * F
+        return dense + L * self.num_experts_per_tok * 3 * D * F
+
+    def _hybrid_kind(self, i: int) -> str:
+        pat = self.block_pattern or ("attn",)
+        return pat[i % len(pat)]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TPPConfig:
+    """Config for the paper's CDF-based Transformer TPP (Sec. 4.2)."""
+
+    name: str = "tpp"
+    encoder: str = "thp"             # thp | sahp | attnhp
+    num_layers: int = 20             # paper target: 20 layers
+    num_heads: int = 8               # paper target: 8 heads
+    d_model: int = 64                # paper: D = 64
+    d_ff: int = 256
+    num_marks: int = 1               # K event types
+    num_mix: int = 64                # paper: M = 64 log-normal components
+    # AttNHP temporal-encoding hyperparameters (Eq. 29)
+    attnhp_m: float = 1.0
+    attnhp_M: float = 2000.0
+    dtype: str = "float32"
+    sigma_min: float = 1e-3          # numerical floor for mixture scales
+    sigma_max: float = 10.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+    def replace(self, **kw) -> "TPPConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper's default target/draft pair (Sec. 5: 8-head 20-layer target,
+# 1-head 1-layer draft).
+def paper_target(encoder: str = "thp", num_marks: int = 1) -> TPPConfig:
+    return TPPConfig(name=f"tpp-target-{encoder}", encoder=encoder,
+                     num_layers=20, num_heads=8, num_marks=num_marks)
+
+
+def paper_draft(encoder: str = "thp", num_marks: int = 1) -> TPPConfig:
+    return TPPConfig(name=f"tpp-draft-{encoder}", encoder=encoder,
+                     num_layers=1, num_heads=1, num_marks=num_marks)

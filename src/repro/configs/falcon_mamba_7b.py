@@ -1,0 +1,5 @@
+"""Config for falcon-mamba-7b (see archs.py for the full spec + citation)."""
+from .archs import falcon_mamba_7b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for granite-moe-1b-a400m (see archs.py for the full spec + citation)."""
+from .archs import granite_moe_1b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for internvl2-26b (see archs.py for the full spec + citation)."""
+from .archs import internvl2_26b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for llama3.2-1b (see archs.py for the full spec + citation)."""
+from .archs import llama32_1b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

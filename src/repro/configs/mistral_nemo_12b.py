@@ -1,0 +1,5 @@
+"""Config for mistral-nemo-12b (see archs.py for the full spec + citation)."""
+from .archs import mistral_nemo_12b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for phi3.5-moe-42b-a6.6b (see archs.py for the full spec + citation)."""
+from .archs import phi35_moe_42b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for qwen2.5-32b (see archs.py for the full spec + citation)."""
+from .archs import qwen25_32b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

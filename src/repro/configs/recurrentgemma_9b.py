@@ -1,0 +1,5 @@
+"""Config for recurrentgemma-9b (see archs.py for the full spec + citation)."""
+from .archs import recurrentgemma_9b as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config for seamless-m4t-medium (see archs.py for the full spec + citation)."""
+from .archs import seamless_m4t_medium as CONFIG  # noqa: F401
+from .archs import smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,31 @@
+"""The four assigned input shapes.
+
+Each shape selects which step function the dry-run lowers:
+  - train_4k     -> train_step  (fwd + bwd + Adam update)
+  - prefill_32k  -> prefill     (full forward, KV-cache write)
+  - decode_32k   -> serve_step  (ONE new token against a seq_len KV cache)
+  - long_500k    -> serve_step with the sub-quadratic long-context variant
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]

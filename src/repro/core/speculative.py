@@ -1,0 +1,103 @@
+"""Speculative-decoding primitives (paper Sec. 4.3 + App. A.2/A.3).
+
+The discrete case is the Leviathan-et-al. adjusted distribution computed
+exactly; the continuous case is Theorem 1's acceptance-rejection scheme:
+draw tau ~ g_T, accept with probability max(0, 1 - g_D(tau)/g_T(tau)).
+
+A note on Algorithm 1 line 11-12: the paper's shorthand resamples *both*
+components from their adjusted distributions at the first rejected index
+L = min(l1, l2). The provably-correct composition (App. A.2 proves each
+component separately) distinguishes which component failed:
+
+  - tau rejected at L  -> tau' ~ adjusted g', and the drafted k at L was
+    never tested, so k' ~ f_T directly;
+  - tau accepted, k rejected at L -> keep the accepted tau, k' ~ adjusted f'.
+
+We implement the latter; tests verify the output distribution equals
+target AR sampling either way.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import tpp
+from ..models.tpp import MixParams
+
+
+def accept_logratio(rng, logp_target, logp_draft):
+    """Token/interval-level rejection test: u < min(1, p_T/p_D)."""
+    u = jax.random.uniform(rng, logp_target.shape)
+    return jnp.log(u) < (logp_target - logp_draft)
+
+
+def adjusted_discrete(rng, logp_t, logp_d):
+    """Sample from norm(max(0, p_T - p_D)) (Eq. 4). Shapes: [K]."""
+    p = jnp.maximum(0.0, jnp.exp(logp_t) - jnp.exp(logp_d))
+    total = jnp.sum(p)
+    # p_T == p_D exactly => adjusted dist degenerate; fall back to p_T
+    safe = jnp.where(total > 1e-12, p, jnp.exp(logp_t))
+    return jax.random.categorical(rng, jnp.log(safe + 1e-38))
+
+
+def adjusted_continuous(rng, mix_t: MixParams, mix_d: MixParams,
+                        max_iters: int = 64):
+    """Theorem 1: sample tau ~ g' = norm(max(0, g_T - g_D)).
+
+    Repeatedly draw tau ~ g_T and accept with probability
+    max(0, 1 - g_D(tau)/g_T(tau)). Bounded iterations; on exhaustion the
+    last g_T draw is returned (only reachable when g_T ~= g_D everywhere,
+    where the bias vanishes).
+    """
+
+    def body(state):
+        rng, _, _, it = state
+        rng, r1, r2 = jax.random.split(rng, 3)
+        tau = tpp.sample_interval(r1, mix_t)
+        logp = tpp.interval_logpdf(mix_t, tau)
+        logq = tpp.interval_logpdf(mix_d, tau)
+        alpha = jnp.maximum(0.0, 1.0 - jnp.exp(logq - logp))
+        ok = jax.random.uniform(r2, ()) < alpha
+        return rng, tau, ok, it + 1
+
+    def cond(state):
+        _, _, ok, it = state
+        return jnp.logical_and(~ok, it < max_iters)
+
+    rng, tau0, ok0, it0 = body((rng, jnp.float32(0.0), jnp.bool_(False),
+                                jnp.int32(0)))
+    _, tau, _, _ = lax.while_loop(cond, body, (rng, tau0, ok0, it0))
+    return tau
+
+
+class VerifyResult(NamedTuple):
+    num_accepted: jnp.ndarray      # A in [0, gamma]
+    all_accepted: jnp.ndarray      # bool
+    tau_rejected: jnp.ndarray      # bool: the failing component was tau
+
+
+def verify_events(rng, d_tau, d_k, logq_tau, logq_k_full, mix_t: MixParams,
+                  logp_k_full) -> VerifyResult:
+    """Vector accept/reject over a drafted window (Alg. 1 lines 8-10).
+
+    d_tau: [g] drafted intervals; d_k: [g] drafted marks.
+    logq_tau: [g] draft interval log-densities at d_tau.
+    logq_k_full / logp_k_full: [g, K] full log-pmfs (draft / target).
+    mix_t: target MixParams at the g history positions.
+    """
+    g = d_tau.shape[0]
+    r_tau, r_k = jax.random.split(rng)
+    logp_tau = tpp.interval_logpdf(mix_t, d_tau)
+    logp_k = jnp.take_along_axis(logp_k_full, d_k[:, None], -1)[:, 0]
+    logq_k = jnp.take_along_axis(logq_k_full, d_k[:, None], -1)[:, 0]
+    acc_tau = accept_logratio(r_tau, logp_tau, logq_tau)
+    acc_k = accept_logratio(r_k, logp_k, logq_k)
+    acc = jnp.logical_and(acc_tau, acc_k)
+    prefix = jnp.cumprod(acc.astype(jnp.int32))
+    A = jnp.sum(prefix)
+    all_acc = A == g
+    Ac = jnp.minimum(A, g - 1)
+    return VerifyResult(A, all_acc, ~acc_tau[Ac])

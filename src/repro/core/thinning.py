@@ -1,0 +1,187 @@
+"""Ogata thinning (Lewis & Shedler 1979; Ogata 1981).
+
+Used for (a) simulating the paper's synthetic ground-truth processes
+(App. B.1) and (b) as the classical sequential sampling baseline that
+TPP-SD is structurally compared against (Sec. 4.1).
+
+Host-side numpy: data simulation is a one-off preprocessing step.
+Each process also exposes its analytic compensator Λ(a, b | history) for
+the time-rescaling / KS evaluation (App. A.4).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class PointProcess:
+    """Interface: conditional intensity + a local upper bound."""
+
+    num_marks: int = 1
+
+    def intensity(self, t: float, times: Sequence[float],
+                  marks: Sequence[int]) -> np.ndarray:
+        """Per-mark intensity vector at time t given strict history."""
+        raise NotImplementedError
+
+    def bound(self, t: float, times: Sequence[float],
+              marks: Sequence[int]) -> float:
+        """Upper bound of total intensity on [t, inf) given history."""
+        raise NotImplementedError
+
+    def compensator(self, a: float, b: float, times: Sequence[float],
+                    marks: Sequence[int]) -> float:
+        """Integral of the total intensity over (a, b] given history
+        (history = events with t_i <= a; valid while no event in (a, b])."""
+        raise NotImplementedError
+
+
+@dataclass
+class InhomPoisson(PointProcess):
+    """lambda(t) = A (b + sin(omega * pi * t)); paper: A=5, b=1, w=1/50."""
+    A: float = 5.0
+    b: float = 1.0
+    omega: float = 1.0 / 50.0
+    num_marks: int = 1
+
+    def intensity(self, t, times, marks):
+        return np.array([self.A * (self.b + math.sin(self.omega * math.pi * t))])
+
+    def bound(self, t, times, marks):
+        return self.A * (self.b + 1.0)
+
+    def compensator(self, a, b, times, marks):
+        w = self.omega * math.pi
+        return self.A * (self.b * (b - a)
+                         + (math.cos(w * a) - math.cos(w * b)) / w)
+
+
+@dataclass
+class Hawkes(PointProcess):
+    """lambda(t) = mu + sum alpha exp(-beta (t - t_i)); paper: 2.5, 1, 2."""
+    mu: float = 2.5
+    alpha: float = 1.0
+    beta: float = 2.0
+    num_marks: int = 1
+
+    def intensity(self, t, times, marks):
+        ts = np.asarray(times)
+        ts = ts[ts < t]
+        return np.array([self.mu
+                         + self.alpha * np.exp(-self.beta * (t - ts)).sum()])
+
+    def bound(self, t, times, marks):
+        # intensity decays between events; value just after t bounds it
+        return float(self.intensity(t + 1e-12, times, marks)[0]) + self.alpha
+
+    def compensator(self, a, b, times, marks):
+        ts = np.asarray(times)
+        ts = ts[ts <= a]
+        decay = (np.exp(-self.beta * (a - ts))
+                 - np.exp(-self.beta * (b - ts))).sum()
+        return self.mu * (b - a) + self.alpha / self.beta * decay
+
+
+@dataclass
+class MultiHawkes(PointProcess):
+    """M-dimensional Hawkes (App. B.1 Multi-Hawkes)."""
+    mu: np.ndarray = None
+    alpha: np.ndarray = None   # alpha[i, j]: influence of mark j on mark i
+    beta: np.ndarray = None
+
+    def __post_init__(self):
+        if self.mu is None:
+            self.mu = np.array([0.4, 0.4])
+            self.alpha = np.array([[1.0, 0.5], [0.1, 1.0]])
+            self.beta = np.full((2, 2), 2.0)
+        self.mu = np.asarray(self.mu, float)
+        self.alpha = np.asarray(self.alpha, float)
+        self.beta = np.asarray(self.beta, float)
+        self.num_marks = len(self.mu)
+
+    def intensity(self, t, times, marks):
+        lam = self.mu.copy()
+        for ti, ki in zip(times, marks):
+            if ti < t:
+                lam += self.alpha[:, ki] * np.exp(-self.beta[:, ki] * (t - ti))
+        return lam
+
+    def bound(self, t, times, marks):
+        return float(self.intensity(t + 1e-12, times, marks).sum()
+                     + self.alpha.max() * self.num_marks)
+
+    def compensator(self, a, b, times, marks):
+        out = self.mu.sum() * (b - a)
+        for ti, ki in zip(times, marks):
+            if ti <= a:
+                d = (np.exp(-self.beta[:, ki] * (a - ti))
+                     - np.exp(-self.beta[:, ki] * (b - ti)))
+                out += (self.alpha[:, ki] / self.beta[:, ki] * d).sum()
+        return out
+
+
+def thinning_sample(proc: PointProcess, t_end: float,
+                    rng: np.random.Generator,
+                    t_start: float = 0.0,
+                    max_events: int = 100_000) -> Tuple[np.ndarray, np.ndarray]:
+    """Classical sequential thinning: one candidate per verify step."""
+    times: List[float] = []
+    marks: List[int] = []
+    t = t_start
+    while len(times) < max_events:
+        lam_bar = proc.bound(t, times, marks)
+        if lam_bar <= 0:
+            break
+        t = t + rng.exponential(1.0 / lam_bar)
+        if t > t_end:
+            break
+        lam = proc.intensity(t, times, marks)
+        total = lam.sum()
+        if rng.uniform() < total / lam_bar:
+            k = int(rng.choice(proc.num_marks, p=lam / total))
+            times.append(t)
+            marks.append(k)
+    return np.asarray(times), np.asarray(marks, dtype=np.int64)
+
+
+def simulate_dataset(proc: PointProcess, n_seqs: int, t_end: float,
+                     seed: int = 0) -> List[Tuple[np.ndarray, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    return [thinning_sample(proc, t_end, rng) for _ in range(n_seqs)]
+
+
+def rescaled_intervals(proc: PointProcess, times: np.ndarray,
+                       marks: np.ndarray, t_start: float = 0.0) -> np.ndarray:
+    """Time-rescaling theorem (App. A.4): z_i = Lambda(t_{i-1}, t_i) are
+    iid Exp(1) when the intensity is correct."""
+    zs = []
+    prev = t_start
+    hist_t: List[float] = []
+    hist_k: List[int] = []
+    for t, k in zip(times, marks):
+        zs.append(proc.compensator(prev, float(t), hist_t, hist_k))
+        hist_t.append(float(t))
+        hist_k.append(int(k))
+        prev = float(t)
+    return np.asarray(zs)
+
+
+def ground_truth_loglik(proc: PointProcess, times: np.ndarray,
+                        marks: np.ndarray, t_end: float) -> float:
+    """CIF-form log-likelihood (Eq. 1) under the true process."""
+    ll = 0.0
+    hist_t: List[float] = []
+    hist_k: List[int] = []
+    prev = 0.0
+    for t, k in zip(times, marks):
+        lam = proc.intensity(float(t), hist_t, hist_k)
+        ll += math.log(max(lam[int(k)], 1e-300))
+        ll -= proc.compensator(prev, float(t), hist_t, hist_k)
+        hist_t.append(float(t))
+        hist_k.append(int(k))
+        prev = float(t)
+    ll -= proc.compensator(prev, t_end, hist_t, hist_k)
+    return ll

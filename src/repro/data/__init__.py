@@ -1,0 +1,2 @@
+from . import synthetic
+from .synthetic import TPPDataset, batches, make_dataset, pad_batch

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter / activation carries a tuple of *logical* axis names; a
+``Rules`` object maps logical names to mesh axes, with a
+divisible-or-replicate fallback so one rule set covers every architecture
+(e.g. kv_heads=8 cannot shard over a 16-way model axis -> replicated, as
+MaxText does for small KV head counts).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary.
+#   batch      : data-parallel batch dim
+#   seq        : sequence dim (unsharded by default; "seq_shard" opt-in)
+#   embed      : model width as an *activation* dim (unsharded)
+#   p_embed    : model width as a *parameter* dim (FSDP target)
+#   vocab      : vocabulary dim
+#   heads      : query heads
+#   kv_heads   : key/value heads
+#   qkv        : per-head feature dim (never sharded by default)
+#   mlp        : FFN hidden dim
+#   experts    : MoE expert dim
+#   inner      : SSM/LRU inner width
+#   state      : SSM state dim
+#   layers     : scanned-layer leading dim (never sharded)
+#   cache_seq  : KV-cache sequence dim
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "p_embed": ("data",),          # FSDP: shard param width over data axis
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),
+    "state": (),
+    "layers": (),
+    "cache_seq": (),
+    "mix": (),
+    "marks": (),
+}
+
+
+class Rules:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+                 fsdp: bool = True):
+        self.mesh = mesh
+        base = dict(DEFAULT_RULES)
+        if rules:
+            base.update(rules)
+        if not fsdp:
+            base["p_embed"] = ()
+        # Drop mesh axes that don't exist in this mesh (e.g. "pod" on 2D mesh).
+        self.rules = {
+            k: tuple(a for a in v if a in mesh.axis_names) for k, v in base.items()
+        }
+
+    def _axis_size(self, names: Tuple[str, ...]) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in names])) if names else 1
+
+    def spec(self, logical: Sequence[Optional[str]],
+             dims: Optional[Sequence[int]] = None) -> P:
+        """Map logical axis names (+ optional concrete dims) to a PartitionSpec.
+
+        If ``dims`` is given, any mapping whose mesh-axis product does not
+        divide the dim is dropped (replicate fallback) — GSPMD would pad,
+        but an even layout keeps memory analysis honest.
+        """
+        out = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                out.append(None)
+                continue
+            axes = tuple(a for a in self.rules.get(name, ()) if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            if dims is not None:
+                size = self._axis_size(axes)
+                if size == 0 or dims[i] % size != 0:
+                    # try progressively shorter prefixes of the rule
+                    while axes and (dims[i] % self._axis_size(axes) != 0):
+                        axes = axes[:-1]
+                    if not axes:
+                        out.append(None)
+                        continue
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else axes)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 dims: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, dims))
+
+    def tree_shardings(self, logical_tree, shape_tree):
+        """Build a NamedSharding tree from parallel (logical-axes, shapes) trees."""
+        def one(logical, shaped):
+            return self.sharding(logical, tuple(shaped.shape))
+        return jax.tree.map(one, logical_tree, shape_tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and all(
+                                isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_spec(rules: Rules) -> P:
+    return rules.spec(("batch", None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

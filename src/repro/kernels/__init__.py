@@ -1,0 +1,3 @@
+"""Pallas TPU kernels (flash_attention, decode_attention, lognorm_mix,
+selective_scan) + jnp oracles. Import via ``ops`` for dispatch."""
+from . import ops, ref

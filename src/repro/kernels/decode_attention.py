@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: single-token GQA decode attention (flash-decode).
+
+One query position per sequence against a long KV cache. For GQA we
+process all G query heads of one KV head together so the [G, bk] logits
+tile feeds the MXU; the KV sequence is the innermost sequential grid
+dimension with online-softmax state in VMEM scratch.
+
+Grid: (B, KV, nk). q is viewed as [B, KV, G, Dh].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, out_ref,
+            m_scr, l_scr, acc_scr, *, scale, window, softcap, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)      # [G, Dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, Dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0, 0]                              # scalar query position
+    kp = kp_ref[0, :]                              # [bk]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G,bk]
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask[None, :], jnp.exp(s - m_safe[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_scr[...] / safe[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        out_ref[0, 0, :, :] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bk",
+                                             "interpret"))
+def decode_attention_pallas(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                            softcap: float = 0.0, bk: int = 512,
+                            interpret: bool = True):
+    """q: [B,H,Dh]; k/v: [B,Sk,KV,Dh]; q_pos: [B]; kv_pos: [B,Sk]."""
+    B, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(bk, Sk)
+    pk = (-Sk) % bk
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pk)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    Skp = k.shape[1]
+    nk = Skp // bk
+    qg = q.reshape(B, KV, G, Dh)
+    qp2 = q_pos.reshape(B, 1)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(Dh),
+                             window=window, softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, Dh), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dh), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, qp2, kv_pos)
+    return out.reshape(B, H, Dh)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: blocked causal FlashAttention (prefill / verify).
+
+Grid: (B, H, nq, nk) — nk is the innermost (sequential) dimension; the
+online-softmax running state (m, l, acc) lives in VMEM scratch and is
+re-initialized at ik == 0 and flushed to the output at ik == nk - 1.
+
+Block shapes are MXU-aligned: q [bq, Dh], k/v [bk, Dh] with bq/bk
+multiples of 128 on real hardware (tests use smaller tiles under
+interpret=True, where alignment is not enforced).
+
+Masking uses absolute positions (q_pos [B,Sq], kv_pos [B,Sk]); invalid
+cache slots carry kv_pos = INT32_MAX. Sliding windows and tanh soft-cap
+are supported to serve recurrentgemma's local attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, out_ref,
+            m_scr, l_scr, acc_scr, *, scale, window, softcap, nk):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)        # [bq, Dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bk, Dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    qp = qp_ref[0, :]                                # [bq]
+    kp = kp_ref[0, :]                                # [bk]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = kp[None, :] <= qp[:, None]
+    if window > 0:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe[:, None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_scr[...] / safe[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        out_ref[0, :, 0, :] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bq", "bk",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                           softcap: float = 0.0, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q: [B,Sq,H,Dh], k/v: [B,Sk,KV,Dh] -> [B,Sq,H,Dh] (fwd only)."""
+    B, Sq, H, Dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pk)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    Sqp, Skp = q.shape[1], k.shape[1]
+    nq, nk = Sqp // bq, Skp // bk
+    grid = (B, H, nq, nk)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(Dh),
+                             window=window, softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, Dh), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dh),
+                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, Dh),
+                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+            pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dh),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, H, Dh), q.dtype),
+        scratch_shapes=[
+            # VMEM scratch: online-softmax running state
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, q_pos, kv_pos)
+    return out[:, :Sq]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused log-normal-mixture log-pdf (paper Sec. 4.2).
+
+The decoder evaluates g(tau) at gamma x M points per verify step; the
+naive composition is ~7 elementwise HBM round-trips over [N, M]
+intermediates. This kernel keeps the whole [bn, M] tile in VMEM and fuses
+log / normalize / logsumexp into one pass.
+
+Tiling: grid over N in blocks of ``bn`` (second-minor 8-aligned, minor dim
+M lane-aligned to 128 via padding inside the caller when M < 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+LOG_SQRT_2PI = 0.5 * math.log(2.0 * math.pi)
+NEG_INF = -1e30
+
+
+def _kernel(tau_ref, log_w_ref, mu_ref, sigma_ref, out_ref):
+    tau = tau_ref[...].astype(jnp.float32)              # [bn]
+    lw = log_w_ref[...].astype(jnp.float32)             # [bn, M]
+    mu = mu_ref[...].astype(jnp.float32)
+    sigma = sigma_ref[...].astype(jnp.float32)
+    lt = jnp.log(jnp.maximum(tau, 1e-30))[:, None]
+    z = (lt - mu) / sigma
+    comp = lw - 0.5 * z * z - jnp.log(sigma) - LOG_SQRT_2PI - lt
+    m = jnp.max(comp, axis=-1, keepdims=True)
+    out = jnp.log(jnp.sum(jnp.exp(comp - m), axis=-1)) + m[:, 0]
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
+                              interpret: bool = True):
+    """tau: [N]; log_w/mu/sigma: [N, M] -> logpdf [N]."""
+    orig_shape = tau.shape
+    tau = tau.reshape(-1)
+    N = tau.shape[0]
+    M = log_w.shape[-1]
+    log_w = log_w.reshape(N, M)
+    mu = mu.reshape(N, M)
+    sigma = sigma.reshape(N, M)
+    bn = min(bn, max(8, N))
+    pad = (-N) % bn
+    if pad:
+        tau = jnp.pad(tau, (0, pad), constant_values=1.0)
+        log_w = jnp.pad(log_w, ((0, pad), (0, 0)))
+        mu = jnp.pad(mu, ((0, pad), (0, 0)))
+        sigma = jnp.pad(sigma, ((0, pad), (0, 0)), constant_values=1.0)
+    Np = tau.shape[0]
+    grid = (Np // bn,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn, M), lambda i: (i, 0)),
+            pl.BlockSpec((bn, M), lambda i: (i, 0)),
+            pl.BlockSpec((bn, M), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.float32),
+        interpret=interpret,
+    )(tau, log_w, mu, sigma)
+    return out[:N].reshape(orig_shape)

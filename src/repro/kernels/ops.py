@@ -1,0 +1,72 @@
+"""Public kernel entry points.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp
+reference. On this CPU container the Pallas kernels execute in
+``interpret=True`` mode inside the tests; the model code defaults to the
+jnp path (``use_pallas=False``) so that dry-run lowering produces plain
+XLA HLO.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                    softcap: float = 0.0, bq: int = 512, bk: int = 512,
+                    use_pallas: bool = False, interpret: bool = True):
+    """Blocked causal attention (prefill / verify path)."""
+    if use_pallas:
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
+                                      softcap=softcap, bq=bq, bk=bk,
+                                      interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, q_pos, kv_pos, window, softcap,
+                                   bq, bk)
+
+
+def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                     softcap: float = 0.0, bk: int = 512,
+                     use_pallas: bool = False, interpret: bool = True):
+    """Single-token GQA decode attention over a KV cache. q: [B, H, Dh]."""
+    if use_pallas:
+        from .decode_attention import decode_attention_pallas
+        return decode_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
+                                       softcap=softcap, bk=bk,
+                                       interpret=interpret)
+    return ref.decode_attention_ref(q, k, v, q_pos, kv_pos, window=window,
+                                    softcap=softcap)
+
+
+def lognorm_mix_logpdf(tau, log_w, mu, sigma, *, use_pallas: bool = False,
+                       interpret: bool = True):
+    """Fused log-normal-mixture log-density (paper Sec. 4.2 decoder)."""
+    if use_pallas:
+        from .lognorm_mix import lognorm_mix_logpdf_pallas
+        return lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma,
+                                         interpret=interpret)
+    return ref.lognorm_mix_logpdf_ref(tau, log_w, mu, sigma)
+
+
+def lognorm_mix_logsf(tau, log_w, mu, sigma):
+    return ref.lognorm_mix_logsf_ref(tau, log_w, mu, sigma)
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                    softcap: float = 0.0):
+    return ref.naive_attention(q, k, v, q_pos, kv_pos, window=window,
+                               softcap=softcap)
+
+
+def selective_scan(dt, Bc, Cc, u, A, D, h0, *, use_pallas: bool = False,
+                   interpret: bool = True):
+    """Fused Mamba selective scan over one chunk (states stay in VMEM)."""
+    if use_pallas:
+        from .selective_scan import selective_scan_pallas
+        return selective_scan_pallas(dt, Bc, Cc, u, A, D, h0,
+                                     interpret=interpret)
+    return ref.selective_scan_ref(dt, Bc, Cc, u, A, D, h0)

@@ -1,0 +1,310 @@
+"""Pure-jnp reference oracles for every Pallas kernel, plus the
+memory-efficient (flash) attention used as the CPU/compile path.
+
+Conventions shared with the kernels:
+  q:  [B, Sq, H, Dh]  (H = G * KV query heads)
+  k,v:[B, Sk, KV, Dh]
+  q_pos:  [B, Sq] int32 absolute positions
+  kv_pos: [B, Sk] int32 absolute positions; INVALID_POS marks unwritten
+          cache slots (masked out because INVALID_POS > any query pos).
+Masking rule: key visible iff kv_pos <= q_pos and (window == 0 or
+kv_pos > q_pos - window).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INVALID_POS = jnp.iinfo(jnp.int32).max
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# naive attention (the oracle of oracles)
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                    softcap: float = 0.0):
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.reshape(B, Sq, KV, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    mask = kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no visible key produce uniform garbage; zero them instead
+    any_visible = jnp.any(mask, axis=-1, keepdims=True)
+    p = jnp.where(any_visible, p, 0.0)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention, pure jnp, O(S) memory, custom VJP
+# ---------------------------------------------------------------------------
+
+def _pad_to(x, axis, mult, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _mask_block(qp, kp, window):
+    # qp: [bq], kp: [bk] -> [bq, bk] bool
+    m = kp[None, :] <= qp[:, None]
+    if window > 0:
+        m &= kp[None, :] > qp[:, None] - window
+    return m
+
+
+def _flash_fwd_impl(q, k, v, q_pos, kv_pos, window, softcap, bq, bk):
+    """Returns (out [B,Sq,H,Dh], lse [B,KV,G,Sq])."""
+    B, Sq0, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+
+    q = _pad_to(q, 1, bq)
+    q_pos = _pad_to(q_pos, 1, bq, value=-1)  # -1 => padded query rows see no key
+    k = _pad_to(k, 1, bk)
+    v = _pad_to(v, 1, bk)
+    kv_pos = _pad_to(kv_pos, 1, bk, value=INVALID_POS)
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+
+    qb = q.reshape(B, nq, bq, KV, G, Dh).astype(jnp.float32)
+    kb = k.reshape(B, nk, bk, KV, Dh).astype(jnp.float32)
+    vb = v.reshape(B, nk, bk, KV, Dh).astype(jnp.float32)
+    qpb = q_pos.reshape(B, nq, bq)
+    kpb = kv_pos.reshape(B, nk, bk)
+
+    def q_block(qi, qpi):
+        # qi [B,bq,KV,G,Dh], qpi [B,bq]
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kj, vj, kpj = blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kj) * scale
+            if softcap > 0:
+                s = jnp.tanh(s / softcap) * softcap
+            mask = jax.vmap(_mask_block, in_axes=(0, 0, None))(qpi, kpj, window)
+            mask = mask[:, None, None, :, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vj)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, bq, Dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+             kpb.transpose(1, 0, 2)))
+        safe_l = jnp.maximum(l, 1e-30)
+        out = acc / safe_l[..., None]
+        out = jnp.where((l > 0)[..., None], out, 0.0)
+        lse = jnp.where(l > 0, m + jnp.log(safe_l), NEG_INF)
+        return out, lse  # [B,KV,G,bq,Dh], [B,KV,G,bq]
+
+    outs, lses = lax.map(lambda t: q_block(t[0], t[1]),
+                         (qb.transpose(1, 0, 2, 3, 4, 5),
+                          qpb.transpose(1, 0, 2)))
+    # outs: [nq, B, KV, G, bq, Dh] -> [B, Sq, H, Dh]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, Dh)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, Sq)
+    return out[:, :Sq0].astype(q.dtype), lse[..., :Sq0]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def flash_attention_ref(q, k, v, q_pos, kv_pos, window: int = 0,
+                        softcap: float = 0.0, bq: int = 512, bk: int = 512):
+    out, _ = _flash_fwd_impl(q, k, v, q_pos, kv_pos, window, softcap, bq, bk)
+    return out
+
+
+def _flash_fwd(q, k, v, q_pos, kv_pos, window, softcap, bq, bk):
+    out, lse = _flash_fwd_impl(q, k, v, q_pos, kv_pos, window, softcap, bq, bk)
+    return out, (q, k, v, q_pos, kv_pos, out, lse)
+
+
+def _flash_bwd(window, softcap, bq, bk, res, dout):
+    q, k, v, q_pos, kv_pos, out, lse = res
+    B, Sq0, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+
+    qp = _pad_to(q_pos, 1, bq, value=-1)
+    kp = _pad_to(kv_pos, 1, bk, value=INVALID_POS)
+    qf = _pad_to(q, 1, bq).astype(jnp.float32)
+    kf = _pad_to(k, 1, bk).astype(jnp.float32)
+    vf = _pad_to(v, 1, bk).astype(jnp.float32)
+    dof = _pad_to(dout, 1, bq).astype(jnp.float32)
+    of = _pad_to(out, 1, bq).astype(jnp.float32)
+    lsef = _pad_to(lse, 3, bq, value=NEG_INF)
+    Sq, Sk = qf.shape[1], kf.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+
+    # D_i = rowsum(dO * O) per query position: [B, KV, G, Sq]
+    Dvec = jnp.einsum("bqhd,bqhd->bhq", dof, of).reshape(B, KV, G, Sq)
+
+    qb = qf.reshape(B, nq, bq, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    dob = dof.reshape(B, nq, bq, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = qp.reshape(B, nq, bq).transpose(1, 0, 2)
+    lseb = lsef.reshape(B, KV, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    Db = Dvec.reshape(B, KV, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    kb = kf.reshape(B, nk, bk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    vb = vf.reshape(B, nk, bk, KV, Dh).transpose(1, 0, 2, 3, 4)
+    kpb = kp.reshape(B, nk, bk).transpose(1, 0, 2)
+
+    def dq_acc_slice_add(dq_acc, dqi, idx, bq):
+        cur = lax.dynamic_slice(dq_acc, (0, idx * bq, 0, 0, 0),
+                                (dq_acc.shape[0], bq) + dq_acc.shape[2:])
+        return cur + dqi
+
+    def kv_block(carry, blk):
+        dq_acc = carry
+        kj, vj, kpj = blk
+
+        def q_step(inner, qblk):
+            dk, dv, dq_acc = inner
+            qi, doi, qpi, lsei, Di, idx = qblk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kj) * scale
+            if softcap > 0:
+                t = jnp.tanh(s / softcap)
+                s_c = t * softcap
+                dcap = 1.0 - t * t
+            else:
+                s_c = s
+                dcap = 1.0
+            mask = jax.vmap(_mask_block, in_axes=(0, 0, None))(qpi, kpj, window)
+            mask = mask[:, None, None, :, :]
+            s_c = jnp.where(mask, s_c, NEG_INF)
+            # clamp exponent: rows with lse=NEG_INF are fully masked anyway
+            p = jnp.where(mask,
+                          jnp.exp(jnp.minimum(s_c - lsei[..., None], 30.0)),
+                          0.0)                                  # [B,KV,G,bq,bk]
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", doi, vj)
+            ds = p * (dp - Di[..., None]) * dcap * scale
+            dk = dk + jnp.einsum("bkgqs,bqkgd->bskd", ds, qi)
+            dv = dv + jnp.einsum("bkgqs,bqkgd->bskd", p, doi)
+            dqi = jnp.einsum("bkgqs,bskd->bqkgd", ds, kj)
+            dq_acc = lax.dynamic_update_slice(
+                dq_acc, dq_acc_slice_add(dq_acc, dqi, idx, bq), (0, idx * bq, 0, 0, 0))
+            return (dk, dv, dq_acc), None
+
+        dk0 = jnp.zeros_like(kj)
+        dv0 = jnp.zeros_like(vj)
+        idxs = jnp.arange(nq)
+        (dk, dv, dq_acc), _ = lax.scan(
+            q_step, (dk0, dv0, dq_acc), (qb, dob, qpb, lseb, Db, idxs))
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, Sq, KV, G, Dh), jnp.float32)
+    dq, dkvs = lax.scan(kv_block, dq0, (kb, vb, kpb))
+    dkb, dvb = dkvs                                   # [nk, B, bk, KV, Dh]
+    dk = dkb.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, Dh)[:, :k.shape[1]]
+    dv = dvb.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, Dh)[:, :v.shape[1]]
+    dq = dq.reshape(B, Sq, H, Dh)[:, :Sq0]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+flash_attention_ref.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single query step over a KV cache) — oracle
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q, k, v, q_pos, kv_pos, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: [B, H, Dh] single-position query. Thin wrapper over naive."""
+    out = naive_attention(q[:, None], k, v, q_pos[:, None], kv_pos,
+                          window=window, softcap=softcap)
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# log-normal mixture — oracle (paper Sec. 4.2 decoder)
+# ---------------------------------------------------------------------------
+
+LOG_SQRT_2PI = 0.5 * math.log(2.0 * math.pi)
+
+
+def lognorm_mix_logpdf_ref(tau, log_w, mu, sigma):
+    """log g(tau) for a log-normal mixture.
+
+    tau: [...], log_w/mu/sigma: [..., M] broadcastable against tau[..., None].
+    Returns log-density with the same shape as tau.  Computed via
+    logsumexp over components in f32.
+    """
+    lt = jnp.log(jnp.maximum(tau, 1e-30))[..., None].astype(jnp.float32)
+    z = (lt - mu.astype(jnp.float32)) / sigma.astype(jnp.float32)
+    comp = (log_w.astype(jnp.float32) - 0.5 * z * z
+            - jnp.log(sigma.astype(jnp.float32)) - LOG_SQRT_2PI - lt)
+    return jax.scipy.special.logsumexp(comp, axis=-1)
+
+
+def lognorm_mix_logsf_ref(tau, log_w, mu, sigma):
+    """log (1 - G(tau)) — survival function of the mixture (for Eq. 2).
+
+    Uses log_ndtr for asymptotically-stable tails (erfc underflows f32
+    around z ~ 13 and its log becomes -inf -> NaN gradients).
+    """
+    lt = jnp.log(jnp.maximum(tau, 1e-30))[..., None].astype(jnp.float32)
+    z = (lt - mu.astype(jnp.float32)) / sigma.astype(jnp.float32)
+    log_sf_comp = jax.scipy.special.log_ndtr(-z)
+    return jax.scipy.special.logsumexp(
+        log_w.astype(jnp.float32) + log_sf_comp, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# selective scan (mamba) — oracle
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(dt, Bc, Cc, u, A, D, h0):
+    """Discretized selective-SSM recurrence (one chunk).
+
+    dt, u: [B, C, di]; Bc, Cc: [B, C, N]; A: [di, N]; D: [di];
+    h0: [B, di, N].  Returns (y [B, C, di], h_last [B, di, N]), f32.
+
+      h_t = exp(dt_t A) h_{t-1} + (dt_t u_t) B_t
+      y_t = <h_t, C_t> + D u_t
+    """
+    f32 = jnp.float32
+    dt = dt.astype(f32)
+    u = u.astype(f32)
+    dA = jnp.exp(dt[..., None] * A.astype(f32))            # [B,C,di,N]
+    dBu = (dt * u)[..., None] * Bc.astype(f32)[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_all, b_all = lax.associative_scan(combine, (dA, dBu), axis=1)
+    hs = b_all + a_all * h0.astype(f32)[:, None]
+    y = jnp.einsum("bcin,bcn->bci", hs, Cc.astype(f32)) \
+        + D.astype(f32) * u
+    return y, hs[:, -1]

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused selective scan (Mamba-1 recurrence).
+
+EXPERIMENTS.md §Perf pair 1 drove falcon-mamba's memory term down 100x by
+chunking the scan in pure JAX; this kernel is the recorded "next lever":
+inside one chunk it keeps the running state h [bi, N] and the discretized
+dA/dBu entirely in VMEM/registers, so the [C, di, N] state tensors never
+touch HBM at all — HBM traffic becomes O(C*di + C*N) per chunk instead of
+O(C*di*N).
+
+Grid: (B, di/bi) — channel blocks are independent; the time loop runs
+sequentially inside the kernel (lax.fori_loop over C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(dt_ref, b_ref, c_ref, u_ref, a_ref, d_ref, h0_ref,
+            y_ref, h_ref, *, C):
+    dt = dt_ref[0].astype(jnp.float32)       # [C, bi]
+    Bc = b_ref[0].astype(jnp.float32)        # [C, N]
+    Cc = c_ref[0].astype(jnp.float32)        # [C, N]
+    u = u_ref[0].astype(jnp.float32)         # [C, bi]
+    A = a_ref[...].astype(jnp.float32)       # [bi, N]
+    D = d_ref[...].astype(jnp.float32)       # [bi]
+    h = h0_ref[0].astype(jnp.float32)        # [bi, N]
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = dt[t][:, None]                # [bi, 1]
+        dA = jnp.exp(dt_t * A)               # [bi, N]
+        h = dA * h + (dt_t * u[t][:, None]) * Bc[t][None, :]
+        y_t = jnp.sum(h * Cc[t][None, :], axis=-1) + D * u[t]
+        y = lax.dynamic_update_slice(y, y_t[None, :], (t, 0))
+        return h, y
+
+    y0 = jnp.zeros((C, dt.shape[1]), jnp.float32)
+    h, y = lax.fori_loop(0, C, step, (h, y0))
+    y_ref[0] = y
+    h_ref[0] = h
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+def selective_scan_pallas(dt, Bc, Cc, u, A, D, h0, *, bi: int = 512,
+                          interpret: bool = True):
+    """dt,u: [B,C,di]; Bc,Cc: [B,C,N]; A: [di,N]; D: [di]; h0: [B,di,N].
+
+    Returns (y [B,C,di] f32, h_last [B,di,N] f32)."""
+    B, C, di = dt.shape
+    N = Bc.shape[-1]
+    bi = min(bi, di)
+    pad = (-di) % bi
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, pad)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+        A = jnp.pad(A, ((0, pad), (0, 0)))
+        D = jnp.pad(D, ((0, pad),))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad), (0, 0)))
+    dip = dt.shape[-1]
+    grid = (B, dip // bi)
+    kern = functools.partial(_kernel, C=C)
+    y, h = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, bi), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, C, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, C, N), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, C, bi), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((bi, N), lambda b, i: (i, 0)),
+            pl.BlockSpec((bi,), lambda b, i: (i,)),
+            pl.BlockSpec((1, bi, N), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, bi), lambda b, i: (b, 0, i)),
+            pl.BlockSpec((1, bi, N), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, dip), jnp.float32),
+            jax.ShapeDtypeStruct((B, dip, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dt, Bc, Cc, u, A, D, h0)
+    return y[..., :di], h[:, :di]

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with ShapeDtypeStruct inputs
+(no allocation), and extract memory / cost / collective statistics.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single --out out.json [--seq-shard] [--no-fsdp]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, get_arch, get_shape
+from ..distributed.sharding import Rules
+from ..launch import specs as sp
+from ..launch.mesh import make_production_mesh
+from ..models import registry
+from ..train import optimizer as opt
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s]+\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum per-device output bytes of every collective op, by type.
+
+    all-reduce traffic counted 2x (ring reduce-scatter + all-gather)."""
+    per_type = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        lhs, op = m.group(1), m.group(2).lower()
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        mult = 2 if op == "all-reduce" else 1
+        rec = per_type.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes * mult
+    total = sum(r["bytes"] for r in per_type.values())
+    return total, per_type
+
+
+def shardings_for(rules: Rules, logical_tree, shape_tree):
+    def one(logical, shaped):
+        return rules.sharding(logical, tuple(shaped.shape))
+    return jax.tree.map(
+        one, logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def resolved_config(arch: str, shape_name: str):
+    return sp.serving_config(get_arch(arch), get_shape(shape_name))
+
+
+def build(cfg, shape_name: str, mesh, *, fsdp=True, seq_shard=False,
+          extra_rules=None):
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings)."""
+    shape = get_shape(shape_name)
+    model = registry.get_model(cfg)
+    rules = Rules(mesh, rules=extra_rules, fsdp=fsdp)
+    params_s = registry.abstract_params(cfg)
+    p_shard = shardings_for(rules, model.logical_axes(), params_s)
+    ins = sp.input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    def batch_shardings(batch):
+        out = {}
+        for k, v in batch.items():
+            out[k] = rules.sharding(("batch",) + (None,) * (len(v.shape) - 1),
+                                    tuple(v.shape))
+        return out
+
+    seq_rule = None
+    if seq_shard:
+        sspec = rules.spec(("batch", "seq_model", "embed"))
+        # shard the residual-stream sequence dim over the model axis
+        sspec = P(sspec[0], "model", None)
+        seq_rule = lambda x: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, sspec))
+
+    if shape.kind == "train":
+        optim = opt.adam(1e-4)
+        state_s = jax.eval_shape(optim.init, params_s)
+        s_shard = type(state_s)(repl, p_shard, p_shard)
+
+        def train_step(params, state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss_fn(p, batch, seq_rule=seq_rule))(params)
+            params, state = optim.update(grads, state, params)
+            return params, state, loss
+
+        args = (params_s, state_s, ins["batch"])
+        in_sh = (p_shard, s_shard, batch_shardings(ins["batch"]))
+        out_sh = (p_shard, s_shard, repl)
+        return train_step, args, in_sh, out_sh, cfg
+
+    def logits_sharding(batch_dim, seq_dim):
+        return rules.sharding(("batch", None, "vocab"),
+                              (batch_dim, seq_dim, cfg.vocab_size))
+
+    if shape.kind == "prefill":
+        c_shard = shardings_for(rules, model.cache_axes(),
+                                jax.eval_shape(
+                                    lambda: model.init_cache(
+                                        shape.global_batch, shape.seq_len)))
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+
+        args = (params_s, ins["batch"])
+        in_sh = (p_shard, batch_shardings(ins["batch"]))
+        text_len = ins["batch"]["tokens"].shape[1]
+        out_sh = (logits_sharding(shape.global_batch, text_len), c_shard)
+        return prefill_step, args, in_sh, out_sh, cfg
+
+    # decode
+    cache_s = ins["cache"]
+    c_shard = shardings_for(rules, model.cache_axes(), cache_s)
+
+    def serve_step(params, cache, tokens):
+        return model.extend(params, cache, tokens)
+
+    args = (params_s, cache_s, ins["tokens"])
+    in_sh = (p_shard, c_shard,
+             rules.sharding(("batch", None), tuple(ins["tokens"].shape)))
+    out_sh = (logits_sharding(shape.global_batch, 1), c_shard)
+    return serve_step, args, in_sh, out_sh, cfg
+
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def _lower_costs(cfg, shape_name, mesh, fsdp, seq_shard, extra_rules=None):
+    """(flops, bytes, coll_bytes, coll_by_type, mem, timings, compiled)."""
+    t0 = time.time()
+    step, args, in_sh, out_sh, _ = build(cfg, shape_name, mesh, fsdp=fsdp,
+                                         seq_shard=seq_shard,
+                                         extra_rules=extra_rules)
+    kind = get_shape(shape_name).kind
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[kind]
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll_total, coll_by_type = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll_total, coll_by_type, mem, (t_lower, t_compile))
+
+
+def _calib_pair(cfg):
+    """Two small UNROLLED variants used to extrapolate per-layer cost
+    (XLA's HloCostAnalysis counts a while-loop body once, so scanned
+    stacks under-report; see DESIGN.md section 6)."""
+    if cfg.family == "hybrid":
+        u = len(cfg.block_pattern or ("rec", "rec", "attn"))
+        mk = lambda L: cfg.replace(num_layers=L, scan_layers=False)
+        return mk(u), mk(2 * u), u, 2 * u, cfg.num_layers
+    if cfg.family == "encdec":
+        mk = lambda L: cfg.replace(enc_layers=L, dec_layers=L,
+                                   scan_layers=False)
+        return mk(1), mk(2), 1, 2, cfg.enc_layers or cfg.num_layers
+    mk = lambda L: cfg.replace(num_layers=L, scan_layers=False)
+    return mk(1), mk(2), 1, 2, cfg.num_layers
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, fsdp=True,
+            seq_shard=False, variant="baseline", calibrate=True,
+            extra_rules=None):
+    if mesh_kind == "serve":
+        from .mesh import SERVING_RULES, make_serving_mesh
+        mesh = make_serving_mesh()
+        extra_rules = dict(SERVING_RULES, **(extra_rules or {}))
+        fsdp = False
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    cfg = resolved_config(arch, shape_name)
+    shape = get_shape(shape_name)
+    (flops, bytes_acc, coll_total, coll_by_type, mem,
+     (t_lower, t_compile)) = _lower_costs(cfg, shape_name, mesh, fsdp,
+                                          seq_shard, extra_rules)
+    corrected = {}
+    if calibrate:
+        c1, c2, L1, L2, L = _calib_pair(cfg)
+        f1, b1, k1, _, _, _ = _lower_costs(c1, shape_name, mesh, fsdp,
+                                           seq_shard, extra_rules)
+        f2, b2, k2, _, _, _ = _lower_costs(c2, shape_name, mesh, fsdp,
+                                           seq_shard, extra_rules)
+        ext = lambda a, b: a + (L - L1) / (L2 - L1) * (b - a)
+        corrected = {"flops_per_dev": ext(f1, f2),
+                     "bytes_per_dev": ext(b1, b2),
+                     "coll_bytes_per_dev": ext(k1, k2),
+                     "calib_layers": [L1, L2, L]}
+        flops = max(flops, corrected["flops_per_dev"])
+        bytes_acc = max(bytes_acc, corrected["bytes_per_dev"])
+        coll_total = max(coll_total, corrected["coll_bytes_per_dev"])
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill") else shape.global_batch)
+    mf = (6 if shape.kind == "train" else 2) * cfg.n_active_params * tokens
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "chips": chips, "kind": shape.kind,
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # per-device numbers (the compiled module is the per-device program)
+        # flops/bytes/coll are max(raw scanned HLO, unrolled extrapolation)
+        "flops_per_dev": flops,
+        "bytes_per_dev": bytes_acc,
+        "coll_bytes_per_dev": coll_total,
+        "scan_calibration": corrected,
+        "coll_by_type": coll_by_type,
+        "mem": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / LINK_BW,
+        },
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / chips,
+        "useful_flops_ratio": (mf / chips) / flops if flops else 0.0,
+        "n_params": cfg.n_params,
+        "n_active_params": cfg.n_active_params,
+    }
+    r = result["roofline"]
+    result["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                             key=lambda k: r[k])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "serve"])
+    ap.add_argument("--out", default="")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    res = run_one(args.arch, args.shape, args.mesh, fsdp=not args.no_fsdp,
+                  seq_shard=args.seq_shard, variant=args.variant,
+                  calibrate=not args.no_calibrate)
+    print(json.dumps(res, indent=2, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

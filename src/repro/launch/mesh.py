@@ -1,0 +1,52 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches JAX device state; ``dryrun.py`` sets the host-device XLA flag
+before calling them.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e: 16x16 = 256 chips/pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devices, axes)
+
+
+def make_serving_mesh(kv: int = 8):
+    """Serving re-axing of the SAME 256 chips: (data, kv, tp).
+
+    GQA decode wants the KV cache sharded over kv_heads; with the flat
+    16-way `model` axis and kv_heads=8 the divisibility fallback
+    replicates the cache and GSPMD re-shards + gathers it every step
+    (see EXPERIMENTS.md §Perf pair 3). Splitting the model axis into
+    (kv=8, tp=2) makes kv_heads shardable natively."""
+    shape = (16, kv, 16 // kv)
+    devices = np.asarray(jax.devices()[:256]).reshape(shape)
+    return jax.sharding.Mesh(devices, ("data", "kv", "tp"))
+
+
+SERVING_RULES = {
+    "batch": ("data",),
+    "p_embed": (),                 # no FSDP at serve time
+    "vocab": ("kv", "tp"),
+    "heads": ("kv", "tp"),
+    "kv_heads": ("kv",),
+    "qkv": (),
+    "mlp": ("kv", "tp"),
+    "experts": ("kv", "tp"),
+    "inner": ("kv", "tp"),
+}
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh over forced host devices for sharding unit tests."""
+    n = data * model
+    devices = np.asarray(jax.devices()[:n]).reshape(data, model)
+    return jax.sharding.Mesh(devices, ("data", "model"))

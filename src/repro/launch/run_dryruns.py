@@ -1,0 +1,68 @@
+"""Orchestrate the full dry-run sweep: every (arch x shape x mesh) as a
+separate subprocess (fresh XLA device state per combo), JSON per combo,
+skipping combos whose JSON already exists.
+
+  PYTHONPATH=src python -m repro.launch.run_dryruns --outdir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCH_ORDER = [
+    "llama3.2-1b", "granite-moe-1b-a400m", "seamless-m4t-medium",
+    "falcon-mamba-7b", "recurrentgemma-9b", "mistral-nemo-12b",
+    "internvl2-26b", "qwen2.5-32b", "phi3.5-moe-42b-a6.6b", "llama3-405b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--archs", default=",".join(ARCH_ORDER))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    combos = [(a, s, m)
+              for m in args.meshes.split(",")
+              for a in args.archs.split(",")
+              for s in args.shapes.split(",")]
+    for arch, shape, mesh in combos:
+        tag = f"{arch}_{shape}_{mesh}".replace(".", "_")
+        out = os.path.join(args.outdir, tag + ".json")
+        if os.path.exists(out):
+            print(f"skip {tag}")
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", out]
+        print(f"RUN {tag} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            if r.returncode != 0:
+                with open(out, "w") as f:
+                    json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                               "ok": False,
+                               "error": r.stderr[-4000:]}, f, indent=2)
+                print(f"FAIL {tag} ({time.time()-t0:.0f}s)", flush=True)
+                print(r.stderr[-1500:], flush=True)
+            else:
+                print(f"OK   {tag} ({time.time()-t0:.0f}s)", flush=True)
+        except subprocess.TimeoutExpired:
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "ok": False, "error": "timeout"}, f, indent=2)
+            print(f"TIMEOUT {tag}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

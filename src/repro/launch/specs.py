@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) combo.
+
+No device allocation: everything here is abstract (weak-type-correct,
+shardable). Decode shapes build the serve-step cache struct; the audio /
+VLM modality frontends are stubs that provide embedding-shaped inputs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import InputShape
+from ..models import registry
+
+S = jax.ShapeDtypeStruct
+
+
+def serving_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the long-context sub-quadratic variant where required."""
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe", "vlm",
+                                                    "encdec"):
+        # sliding-window decode variant (DESIGN.md long_500k policy)
+        return cfg.replace(sliding_window=cfg.long_context_window)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Abstract model inputs for the step selected by ``shape.kind``."""
+    B, L = shape.global_batch, shape.seq_len
+    tok = lambda b, s: S((b, s), jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok(B, L), "labels": tok(B, L)}
+        if cfg.family == "vlm":
+            P = cfg.vision_prefix_len
+            batch = {"tokens": tok(B, L - P), "labels": tok(B, L - P),
+                     "vision_embeds": S((B, P, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "encdec":
+            Se = min(L // cfg.enc_seq_divisor, cfg.max_enc_len)
+            batch["enc_frames"] = S((B, Se, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": tok(B, L)}
+        if cfg.family == "vlm":
+            P = cfg.vision_prefix_len
+            batch = {"tokens": tok(B, L - P),
+                     "vision_embeds": S((B, P, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "encdec":
+            Se = min(L // cfg.enc_seq_divisor, cfg.max_enc_len)
+            batch["enc_frames"] = S((B, Se, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    # decode: ONE new token against a seq_len cache
+    scfg = serving_config(cfg, shape)
+    model = registry.get_model(scfg)
+    kw = {}
+    if scfg.family == "encdec":
+        kw["enc_len"] = min(L // scfg.enc_seq_divisor, scfg.max_enc_len)
+    cache = jax.eval_shape(lambda: model.init_cache(B, L, **kw))
+    return {"cache": cache, "tokens": tok(B, 1)}
+
+
+def abstract_state(cfg: ModelConfig) -> Tuple:
+    """(params, adam mu, adam nu) shape trees."""
+    params = registry.abstract_params(cfg)
+    return params

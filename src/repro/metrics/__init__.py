@@ -1,0 +1,68 @@
+"""Evaluation metrics (paper Sec. 5.1).
+
+  - likelihood discrepancy (|L_gt - L_model| synthetic, |L_ar - L_sd| real)
+  - KS statistic via the time-rescaling theorem (synthetic)
+  - 1-Wasserstein distance on times + EMD on types (real)
+  - speedup ratio / acceptance rate accounting
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..core import thinning as thin
+
+
+def ks_statistic(z: np.ndarray) -> float:
+    """KS statistic of rescaled intervals against Exp(1) (App. A.4)."""
+    z = np.sort(np.asarray(z))
+    n = len(z)
+    if n == 0:
+        return 1.0
+    F = 1.0 - np.exp(-z)
+    ecdf_hi = np.arange(1, n + 1) / n
+    ecdf_lo = np.arange(0, n) / n
+    return float(np.maximum(np.abs(ecdf_hi - F), np.abs(F - ecdf_lo)).max())
+
+
+def ks_confidence_band(n: int, alpha: float = 0.05) -> float:
+    return 1.36 / math.sqrt(max(n, 1))
+
+
+def ks_for_samples(proc: thin.PointProcess, seqs) -> float:
+    """Pool rescaled intervals over sampled sequences, one KS statistic."""
+    zs = [thin.rescaled_intervals(proc, t, k) for t, k in seqs if len(t)]
+    if not zs:
+        return 1.0
+    return ks_statistic(np.concatenate(zs))
+
+
+def wasserstein_1d(a: np.ndarray, b: np.ndarray) -> float:
+    """1-Wasserstein between empirical distributions (sorted coupling)."""
+    a, b = np.sort(np.asarray(a, float)), np.sort(np.asarray(b, float))
+    n = max(len(a), len(b))
+    if len(a) == 0 or len(b) == 0:
+        return float("nan")
+    q = (np.arange(n) + 0.5) / n
+    qa = np.quantile(a, q)
+    qb = np.quantile(b, q)
+    return float(np.abs(qa - qb).mean())
+
+
+def type_emd(a: np.ndarray, b: np.ndarray, K: int) -> float:
+    """Earth-mover distance between type histograms on the line 0..K-1
+    (equals the L1 distance of CDFs for 1-D ground metric |i-j|)."""
+    ha = np.bincount(np.asarray(a, int), minlength=K) / max(len(a), 1)
+    hb = np.bincount(np.asarray(b, int), minlength=K) / max(len(b), 1)
+    return float(np.abs(np.cumsum(ha - hb)).sum())
+
+
+def mean_gt_loglik(proc: thin.PointProcess, seqs, t_end: float) -> float:
+    lls = [thin.ground_truth_loglik(proc, t, k, t_end) for t, k in seqs]
+    return float(np.mean(lls)) if lls else float("nan")
+
+
+def speedup(t_ar: float, t_sd: float) -> float:
+    return t_ar / max(t_sd, 1e-12)

@@ -1,0 +1,2 @@
+from . import common, encdec, mamba, registry, rglru, tpp, transformer
+from .registry import ModelApi, abstract_params, get_model

@@ -1,0 +1,226 @@
+"""Shared building blocks for the model zoo (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; each family module also
+exposes a parallel tree of logical-axis tuples consumed by
+``repro.distributed.sharding.Rules``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict
+Axes = Dict
+
+
+def get_dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, shape, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_layer_init(init_one, rng, num_layers):
+    """vmap an init fn over layer index -> stacked [L, ...] params."""
+    rngs = jax.random.split(rng, num_layers)
+    return jax.vmap(init_one)(rngs)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim/2]
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, Dh]; positions: [B, S] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,Dh/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+def swiglu_init(rng, d_model, d_ff, dtype):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(r1, (d_model, d_ff), d_model, dtype),
+        "w_up": dense_init(r2, (d_model, d_ff), d_model, dtype),
+        "w_down": dense_init(r3, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def swiglu_axes():
+    return {"w_gate": ("p_embed", "mlp"), "w_up": ("p_embed", "mlp"),
+            "w_down": ("mlp", "p_embed")}
+
+
+# --- Mixture of Experts (capacity-based top-k dispatch, expert-parallel) ---
+
+def moe_ffn(cfg, p, x):
+    """x: [B, S, D] -> (y, aux_loss).
+
+    Classic Mesh-TF / Switch *grouped* capacity dispatch: tokens are
+    grouped by batch row so the dispatch tensor is [B, S, E, C] with
+    C = ceil(S*K*cf/E) — O(T * S * K) instead of O(T^2). One-hot
+    dispatch/combine einsums keep the expert dim shardable over the
+    `model` mesh axis (expert parallelism); groups ride the `data` axis.
+    Tokens above per-group capacity are dropped (residual passes through).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    Gs = min(getattr(cfg, "moe_group_size", 256), B * S)
+    T = B * S
+    pad = (-T) % Gs
+    xt = x.reshape(T, D)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    x = xt.reshape((T + pad) // Gs, Gs, D)                        # groups
+    Gm = x.shape[0]
+    logits = jnp.einsum("gsd,de->gse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # [Gm,Gs,E]
+    gate_vals, gate_idx = lax.top_k(probs, K)                     # [Gm,Gs,K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(math.ceil(Gs * K * cfg.capacity_factor / E)))
+    cap = min(cap, Gs * K)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)       # [Gm,Gs,K,E]
+    # queue position of each (s, k) slot within its expert, k-major then s
+    flat = onehot.transpose(0, 2, 1, 3).reshape(Gm, K * Gs, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                         # [Gm,K*Gs,E]
+    pos = pos.reshape(Gm, K, Gs, E).transpose(0, 2, 1, 3)         # [Gm,Gs,K,E]
+    keep = (pos < cap) & (onehot > 0)
+    pos = jnp.where(keep, pos, 0).astype(jnp.int32)
+    cap_oh = (jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+              * keep[..., None])                                  # [Gm,Gs,K,E,C]
+    dispatch = cap_oh.sum(axis=2)                                 # [Gm,Gs,E,C]
+    combine = jnp.einsum("gsk,gskec->gsec",
+                         gate_vals.astype(jnp.float32), cap_oh)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), x)
+    g = jnp.einsum("egcd,edf->egcf", xe, p["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"])
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+    # Switch-style load-balance loss
+    density = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))           # top-1 fraction
+    router_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * router_mean)
+    y = y.reshape(Gm * Gs, D)[:T]
+    return y.reshape(B, S, D), aux
+
+
+def moe_init(rng, cfg, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    return {
+        "router": dense_init(r0, (D, E), D, jnp.float32),
+        "w_gate": dense_init(r1, (E, D, F), D, dtype),
+        "w_up": dense_init(r2, (E, D, F), D, dtype),
+        "w_down": dense_init(r3, (E, F, D), F, dtype),
+    }
+
+
+def moe_axes():
+    return {"router": ("p_embed", "experts"),
+            "w_gate": ("experts", "p_embed", "mlp"),
+            "w_up": ("experts", "p_embed", "mlp"),
+            "w_down": ("experts", "mlp", "p_embed")}
+
+
+# ---------------------------------------------------------------------------
+# attention params
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg, dtype):
+    D, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    r = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(r[0], (D, H, Dh), D, dtype),
+        "wk": dense_init(r[1], (D, KV, Dh), D, dtype),
+        "wv": dense_init(r[2], (D, KV, Dh), D, dtype),
+        "wo": dense_init(r[3], (H, Dh, D), H * Dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dtype)
+        p["bk"] = jnp.zeros((KV, Dh), dtype)
+        p["bv"] = jnp.zeros((KV, Dh), dtype)
+    return p
+
+
+def attn_axes(cfg):
+    a = {"wq": ("p_embed", "heads", "qkv"), "wk": ("p_embed", "kv_heads", "qkv"),
+         "wv": ("p_embed", "kv_heads", "qkv"), "wo": ("heads", "qkv", "p_embed")}
+    if cfg.qkv_bias:
+        a.update({"bq": ("heads", "qkv"), "bk": ("kv_heads", "qkv"),
+                  "bv": ("kv_heads", "qkv")})
+    return a
+
+
+def attn_qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_out(p, o):
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])

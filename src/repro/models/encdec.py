@@ -1,0 +1,259 @@
+"""Encoder-decoder transformer (seamless-m4t-medium family).
+
+The audio frontend (mel-spectrogram + conv feature extractor) is a stub:
+``input_specs`` provides precomputed frame embeddings [B, Se, D]. We
+implement the transformer encoder over those frames and the full
+autoregressive text decoder (causal self-attention with KV cache +
+cross-attention with a static encoder-side cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ops
+from ..kernels.ref import INVALID_POS
+from . import common as cm
+
+
+def _ckpt(cfg, fn):
+    """jax.checkpoint with the configured policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _enc_layers(cfg):
+    return cfg.enc_layers or cfg.num_layers
+
+
+def _dec_layers(cfg):
+    return cfg.dec_layers or cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    dtype = cm.get_dtype(cfg.param_dtype)
+    r_emb, r_enc, r_dec, r_head = jax.random.split(rng, 4)
+
+    def enc_layer(r):
+        ra, rm = jax.random.split(r)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "attn": cm.attn_init(ra, cfg, dtype),
+                "mlp": cm.swiglu_init(rm, cfg.d_model, cfg.d_ff, dtype)}
+
+    def dec_layer(r):
+        ra, rx, rm = jax.random.split(r, 3)
+        return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+                "lnx": jnp.zeros((cfg.d_model,), dtype),
+                "ln2": jnp.zeros((cfg.d_model,), dtype),
+                "self_attn": cm.attn_init(ra, cfg, dtype),
+                "cross_attn": cm.attn_init(rx, cfg, dtype),
+                "mlp": cm.swiglu_init(rm, cfg.d_model, cfg.d_ff, dtype)}
+
+    return {
+        "embed": cm.embed_init(r_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "enc": cm.stack_layer_init(enc_layer, r_enc, _enc_layers(cfg)),
+        "dec": cm.stack_layer_init(dec_layer, r_dec, _dec_layers(cfg)),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(r_head, (cfg.d_model, cfg.vocab_size),
+                                 cfg.d_model, dtype),
+    }
+
+
+def logical_axes(cfg):
+    attn = {k: ("layers",) + v for k, v in cm.attn_axes(cfg).items()}
+    mlp = {k: ("layers",) + v for k, v in cm.swiglu_axes().items()}
+    enc = {"ln1": ("layers", "p_embed"), "ln2": ("layers", "p_embed"),
+           "attn": attn, "mlp": mlp}
+    dec = {"ln1": ("layers", "p_embed"), "lnx": ("layers", "p_embed"),
+           "ln2": ("layers", "p_embed"), "self_attn": attn,
+           "cross_attn": attn, "mlp": mlp}
+    return {"embed": ("vocab", "embed"), "enc": enc, "dec": dec,
+            "enc_norm": ("p_embed",), "final_norm": ("p_embed",),
+            "lm_head": ("embed", "vocab")}
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg, params, frames):
+    """frames: [B, Se, D] stubbed frontend embeddings -> [B, Se, D]."""
+    dtype = cm.get_dtype(cfg.dtype)
+    x = frames.astype(dtype)
+    B, Se, _ = x.shape
+    # bidirectional: all queries at the max position so kp <= qp always holds
+    q_pos = jnp.full((B, Se), Se - 1, jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    rope_pos = kv_pos
+
+    def body(x, lp):
+        xn = cm.rms_norm(x, lp["ln1"])
+        q, k, v = cm.attn_qkv(lp["attn"], xn, cfg, rope_pos)
+        if Se >= 2048:
+            o = ops.flash_attention(q, k, v, q_pos, kv_pos,
+                                    use_pallas=cfg.use_pallas)
+        else:
+            o = ops.naive_attention(q, k, v, q_pos, kv_pos)
+        x = x + cm.attn_out(lp["attn"], o)
+        x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+        return x, None
+
+    body = _ckpt(cfg, body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, _ = lax.scan(body, x, params["enc"])
+    else:
+        for i in range(_enc_layers(cfg)):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params["enc"]))
+    return cm.rms_norm(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, enc_len: int = 0):
+    dtype = cm.get_dtype(cfg.dtype)
+    Ld, KV, Dh = _dec_layers(cfg), cfg.num_kv_heads, cfg.head_dim
+    if cfg.sliding_window > 0:
+        max_len = min(max_len, cfg.sliding_window)
+    enc_len = enc_len or cfg.max_enc_len
+    return {
+        "k": jnp.zeros((Ld, batch_size, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((Ld, batch_size, max_len, KV, Dh), dtype),
+        "pos": jnp.full((batch_size, max_len), INVALID_POS, jnp.int32),
+        "cross_k": jnp.zeros((Ld, batch_size, enc_len, KV, Dh), dtype),
+        "cross_v": jnp.zeros((Ld, batch_size, enc_len, KV, Dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    kv = ("layers", "batch", "cache_seq", "kv_heads", "qkv")
+    return {"k": kv, "v": kv, "pos": ("batch", "cache_seq"),
+            "cross_k": kv, "cross_v": kv, "len": ()}
+
+
+def build_cross_cache(cfg, params, enc_out, cache):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    Se = enc_out.shape[1]
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32),
+                           enc_out.shape[:2])
+
+    def body(_, lp):
+        k = jnp.einsum("bsd,dhe->bshe", enc_out, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", enc_out, lp["cross_attn"]["wv"])
+        return None, (k, v)
+
+    if cfg.scan_layers:
+        _, (ks, vs) = lax.scan(body, None, params["dec"])
+    else:
+        outs = [body(None, jax.tree.map(lambda a: a[i], params["dec"]))[1]
+                for i in range(_dec_layers(cfg))]
+        ks = jnp.stack([o[0] for o in outs])
+        vs = jnp.stack([o[1] for o in outs])
+    cache = dict(cache)
+    cache["cross_k"] = ks.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = vs.astype(cache["cross_v"].dtype)
+    return cache
+
+
+def extend(cfg, params, cache, tokens, vision_embeds=None):
+    """Decoder step(s): causal self-attn over cache + cross-attn."""
+    dtype = cm.get_dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    B, c, _ = x.shape
+    start = cache["len"]
+    Smax = cache["k"].shape[2]
+    idx = start + jnp.arange(c, dtype=jnp.int32)
+    slots = idx % Smax
+    w0 = max(0, c - Smax)
+    positions = jnp.broadcast_to(idx, (B, c))
+    pc = cache["pos"]
+    pos_new = pc.at[:, slots[w0:]].set(positions[:, w0:])
+    ring = cfg.sliding_window > 0
+    Se = cache["cross_k"].shape[2]
+    cross_qpos = jnp.full((B, c), Se - 1, jnp.int32)
+    cross_kpos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def scan_body(x, layer_in):
+        lp, kc, vc, xk, xv = layer_in
+        xn = cm.rms_norm(x, lp["ln1"])
+        q, k, v = cm.attn_qkv(lp["self_attn"], xn, cfg, positions)
+        if ring:
+            ka = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+            va = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+            pa = jnp.concatenate([pc, positions], axis=1)
+        kc = kc.at[:, slots[w0:]].set(k[:, w0:].astype(kc.dtype))
+        vc = vc.at[:, slots[w0:]].set(v[:, w0:].astype(vc.dtype))
+        if not ring:
+            ka, va, pa = kc, vc, pos_new
+        if c >= 2048:
+            o = ops.flash_attention(q, ka, va, positions, pa,
+                                    window=cfg.sliding_window,
+                                    use_pallas=cfg.use_pallas)
+        else:
+            o = ops.naive_attention(q, ka, va, positions, pa,
+                                    window=cfg.sliding_window)
+        x = x + cm.attn_out(lp["self_attn"], o)
+        # cross attention (bidirectional over encoder frames)
+        xn = cm.rms_norm(x, lp["lnx"])
+        qx = jnp.einsum("bsd,dhe->bshe", xn, lp["cross_attn"]["wq"])
+        ox = ops.naive_attention(qx, xk, xv, cross_qpos, cross_kpos)
+        x = x + cm.attn_out(lp["cross_attn"], ox)
+        x = x + cm.swiglu(lp["mlp"], cm.rms_norm(x, lp["ln2"]))
+        return x, (kc, vc)
+
+    body = _ckpt(cfg, scan_body) if cfg.remat else scan_body
+    if cfg.scan_layers:
+        x, (k_new, v_new) = lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+    else:
+        ks, vs = [], []
+        for i in range(_dec_layers(cfg)):
+            blk = jax.tree.map(lambda a: a[i],
+                               (params["dec"], cache["k"], cache["v"],
+                                cache["cross_k"], cache["cross_v"]))
+            x, (kc, vc) = body(x, blk)
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    new_cache = dict(cache)
+    new_cache.update({"k": k_new, "v": v_new, "pos": pos_new,
+                      "len": start + c})
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Encode frames, build the cross cache, then decoder-prefill tokens."""
+    B = batch["tokens"].shape[0]
+    enc_out = encode(cfg, params, batch["enc_frames"])
+    cache = init_cache(cfg, B, max_len, enc_len=enc_out.shape[1])
+    cache = build_cross_cache(cfg, params, enc_out, cache)
+    return extend(cfg, params, cache, batch["tokens"])
+
+
+def forward(cfg, params, batch, seq_rule=None):
+    logits, _ = prefill(cfg, params, batch, max_len=batch["tokens"].shape[1])
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, batch, seq_rule=None):
+    logits, _ = forward(cfg, params, batch)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

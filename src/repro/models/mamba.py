@@ -1,0 +1,247 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b family).
+
+TPU adaptation: the selective scan is executed with
+``lax.associative_scan`` (parallel prefix) over the sequence axis instead
+of a sequential CUDA kernel — log-depth on the MXU/VPU, shardable over
+batch/inner. Decode keeps an O(d_inner x N) recurrent state + a
+(conv_width-1) convolution tail; chunked ``extend`` supports speculative
+verification (the state checkpoint is the rollback mechanism).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import common as cm
+
+
+def _ckpt(cfg, fn):
+    """jax.checkpoint with the configured policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    dtype = cm.get_dtype(cfg.param_dtype)
+    D, di, N, R, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.conv_width)
+    r_emb, r_layers, r_head = jax.random.split(rng, 3)
+
+    def one_layer(r):
+        rs = jax.random.split(r, 5)
+        # S4D-real initialization for A
+        A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+        r_u = jax.random.fold_in(rs[0], 0)
+        r_z = jax.random.fold_in(rs[0], 1)
+        return {
+            "ln": jnp.zeros((D,), dtype),
+            # kept as TWO matrices: a fused [D, 2*di] projection would need
+            # a split whose halves straddle `model`-axis shards, costing a
+            # collective-permute per layer (EXPERIMENTS.md §Perf pair 1)
+            "in_u": cm.dense_init(r_u, (D, di), D, dtype),
+            "in_z": cm.dense_init(r_z, (D, di), D, dtype),
+            "conv_w": cm.dense_init(rs[1], (di, W), W, dtype),
+            "conv_b": jnp.zeros((di,), dtype),
+            "x_proj": cm.dense_init(rs[2], (di, R + 2 * N), di, dtype),
+            "dt_proj": cm.dense_init(rs[3], (R, di), R, dtype),
+            "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+            "A_log": jnp.log(A),
+            "D": jnp.ones((di,), dtype),
+            "out_proj": cm.dense_init(rs[4], (di, D), di, dtype),
+        }
+
+    return {
+        "embed": cm.embed_init(r_emb, (cfg.vocab_size, D), dtype),
+        "layers": cm.stack_layer_init(one_layer, r_layers, cfg.num_layers),
+        "final_norm": jnp.zeros((D,), dtype),
+        "lm_head": cm.dense_init(r_head, (D, cfg.vocab_size), D, dtype),
+    }
+
+
+def logical_axes(cfg):
+    layer = {
+        "ln": ("layers", "p_embed"),
+        "in_u": ("layers", "p_embed", "inner"),
+        "in_z": ("layers", "p_embed", "inner"),
+        "conv_w": ("layers", "inner", None),
+        "conv_b": ("layers", "inner"),
+        "x_proj": ("layers", "inner", None),
+        "dt_proj": ("layers", None, "inner"),
+        "dt_bias": ("layers", "inner"),
+        "A_log": ("layers", "inner", "state"),
+        "D": ("layers", "inner"),
+        "out_proj": ("layers", "inner", "p_embed"),
+    }
+    return {"embed": ("vocab", "embed"), "layers": layer,
+            "final_norm": ("p_embed",), "lm_head": ("embed", "vocab")}
+
+
+# ---------------------------------------------------------------------------
+# selective scan
+# ---------------------------------------------------------------------------
+
+def _ssm_scan(dA, dBu, h0):
+    """h_t = dA_t * h_{t-1} + dBu_t, parallel prefix over axis=1 (S).
+
+    dA, dBu: [B, S, di, N]; h0: [B, di, N]. Returns hs [B, S, di, N].
+    """
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_all, b_all = lax.associative_scan(combine, (dA, dBu), axis=1)
+    # fold in the initial state: h_t = b_t + (prod a)_t * h0
+    return b_all + a_all * h0[:, None]
+
+
+def _ssm_inner(cfg, p, u, h0):
+    """Selective-scan core on a (possibly chunked) span.
+
+    u: [B, c, di] post-conv post-silu (f32). Returns (y [B,c,di] f32,
+    h_last [B,di,N] f32)."""
+    R, N = cfg.dt_rank, cfg.ssm_state
+    f32 = jnp.float32
+    proj = jnp.einsum("bci,ie->bce", u.astype(cm.get_dtype(cfg.dtype)),
+                      p["x_proj"])
+    dt_r, Bc, Cc = jnp.split(proj.astype(f32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bcr,ri->bci", dt_r, p["dt_proj"].astype(f32))
+        + p["dt_bias"].astype(f32))                        # [B,c,di]
+    A = -jnp.exp(p["A_log"].astype(f32))                   # [di, N]
+    dA = jnp.exp(dt[..., None] * A)                        # [B,c,di,N]
+    dBu = (dt * u)[..., None] * Bc[:, :, None, :]          # [B,c,di,N]
+    hs = _ssm_scan(dA, dBu, h0.astype(f32))
+    y = jnp.einsum("bcin,bcn->bci", hs, Cc) + p["D"].astype(f32) * u
+    return y, hs[:, -1]
+
+
+def _mamba_mix(cfg, p, x, conv_tail, h0):
+    """Core mixer on a chunk. x: [B, c, D] (pre-norm applied by caller).
+
+    conv_tail: [B, W-1, di] previous inputs; h0: [B, di, N].
+    Returns (y [B,c,D], new_conv_tail, h_last).
+
+    When ``cfg.ssm_chunk`` divides c, the selective scan runs two-level:
+    a sequential ``lax.scan`` over chunks (state carried, chunk body
+    rematerialized) with the parallel prefix + output contraction fused
+    inside each chunk — the [B,S,di,N] discretized-state tensors never
+    exist at full sequence length (EXPERIMENTS.md §Perf pair 1).
+    """
+    B, c, D = x.shape
+    di, N, R, W = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.conv_width
+    f32 = jnp.float32
+
+    u = jnp.einsum("bsd,de->bse", x, p["in_u"])           # [B,c,di]
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    # causal depthwise conv with carried tail
+    u_ext = jnp.concatenate([conv_tail.astype(u.dtype), u], axis=1)
+    idx = jnp.arange(c)[:, None] + jnp.arange(W)[None, :]  # [c, W]
+    windows = u_ext[:, idx]                                # [B, c, W, di]
+    u = jnp.einsum("bcwi,iw->bci", windows, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(u.astype(f32))
+    new_tail = u_ext[:, -(W - 1):] if W > 1 else u_ext[:, :0]
+
+    C = cfg.ssm_chunk
+    if C and c > C and c % C == 0:
+        nch = c // C
+        u_ch = u.reshape(B, nch, C, di).transpose(1, 0, 2, 3)
+
+        def chunk_body(h, u_c):
+            y_c, h_last = _ssm_inner(cfg, p, u_c, h)
+            return h_last, y_c.astype(x.dtype)
+
+        body = _ckpt(cfg, chunk_body) if cfg.remat else chunk_body
+        h_last, y_ch = lax.scan(body, h0.astype(f32), u_ch)
+        y = y_ch.transpose(1, 0, 2, 3).reshape(B, c, di).astype(f32)
+    else:
+        y, h_last = _ssm_inner(cfg, p, u, h0)
+    y = y * jax.nn.silu(z.astype(f32))
+    out = jnp.einsum("bci,id->bcd", y.astype(x.dtype), p["out_proj"])
+    return out, new_tail.astype(x.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _run(cfg, params, tokens, cache):
+    dtype = cm.get_dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    B, c, _ = x.shape
+
+    def scan_body(x, layer_in):
+        lp, tail, h0 = layer_in
+        y, new_tail, h_last = _mamba_mix(cfg, lp, cm.rms_norm(x, lp["ln"]),
+                                         tail, h0)
+        return x + y, (new_tail, h_last)
+
+    body = _ckpt(cfg, scan_body) if cfg.remat else scan_body
+    if cfg.scan_layers:
+        x, (tails, hs) = lax.scan(body, x,
+                                  (params["layers"], cache["conv"],
+                                   cache["ssm"]))
+    else:
+        tails, hs = [], []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (t, h) = body(x, (lp, cache["conv"][i], cache["ssm"][i]))
+            tails.append(t)
+            hs.append(h)
+        tails = jnp.stack(tails)
+        hs = jnp.stack(hs)
+    new_cache = {"conv": tails, "ssm": hs, "len": cache["len"] + c}
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    return logits, new_cache
+
+
+def init_cache(cfg, batch_size: int, max_len: int = 0):
+    """SSM cache is O(1) in sequence length."""
+    dtype = cm.get_dtype(cfg.dtype)
+    L, di, N, W = cfg.num_layers, cfg.d_inner, cfg.ssm_state, cfg.conv_width
+    return {
+        "conv": jnp.zeros((L, batch_size, W - 1, di), dtype),
+        "ssm": jnp.zeros((L, batch_size, di, N), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    return {"conv": ("layers", "batch", None, "inner"),
+            "ssm": ("layers", "batch", "inner", "state"),
+            "len": ()}
+
+
+def forward(cfg, params, batch, seq_rule=None):
+    B = batch["tokens"].shape[0]
+    logits, _ = _run(cfg, params, batch["tokens"], init_cache(cfg, B))
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, batch, seq_rule=None):
+    logits, _ = forward(cfg, params, batch)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def extend(cfg, params, cache, tokens, vision_embeds=None):
+    return _run(cfg, params, tokens, cache)
+
+
+def prefill(cfg, params, batch, max_len: int = 0):
+    B = batch["tokens"].shape[0]
+    return _run(cfg, params, batch["tokens"], init_cache(cfg, B))

@@ -1,0 +1,55 @@
+"""Family registry: maps ``cfg.family`` to the implementing module and
+exposes a uniform functional API used by the trainer, server, and dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, mamba, rglru, transformer
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba,
+    "hybrid": rglru,
+    "encdec": encdec,
+}
+
+
+class ModelApi(NamedTuple):
+    init_params: Any
+    logical_axes: Any
+    forward: Any
+    loss_fn: Any
+    init_cache: Any
+    cache_axes: Any
+    prefill: Any
+    extend: Any
+
+
+def get_model(cfg) -> ModelApi:
+    mod = _FAMILIES[cfg.family]
+    return ModelApi(
+        init_params=lambda rng: mod.init_params(cfg, rng),
+        logical_axes=lambda: mod.logical_axes(cfg),
+        forward=lambda params, batch, **kw: mod.forward(cfg, params, batch, **kw),
+        loss_fn=lambda params, batch, **kw: mod.loss_fn(cfg, params, batch, **kw),
+        init_cache=lambda batch_size, max_len, **kw: mod.init_cache(
+            cfg, batch_size, max_len, **kw),
+        cache_axes=lambda: mod.cache_axes(cfg),
+        prefill=lambda params, batch, max_len: mod.prefill(cfg, params, batch,
+                                                           max_len),
+        extend=lambda params, cache, tokens, **kw: mod.extend(
+            cfg, params, cache, tokens, **kw),
+    )
+
+
+def abstract_params(cfg, rng=None):
+    """Shape/dtype tree of the params without allocating (for dry-run)."""
+    mod = _FAMILIES[cfg.family]
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: mod.init_params(cfg, r), rng)

@@ -1,0 +1,402 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks + local
+sliding-window MQA attention in a (rec, rec, attn) pattern.
+
+TPU adaptation: the RG-LRU linear recurrence runs as a parallel prefix
+(``lax.associative_scan``), the local attention uses the shared ring-buffer
+KV cache (window-bounded, O(W) decode). Layers are scanned in super-blocks
+of the repeating pattern (MaxText-style stacked params); the remainder of
+``num_layers`` modulo the pattern is unrolled as a tail.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ops
+from ..kernels.ref import INVALID_POS
+from . import common as cm
+
+
+def _ckpt(cfg, fn):
+    """jax.checkpoint with the configured policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+FINAL_SOFTCAP = 30.0
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _rec_init(rng, cfg, dtype):
+    D, w, W = cfg.d_model, cfg.lru_width, cfg.conv_width
+    r = jax.random.split(rng, 6)
+    # Lambda init so that a = exp(-c*softplus(L)*r) has decay in (.9, .999)
+    lam = jax.random.uniform(r[5], (w,), jnp.float32, 0.001, 0.1)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / LRU_C) - 1.0)  # softplus^-1
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "in_x": cm.dense_init(r[0], (D, w), D, dtype),
+        "in_gate": cm.dense_init(r[1], (D, w), D, dtype),
+        "conv_w": cm.dense_init(r[2], (w, W), W, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": cm.dense_init(r[3], (w, w), w, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": cm.dense_init(r[4], (w, w), w, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": cm.dense_init(jax.random.fold_in(rng, 7), (w, D), w, dtype),
+    }
+
+
+def _rec_axes():
+    return {"ln": ("p_embed",), "in_x": ("p_embed", "inner"),
+            "in_gate": ("p_embed", "inner"), "conv_w": ("inner", None),
+            "conv_b": ("inner",), "w_a": ("inner", "inner"),
+            "b_a": ("inner",), "w_i": ("inner", "inner"), "b_i": ("inner",),
+            "lam": ("inner",), "out": ("inner", "p_embed")}
+
+
+def _mlp_init(rng, cfg, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            **cm.swiglu_init(rng, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _mlp_axes():
+    return {"ln": ("p_embed",), **cm.swiglu_axes()}
+
+
+def _attn_init(rng, cfg, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            **cm.attn_init(rng, cfg, dtype)}
+
+
+def _attn_axes(cfg):
+    return {"ln": ("p_embed",), **cm.attn_axes(cfg)}
+
+
+def _pattern(cfg):
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_super = cfg.num_layers // len(pat)
+    tail = tuple(pat[i] for i in range(cfg.num_layers - n_super * len(pat)))
+    return pat, n_super, tail
+
+
+def init_params(cfg, rng):
+    dtype = cm.get_dtype(cfg.param_dtype)
+    pat, n_super, tail = _pattern(cfg)
+    r_emb, r_sup, r_tail, r_head = jax.random.split(rng, 4)
+
+    def one_super(r):
+        out = {}
+        for j, kind in enumerate(pat):
+            rj = jax.random.fold_in(r, j)
+            r1, r2 = jax.random.split(rj)
+            out[f"mix{j}"] = (_rec_init(r1, cfg, dtype) if kind == "rec"
+                              else _attn_init(r1, cfg, dtype))
+            out[f"mlp{j}"] = _mlp_init(r2, cfg, dtype)
+        return out
+
+    params = {
+        "embed": cm.embed_init(r_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "super": cm.stack_layer_init(one_super, r_sup, n_super),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(r_head, (cfg.d_model, cfg.vocab_size),
+                                 cfg.d_model, dtype),
+    }
+    for j, kind in enumerate(tail):
+        rj = jax.random.fold_in(r_tail, j)
+        r1, r2 = jax.random.split(rj)
+        params[f"tail_mix{j}"] = (_rec_init(r1, cfg, dtype) if kind == "rec"
+                                  else _attn_init(r1, cfg, dtype))
+        params[f"tail_mlp{j}"] = _mlp_init(r2, cfg, dtype)
+    return params
+
+
+def logical_axes(cfg):
+    pat, n_super, tail = _pattern(cfg)
+    sup = {}
+    for j, kind in enumerate(pat):
+        mix = _rec_axes() if kind == "rec" else _attn_axes(cfg)
+        sup[f"mix{j}"] = {k: ("layers",) + v for k, v in mix.items()}
+        sup[f"mlp{j}"] = {k: ("layers",) + v for k, v in _mlp_axes().items()}
+    axes = {"embed": ("vocab", "embed"), "super": sup,
+            "final_norm": ("p_embed",), "lm_head": ("embed", "vocab")}
+    for j, kind in enumerate(tail):
+        axes[f"tail_mix{j}"] = _rec_axes() if kind == "rec" else _attn_axes(cfg)
+        axes[f"tail_mlp{j}"] = _mlp_axes()
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent mixer
+# ---------------------------------------------------------------------------
+
+def _rglru_mix(cfg, p, x, conv_tail, h0):
+    """x: [B,c,D] normed input. Returns (y, new_conv_tail, h_last)."""
+    B, c, _ = x.shape
+    w, W = cfg.lru_width, cfg.conv_width
+    f32 = jnp.float32
+    u = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"])
+    # causal depthwise conv with carried tail
+    u_ext = jnp.concatenate([conv_tail.astype(u.dtype), u], axis=1)
+    idx = jnp.arange(c)[:, None] + jnp.arange(W)[None, :]
+    u_conv = jnp.einsum("bcwi,iw->bci", u_ext[:, idx].transpose(0, 1, 2, 3),
+                        p["conv_w"]) + p["conv_b"]
+    new_tail = u_ext[:, -(W - 1):] if W > 1 else u_ext[:, :0]
+
+    r = jax.nn.sigmoid(jnp.einsum("bci,ij->bcj", u_conv, p["w_a"]).astype(f32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bci,ij->bcj", u_conv, p["w_i"]).astype(f32)
+                       + p["b_i"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # [B,c,w]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u_conv.astype(f32)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    a_all, b_all = lax.associative_scan(combine, (a, gated), axis=1)
+    hs = b_all + a_all * h0.astype(f32)[:, None]
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate.astype(f32)).astype(x.dtype)
+    out = jnp.einsum("bcw,wd->bcd", y, p["out"])
+    return out, new_tail.astype(x.dtype), hs[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# local attention mixer (ring cache)
+# ---------------------------------------------------------------------------
+
+def _attn_mix(cfg, p, x, positions, kc, vc, pc):
+    """x normed. kc/vc: [B,W,KV,Dh] ring cache (or None for fresh chunks)."""
+    q, k, v = cm.attn_qkv(p, x, cfg, positions)
+    window = cfg.sliding_window
+    if kc is None:
+        o = (ops.flash_attention(q, k, v, positions, positions, window=window,
+                                 softcap=cfg.logit_softcap,
+                                 use_pallas=cfg.use_pallas)
+             if x.shape[1] >= 2048 else
+             ops.naive_attention(q, k, v, positions, positions, window=window,
+                                 softcap=cfg.logit_softcap))
+        return cm.attn_out(p, o), k, v
+    ka = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+    va = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+    pa = jnp.concatenate([pc, positions], axis=1)
+    o = (ops.flash_attention(q, ka, va, positions, pa, window=window,
+                             softcap=cfg.logit_softcap,
+                             use_pallas=cfg.use_pallas)
+         if x.shape[1] >= 2048 else
+         ops.naive_attention(q, ka, va, positions, pa, window=window,
+                             softcap=cfg.logit_softcap))
+    return cm.attn_out(p, o), k, v
+
+
+def _write_ring(kc, k, slots, w0):
+    return kc.at[:, slots[w0:]].set(k[:, w0:].astype(kc.dtype))
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int = 0):
+    dtype = cm.get_dtype(cfg.dtype)
+    pat, n_super, tail = _pattern(cfg)
+    W = cfg.sliding_window or 2048
+    wv, cw = cfg.lru_width, cfg.conv_width
+    KV, Dh = cfg.num_kv_heads, cfg.head_dim
+    n_rec_per = sum(1 for k in pat if k == "rec")
+    cache = {
+        "attn_k": jnp.zeros((n_super, batch_size, W, KV, Dh), dtype),
+        "attn_v": jnp.zeros((n_super, batch_size, W, KV, Dh), dtype),
+        "pos": jnp.full((batch_size, W), INVALID_POS, jnp.int32),
+        "rec_conv": jnp.zeros((n_super, n_rec_per, batch_size, cw - 1, wv),
+                              dtype),
+        "rec_h": jnp.zeros((n_super, n_rec_per, batch_size, wv), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    n_rec_tail = sum(1 for k in tail if k == "rec")
+    if n_rec_tail:
+        cache["tail_conv"] = jnp.zeros((n_rec_tail, batch_size, cw - 1, wv),
+                                       dtype)
+        cache["tail_h"] = jnp.zeros((n_rec_tail, batch_size, wv), jnp.float32)
+    n_attn_tail = len(tail) - n_rec_tail
+    if n_attn_tail:
+        cache["tail_attn_k"] = jnp.zeros((n_attn_tail, batch_size, W, KV, Dh),
+                                         dtype)
+        cache["tail_attn_v"] = jnp.zeros((n_attn_tail, batch_size, W, KV, Dh),
+                                         dtype)
+    return cache
+
+
+def cache_axes(cfg):
+    pat, n_super, tail = _pattern(cfg)
+    axes = {"attn_k": ("layers", "batch", "cache_seq", "kv_heads", "qkv"),
+            "attn_v": ("layers", "batch", "cache_seq", "kv_heads", "qkv"),
+            "pos": ("batch", "cache_seq"),
+            "rec_conv": ("layers", None, "batch", None, "inner"),
+            "rec_h": ("layers", None, "batch", "inner"),
+            "len": ()}
+    if any(k == "rec" for k in tail):
+        axes["tail_conv"] = (None, "batch", None, "inner")
+        axes["tail_h"] = (None, "batch", "inner")
+    if any(k == "attn" for k in tail):
+        axes["tail_attn_k"] = (None, "batch", "cache_seq", "kv_heads", "qkv")
+        axes["tail_attn_v"] = (None, "batch", "cache_seq", "kv_heads", "qkv")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _block(cfg, mix_p, mlp_p, kind, x, positions, attn_cache, rec_cache):
+    """One (mixer + mlp) residual pair. Returns (x, new_attn, new_rec)."""
+    xn = cm.rms_norm(x, mix_p["ln"])
+    new_attn = new_rec = None
+    if kind == "rec":
+        tail, h0 = rec_cache
+        y, new_tail, h_last = _rglru_mix(cfg, mix_p, xn, tail, h0)
+        new_rec = (new_tail, h_last)
+    else:
+        kc, vc, pc = attn_cache
+        y, k, v = _attn_mix(cfg, mix_p, xn, positions, kc, vc, pc)
+        new_attn = (k, v)
+    x = x + y
+    x = x + cm.swiglu(mlp_p, cm.rms_norm(x, mlp_p["ln"]))
+    return x, new_attn, new_rec
+
+
+def _run(cfg, params, tokens, cache):
+    dtype = cm.get_dtype(cfg.dtype)
+    pat, n_super, tail = _pattern(cfg)
+    x = params["embed"][tokens].astype(dtype)
+    B, c, _ = x.shape
+    fresh = cache is None
+    if fresh:
+        cache = init_cache(cfg, B)
+        W = cache["attn_k"].shape[2]
+        start = jnp.zeros((), jnp.int32)
+    else:
+        W = cache["attn_k"].shape[2]
+        start = cache["len"]
+    idx = start + jnp.arange(c, dtype=jnp.int32)
+    slots = idx % W
+    w0 = max(0, c - W)
+    positions = jnp.broadcast_to(idx, (B, c))
+    pc = cache["pos"]
+    pos_new = pc.at[:, slots[w0:]].set(positions[:, w0:])
+
+    rec_ids = [j for j, k in enumerate(pat) if k == "rec"]
+
+    def super_body(x, layer_in):
+        lp, kc, vc, rconv, rh = layer_in
+        new_k = new_v = None
+        new_conv, new_h = [], []
+        ri = 0
+        for j, kind in enumerate(pat):
+            attn_c = (None, None, None) if (fresh and kind == "attn") else \
+                (kc, vc, pc)
+            rec_c = (rconv[ri], rh[ri]) if kind == "rec" else None
+            x, na, nr = _block(cfg, lp[f"mix{j}"], lp[f"mlp{j}"], kind, x,
+                               positions, attn_c, rec_c)
+            if kind == "rec":
+                new_conv.append(nr[0])
+                new_h.append(nr[1])
+                ri += 1
+            else:
+                k, v = na
+                kc = _write_ring(kc, k, slots, w0)
+                vc = _write_ring(vc, v, slots, w0)
+                new_k, new_v = kc, vc
+        return x, (new_k, new_v, jnp.stack(new_conv), jnp.stack(new_h))
+
+    body = _ckpt(cfg, super_body) if cfg.remat else super_body
+    if cfg.scan_layers:
+        x, (ks, vs, convs, hs) = lax.scan(
+            body, x, (params["super"], cache["attn_k"], cache["attn_v"],
+                      cache["rec_conv"], cache["rec_h"]))
+    else:
+        outs = []
+        for i in range(n_super):
+            blk = jax.tree.map(lambda a: a[i],
+                               (params["super"], cache["attn_k"],
+                                cache["attn_v"], cache["rec_conv"],
+                                cache["rec_h"]))
+            x, o = body(x, blk)
+            outs.append(o)
+        ks, vs, convs, hs = (jnp.stack([o[j] for o in outs])
+                             for j in range(4))
+
+    new_cache = {"attn_k": ks, "attn_v": vs, "rec_conv": convs, "rec_h": hs,
+                 "pos": pos_new, "len": start + c}
+
+    # tail layers (unrolled)
+    ti_rec = ti_attn = 0
+    for j, kind in enumerate(tail):
+        if kind == "rec":
+            rec_c = (cache["tail_conv"][ti_rec], cache["tail_h"][ti_rec])
+            x, _, nr = _block(cfg, params[f"tail_mix{j}"],
+                              params[f"tail_mlp{j}"], kind, x, positions,
+                              None, rec_c)
+            new_cache.setdefault("tail_conv", cache["tail_conv"])
+            new_cache.setdefault("tail_h", cache["tail_h"])
+            new_cache["tail_conv"] = new_cache["tail_conv"].at[ti_rec].set(nr[0])
+            new_cache["tail_h"] = new_cache["tail_h"].at[ti_rec].set(nr[1])
+            ti_rec += 1
+        else:
+            kc = cache["tail_attn_k"][ti_attn]
+            vc = cache["tail_attn_v"][ti_attn]
+            attn_c = (None, None, None) if fresh else (kc, vc, pc)
+            x, na, _ = _block(cfg, params[f"tail_mix{j}"],
+                              params[f"tail_mlp{j}"], kind, x, positions,
+                              attn_c, None)
+            k, v = na
+            new_cache.setdefault("tail_attn_k", cache["tail_attn_k"])
+            new_cache.setdefault("tail_attn_v", cache["tail_attn_v"])
+            new_cache["tail_attn_k"] = new_cache["tail_attn_k"].at[ti_attn].set(
+                _write_ring(kc, k, slots, w0))
+            new_cache["tail_attn_v"] = new_cache["tail_attn_v"].at[ti_attn].set(
+                _write_ring(vc, v, slots, w0))
+            ti_attn += 1
+
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]).astype(jnp.float32)
+    logits = jnp.tanh(logits / FINAL_SOFTCAP) * FINAL_SOFTCAP
+    return logits, new_cache
+
+
+def forward(cfg, params, batch, seq_rule=None):
+    logits, _ = _run(cfg, params, batch["tokens"], None)
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(cfg, params, batch, seq_rule=None):
+    logits, _ = forward(cfg, params, batch)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def extend(cfg, params, cache, tokens, vision_embeds=None):
+    return _run(cfg, params, tokens, cache)
+
+
+def prefill(cfg, params, batch, max_len: int = 0):
+    cache = init_cache(cfg, batch["tokens"].shape[0])
+    return _run(cfg, params, batch["tokens"], cache)

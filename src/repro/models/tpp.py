@@ -1,0 +1,328 @@
+"""The paper's CDF-based Transformer TPP (Sec. 4.2).
+
+Encoder: Transformer over event embeddings (type embedding + temporal
+encoding). Three encoder variants are supported with their published
+temporal encodings and attention forms (App. D.2):
+
+  - thp    : sinusoidal encoding of t (Eq. 27), standard causal MHA
+  - sahp   : shifted sinusoidal with learnable frequencies (Eq. 28),
+             standard causal MHA
+  - attnhp : scaled sinusoidal (Eq. 29), unnormalized Gaussian-kernel
+             attention with a +1 denominator and tanh output (Eq. 31),
+             Q/K/V computed from concat(1, z(t), h^{l-1}) (Eqs. 32-34)
+
+Decoder: log-normal mixture over the next inter-event interval +
+categorical head over the next event type (Sec. 4.2), both read from the
+history embedding h(t_i).
+
+All functions are written for a SINGLE sequence (no batch dim) and are
+vmapped by the trainer / samplers; this is what lets the fully-jitted
+speculative sampler run per-lane lengths under ``jax.vmap``.
+
+Event type ``K`` (== cfg.num_marks) is the BOS sentinel that seeds the
+history (Algorithm 1's initial event (t_0, k_0)).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ops
+from ..kernels.ref import INVALID_POS
+from . import common as cm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# temporal encodings (Eqs. 27-29)
+# ---------------------------------------------------------------------------
+
+def temporal_encoding(cfg, params, t):
+    """t: [...] -> z(t): [..., D]."""
+    D = cfg.d_model
+    j = jnp.arange(D, dtype=jnp.float32)
+    even = (j % 2 == 0)
+    jj = jnp.where(even, j, j - 1)            # paired exponent
+    t = t[..., None].astype(jnp.float32)
+    if cfg.encoder == "thp":
+        angle = t / jnp.power(10000.0, jj / D)
+        return jnp.where(even, jnp.sin(angle), jnp.cos(angle))
+    if cfg.encoder == "sahp":
+        w = params["enc_freq"]                # [D] learnable
+        angle = j / jnp.power(10000.0, jj / D) + w * t
+        return jnp.where(even, jnp.sin(angle), jnp.cos(angle))
+    if cfg.encoder == "attnhp":
+        m, M = cfg.attnhp_m, cfg.attnhp_M
+        angle = t / m * jnp.power(5.0 * M / m, jj / D)
+        return jnp.sin(angle)                 # Eq. 29: sin for both parities
+    raise ValueError(cfg.encoder)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    D, H, Dh, M, K = (cfg.d_model, cfg.num_heads, cfg.head_dim, cfg.num_mix,
+                      cfg.num_marks)
+    dtype = cm.get_dtype(cfg.dtype)
+    rs = jax.random.split(rng, 8)
+
+    qkv_in = 2 * D + 1 if cfg.encoder == "attnhp" else D
+
+    def one_layer(r):
+        rr = jax.random.split(r, 6)
+        return {
+            "ln1": jnp.zeros((D,), dtype),
+            "ln2": jnp.zeros((D,), dtype),
+            "wq": cm.dense_init(rr[0], (qkv_in, H, Dh), qkv_in, dtype),
+            "wk": cm.dense_init(rr[1], (qkv_in, H, Dh), qkv_in, dtype),
+            "wv": cm.dense_init(rr[2], (qkv_in, H, Dh), qkv_in, dtype),
+            "wo": cm.dense_init(rr[3], (H, Dh, D), H * Dh, dtype),
+            "w1": cm.dense_init(rr[4], (D, cfg.d_ff), D, dtype),
+            "w2": cm.dense_init(rr[5], (cfg.d_ff, D), cfg.d_ff, dtype),
+        }
+
+    params = {
+        # K marks + BOS sentinel row
+        "embed": cm.embed_init(rs[0], (K + 1, D), dtype),
+        "layers": cm.stack_layer_init(one_layer, rs[1], cfg.num_layers),
+        "final_ln": jnp.zeros((D,), dtype),
+        # decoder (Sec 4.2): E in R^{3D x D}, then V_w/V_mu/V_sigma
+        "E": cm.dense_init(rs[2], (D, 3 * D), D, dtype),
+        "V_w": cm.dense_init(rs[3], (D, M), D, dtype),
+        "b_w": jnp.zeros((M,), dtype),
+        "V_mu": cm.dense_init(rs[4], (D, M), D, dtype),
+        "b_mu": jnp.zeros((M,), dtype),
+        "V_sigma": cm.dense_init(rs[5], (D, M), D, dtype),
+        "b_sigma": jnp.zeros((M,), dtype),
+        # type head: V2 tanh(V1 h + b1) + b2
+        "V_k1": cm.dense_init(rs[6], (D, D), D, dtype),
+        "b_k1": jnp.zeros((D,), dtype),
+        "V_k2": cm.dense_init(rs[7], (D, K), D, dtype),
+        "b_k2": jnp.zeros((K,), dtype),
+    }
+    if cfg.encoder == "sahp":
+        params["enc_freq"] = jnp.ones((D,), jnp.float32) * 0.1
+    return params
+
+
+def logical_axes(cfg):
+    layer = {"ln1": ("layers", None), "ln2": ("layers", None),
+             "wq": ("layers", None, "heads", "qkv"),
+             "wk": ("layers", None, "heads", "qkv"),
+             "wv": ("layers", None, "heads", "qkv"),
+             "wo": ("layers", "heads", "qkv", None),
+             "w1": ("layers", None, "mlp"), "w2": ("layers", "mlp", None)}
+    axes = {"embed": ("marks", None), "layers": layer, "final_ln": (None,),
+            "E": (None, None), "V_w": (None, "mix"), "b_w": ("mix",),
+            "V_mu": (None, "mix"), "b_mu": ("mix",),
+            "V_sigma": (None, "mix"), "b_sigma": ("mix",),
+            "V_k1": (None, None), "b_k1": (None,),
+            "V_k2": (None, "marks"), "b_k2": ("marks",)}
+    if cfg.encoder == "sahp":
+        axes["enc_freq"] = (None,)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# encoder blocks (single sequence: x [N, D])
+# ---------------------------------------------------------------------------
+
+def _qkv_input(cfg, x, z):
+    """AttNHP concatenates (1, z(t), h) before Q/K/V (Eqs. 32-34)."""
+    if cfg.encoder == "attnhp":
+        ones = jnp.ones(x.shape[:-1] + (1,), x.dtype)
+        return jnp.concatenate([ones, z.astype(x.dtype), x], axis=-1)
+    return x
+
+
+def _attend(cfg, lp, q, kc, vc, q_idx, kv_idx):
+    """q: [c, H, Dh]; kc/vc: [Nc, H, Dh]; idx: event ordinals (int).
+
+    THP/SAHP: softmax attention. AttNHP: f = exp(q.k/sqrt(D)) with
+    denominator (1 + sum f) and tanh on the combined output.
+    """
+    Dh = q.shape[-1]
+    s = jnp.einsum("chd,shd->hcs", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / math.sqrt(Dh)
+    mask = kv_idx[None, None, :] <= q_idx[None, :, None]
+    if cfg.encoder == "attnhp":
+        f = jnp.where(mask, jnp.exp(jnp.minimum(s, 30.0)), 0.0)
+        denom = 1.0 + jnp.sum(f, axis=-1, keepdims=True)
+        w = f / denom
+    else:
+        s = jnp.where(mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        w = jnp.where(jnp.any(mask, -1, keepdims=True), w, 0.0)
+    o = jnp.einsum("hcs,shd->chd", w, vc.astype(jnp.float32))
+    out = jnp.einsum("chd,hdo->co", o, lp["wo"].astype(jnp.float32))
+    if cfg.encoder == "attnhp":
+        out = jnp.tanh(out)
+    return out.astype(q.dtype)
+
+
+def _layer_kv(cfg, lp, x, z):
+    xin = _qkv_input(cfg, cm.rms_norm(x, lp["ln1"]), z)
+    k = jnp.einsum("sd,dhe->she", xin, lp["wk"])
+    v = jnp.einsum("sd,dhe->she", xin, lp["wv"])
+    q = jnp.einsum("sd,dhe->she", xin, lp["wq"])
+    return q, k, v
+
+
+def encode(cfg, params, times, types):
+    """Full causal encoding. times/types: [N] -> h: [N, D]."""
+    z = temporal_encoding(cfg, params, times)
+    x = params["embed"][types].astype(z.dtype) + z
+    x = x.astype(cm.get_dtype(cfg.dtype))
+    N = x.shape[0]
+    idx = jnp.arange(N, dtype=jnp.int32)
+
+    def body(x, lp):
+        q, k, v = _layer_kv(cfg, lp, x, z)
+        x = x + _attend(cfg, lp, q, k, v, idx, idx)
+        xn = cm.rms_norm(x, lp["ln2"])
+        x = x + jnp.einsum("sf,fd->sd", jax.nn.gelu(
+            jnp.einsum("sd,df->sf", xn, lp["w1"])), lp["w2"])
+        return x, None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    return cm.rms_norm(x, params["final_ln"])
+
+
+# ---------------------------------------------------------------------------
+# incremental encoding with KV cache (for sampling)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, max_events: int):
+    dtype = cm.get_dtype(cfg.dtype)
+    L, H, Dh = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    return {"k": jnp.zeros((L, max_events, H, Dh), dtype),
+            "v": jnp.zeros((L, max_events, H, Dh), dtype),
+            "idx": jnp.full((max_events,), INVALID_POS, jnp.int32),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def extend(cfg, params, cache, times, types):
+    """Append c events; return (h [c, D], new cache).
+
+    Correct under rollback: entries with recorded ordinal >= len are
+    masked via the idx buffer.
+    """
+    z = temporal_encoding(cfg, params, times)
+    x = params["embed"][types].astype(z.dtype) + z
+    x = x.astype(cm.get_dtype(cfg.dtype))
+    c = x.shape[0]
+    start = cache["len"]
+    slots = start + jnp.arange(c, dtype=jnp.int32)
+    idx_new = cache["idx"].at[slots].set(slots)
+
+    def body(x, layer_in):
+        lp, kc, vc = layer_in
+        q, k, v = _layer_kv(cfg, lp, x, z)
+        kc = kc.at[slots].set(k.astype(kc.dtype))
+        vc = vc.at[slots].set(v.astype(vc.dtype))
+        x = x + _attend(cfg, lp, q, kc, vc, slots, idx_new)
+        xn = cm.rms_norm(x, lp["ln2"])
+        x = x + jnp.einsum("sf,fd->sd", jax.nn.gelu(
+            jnp.einsum("sd,df->sf", xn, lp["w1"])), lp["w2"])
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = lax.scan(body, x,
+                                 (params["layers"], cache["k"], cache["v"]))
+    h = cm.rms_norm(x, params["final_ln"])
+    return h, {"k": k_new, "v": v_new, "idx": idx_new, "len": start + c}
+
+
+def rollback(cache, new_len):
+    """Invalidate every cache entry with ordinal >= new_len (O(1))."""
+    idx = jnp.where(cache["idx"] < new_len, cache["idx"], INVALID_POS)
+    return {"k": cache["k"], "v": cache["v"], "idx": idx,
+            "len": jnp.asarray(new_len, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# decoder heads (Sec. 4.2)
+# ---------------------------------------------------------------------------
+
+class MixParams(NamedTuple):
+    log_w: jnp.ndarray   # [..., M] log mixture weights
+    mu: jnp.ndarray      # [..., M]
+    sigma: jnp.ndarray   # [..., M]
+
+
+def interval_params(cfg, params, h) -> MixParams:
+    e = jnp.einsum("...d,de->...e", h, params["E"])
+    e1, e2, e3 = jnp.split(e, 3, axis=-1)
+    logit_w = jnp.einsum("...d,dm->...m", e1, params["V_w"]) + params["b_w"]
+    log_w = jax.nn.log_softmax(logit_w.astype(jnp.float32), axis=-1)
+    mu = (jnp.einsum("...d,dm->...m", e2, params["V_mu"])
+          + params["b_mu"]).astype(jnp.float32)
+    log_sigma = (jnp.einsum("...d,dm->...m", e3, params["V_sigma"])
+                 + params["b_sigma"]).astype(jnp.float32)
+    log_sigma = jnp.clip(log_sigma, math.log(cfg.sigma_min),
+                         math.log(cfg.sigma_max))
+    return MixParams(log_w, mu, jnp.exp(log_sigma))
+
+
+def type_logits(cfg, params, h):
+    t = jnp.tanh(jnp.einsum("...d,de->...e", h, params["V_k1"])
+                 + params["b_k1"])
+    return (jnp.einsum("...d,dk->...k", t, params["V_k2"])
+            + params["b_k2"]).astype(jnp.float32)
+
+
+def sample_interval(rng, mix: MixParams):
+    """App. A.1: z ~ Cat(w), tau = exp(mu_z + sigma_z * eps)."""
+    r1, r2 = jax.random.split(rng)
+    comp = jax.random.categorical(r1, mix.log_w, axis=-1)
+    eps = jax.random.normal(r2, comp.shape)
+    mu = jnp.take_along_axis(mix.mu, comp[..., None], -1)[..., 0]
+    sigma = jnp.take_along_axis(mix.sigma, comp[..., None], -1)[..., 0]
+    return jnp.exp(mu + sigma * eps)
+
+
+def interval_logpdf(mix: MixParams, tau):
+    return ops.lognorm_mix_logpdf(tau, mix.log_w, mix.mu, mix.sigma)
+
+
+def interval_logsf(mix: MixParams, tau):
+    return ops.lognorm_mix_logsf(tau, mix.log_w, mix.mu, mix.sigma)
+
+
+# ---------------------------------------------------------------------------
+# log likelihood (Eq. 2), single sequence
+# ---------------------------------------------------------------------------
+
+def loglik(cfg, params, times, types, mask, t_end):
+    """times/types/mask: [N] (positions with mask==0 are padding).
+
+    Returns the CDF-form log-likelihood (Eq. 2) of one sequence on (0, T].
+    """
+    N = times.shape[0]
+    n = jnp.sum(mask).astype(jnp.int32)
+    # encoder input: BOS at t=0 followed by the (padded) events
+    enc_t = jnp.concatenate([jnp.zeros((1,), times.dtype), times])
+    enc_k = jnp.concatenate(
+        [jnp.full((1,), cfg.num_marks, jnp.int32), types])
+    h = encode(cfg, params, enc_t, enc_k)      # [N+1, D]
+    h_hist = h[:-1]                            # h(t_{i-1}) for event i
+    prev_t = enc_t[:-1]
+    tau = jnp.maximum(times - prev_t, 1e-9)
+    mix = interval_params(cfg, params, h_hist)
+    lp_tau = interval_logpdf(mix, tau)
+    logits = type_logits(cfg, params, h_hist)
+    lp_k = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                               types[..., None], -1)[..., 0]
+    ev_ll = jnp.sum((lp_tau + lp_k) * mask)
+    # survival of the tail (no event in (t_N, T]) from h(t_N) = h[n]
+    h_last = h[n]
+    t_last = jnp.where(n > 0, times[jnp.maximum(n - 1, 0)], 0.0)
+    mix_last = interval_params(cfg, params, h_last)
+    tail = interval_logsf(mix_last, jnp.maximum(t_end - t_last, 1e-9))
+    return ev_ll + tail

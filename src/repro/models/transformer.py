@@ -1,0 +1,303 @@
+"""Scanned decoder-only Transformer covering the dense / GQA / MoE / VLM
+families (mistral-nemo, llama3-405b, llama3.2-1b, qwen2.5, internvl2-LM,
+granite-moe, phi3.5-moe).
+
+Layers are stacked on a leading [L] axis and executed with ``lax.scan`` so
+compile time is depth-independent (MaxText-style). ``remat`` checkpoints
+each scanned block during training.
+
+API (consumed by ``repro.models.registry``):
+  init_params(cfg, rng)            -> params
+  logical_axes(cfg)                -> tree of logical-axis tuples
+  forward(cfg, params, batch)      -> logits [B,S,V]
+  loss_fn(cfg, params, batch)      -> scalar CE (+ MoE aux)
+  init_cache(cfg, B, max_len)      -> cache
+  cache_axes(cfg)                  -> tree
+  prefill(cfg, params, batch, cache) -> (logits, cache)
+  extend(cfg, params, cache, tokens) -> (logits [B,c,V], cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import ops
+from ..kernels.ref import INVALID_POS
+from . import common as cm
+
+
+def _ckpt(cfg, fn):
+    """jax.checkpoint with the configured policy."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+FLASH_MIN_LEN = 2048
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, rng):
+    dtype = cm.get_dtype(cfg.param_dtype)
+    r_emb, r_layers, r_head = jax.random.split(rng, 3)
+
+    def one_layer(r):
+        ra, rm = jax.random.split(r)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": cm.attn_init(ra, cfg, dtype),
+        }
+        if cfg.is_moe:
+            p["moe"] = cm.moe_init(rm, cfg, dtype)
+        else:
+            p["mlp"] = cm.swiglu_init(rm, cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    params = {
+        "embed": cm.embed_init(r_emb, (cfg.vocab_size, cfg.d_model), dtype),
+        "layers": cm.stack_layer_init(one_layer, r_layers, cfg.num_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(
+            r_head, (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+    return params
+
+
+def logical_axes(cfg):
+    layer = {
+        "ln1": ("layers", "p_embed"),
+        "ln2": ("layers", "p_embed"),
+        "attn": {k: ("layers",) + v for k, v in cm.attn_axes(cfg).items()},
+    }
+    if cfg.is_moe:
+        layer["moe"] = {k: ("layers",) + v for k, v in cm.moe_axes().items()}
+    else:
+        layer["mlp"] = {k: ("layers",) + v for k, v in cm.swiglu_axes().items()}
+    axes = {
+        "embed": ("vocab", "embed"),
+        "layers": layer,
+        "final_norm": ("p_embed",),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed", "vocab")
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _window(cfg) -> int:
+    return cfg.sliding_window
+
+
+def _attn_full(cfg, p, x, positions):
+    """Self-attention over the chunk itself (train / no-cache path)."""
+    q, k, v = cm.attn_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    if S >= FLASH_MIN_LEN:
+        o = ops.flash_attention(q, k, v, positions, positions,
+                                window=_window(cfg), softcap=cfg.logit_softcap,
+                                use_pallas=cfg.use_pallas)
+    else:
+        o = ops.naive_attention(q, k, v, positions, positions,
+                                window=_window(cfg),
+                                softcap=cfg.logit_softcap)
+    return cm.attn_out(p, o)
+
+
+def _block_train(cfg, p, x, positions, seq_rule=None):
+    h = _attn_full(cfg, p["attn"], cm.rms_norm(x, p["ln1"]), positions)
+    x = x + h
+    if seq_rule is not None:
+        x = seq_rule(x)
+    xn = cm.rms_norm(x, p["ln2"])
+    if cfg.is_moe:
+        h, aux = cm.moe_ffn(cfg, p["moe"], xn)
+    else:
+        h, aux = cm.swiglu(p["mlp"], xn), jnp.float32(0.0)
+    x = x + h
+    if seq_rule is not None:
+        x = seq_rule(x)
+    return x, aux
+
+
+def forward(cfg, params, batch, seq_rule=None):
+    """Full causal forward. batch: tokens [B,S] (+ vision_embeds [B,P,D])."""
+    dtype = cm.get_dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.family == "vlm":
+        ve = batch["vision_embeds"].astype(dtype)
+        x = jnp.concatenate([ve, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        return _block_train(cfg, lp, x, positions, seq_rule=seq_rule)
+
+    body_fn = _ckpt(cfg, body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, auxs = lax.scan(body_fn, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body_fn(x, lp)
+            aux = aux + a
+    x = cm.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(cfg, params, batch, seq_rule=None):
+    logits, aux = forward(cfg, params, batch, seq_rule=seq_rule)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # loss only over text positions
+        logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        ce = -jnp.mean(ll)
+    else:
+        ce = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + cfg.router_aux_weight * aux if cfg.is_moe else ce
+
+
+# ---------------------------------------------------------------------------
+# KV cache / serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    dtype = cm.get_dtype(cfg.dtype)
+    L, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    if cfg.sliding_window > 0:
+        max_len = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((L, batch_size, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((L, batch_size, max_len, KV, Dh), dtype),
+        "pos": jnp.full((batch_size, max_len), INVALID_POS, jnp.int32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    return {"k": ("layers", "batch", "cache_seq", "kv_heads", "qkv"),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", "qkv"),
+            "pos": ("batch", "cache_seq"),
+            "len": ()}
+
+
+def _cache_slots(cfg, cache, start, c):
+    """Slot indices (ring-buffer aware) for positions start..start+c-1."""
+    Smax = cache["k"].shape[2]
+    idx = start + jnp.arange(c, dtype=jnp.int32)
+    return jnp.where(jnp.asarray(Smax) > 0, idx % Smax, idx), idx
+
+
+def extend(cfg, params, cache, tokens, vision_embeds=None):
+    """Append c tokens (c >= 1) and return logits for each appended position.
+
+    This one entry point implements prefill (len=0, c=S), decode (c=1) and
+    speculative verification (c = gamma + 1).
+    """
+    dtype = cm.get_dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(dtype), x], axis=1)
+    B, c, _ = x.shape
+    start = cache["len"]
+    slots, positions = _cache_slots(cfg, cache, start, c)
+    positions = jnp.broadcast_to(positions, (B, c))
+    # If the chunk wraps the ring more than once, only the last Smax entries
+    # survive — drop the earlier ones so the scatter has no duplicate slots.
+    Smax = cache["k"].shape[2]
+    w0 = max(0, c - Smax)            # static
+    wslots = slots[w0:]
+    pos_new = cache["pos"].at[:, wslots].set(positions[:, w0:])
+
+    ring = cfg.sliding_window > 0
+
+    def scan_body(x, layer_in):
+        lp, kc, vc = layer_in
+        xn = cm.rms_norm(x, lp["ln1"])
+        q, k, v = cm.attn_qkv(lp["attn"], xn, cfg, positions)
+        if ring:
+            # Ring buffer: writing first would overwrite slots that earlier
+            # in-chunk queries still see. Attend over cache ∪ chunk, then
+            # write the chunk into its (possibly wrapping) slots.
+            ka = jnp.concatenate([kc, k.astype(kc.dtype)], axis=1)
+            va = jnp.concatenate([vc, v.astype(vc.dtype)], axis=1)
+            pa = jnp.concatenate([cache["pos"], positions], axis=1)
+            kc = kc.at[:, wslots].set(k[:, w0:].astype(kc.dtype))
+            vc = vc.at[:, wslots].set(v[:, w0:].astype(vc.dtype))
+        else:
+            kc = kc.at[:, wslots].set(k[:, w0:].astype(kc.dtype))
+            vc = vc.at[:, wslots].set(v[:, w0:].astype(vc.dtype))
+            ka, va, pa = kc, vc, pos_new
+        if c >= FLASH_MIN_LEN:
+            o = ops.flash_attention(q, ka, va, positions, pa,
+                                    window=_window(cfg),
+                                    softcap=cfg.logit_softcap,
+                                    use_pallas=cfg.use_pallas)
+        else:
+            o = ops.naive_attention(q, ka, va, positions, pa,
+                                    window=_window(cfg),
+                                    softcap=cfg.logit_softcap)
+        x = x + cm.attn_out(lp["attn"], o)
+        xn = cm.rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            h, _ = cm.moe_ffn(cfg, lp["moe"], xn)
+        else:
+            h = cm.swiglu(lp["mlp"], xn)
+        return x + h, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = lax.scan(
+            scan_body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (kc, vc) = scan_body(x, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    new_cache = {"k": k_new, "v": v_new, "pos": pos_new, "len": start + c}
+    x = cm.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    if vision_embeds is not None:
+        logits = logits[:, vision_embeds.shape[1]:]
+    return logits, new_cache
+
+
+def rollback(cache, new_len):
+    """Roll the cache back to ``new_len`` valid entries (O(1): mask stale
+    slots through the position buffer rather than copying k/v)."""
+    Smax = cache["k"].shape[2]
+    slot = jnp.arange(Smax)[None, :]
+    # a slot is valid iff its recorded position < new_len
+    pos = jnp.where(cache["pos"] < new_len, cache["pos"], INVALID_POS)
+    del slot
+    return {"k": cache["k"], "v": cache["v"], "pos": pos,
+            "len": jnp.asarray(new_len, jnp.int32)}
+
+
+def prefill(cfg, params, batch, max_len: int):
+    B = batch["tokens"].shape[0]
+    cache = init_cache(cfg, B, max_len)
+    ve = batch.get("vision_embeds")
+    return extend(cfg, params, cache, batch["tokens"], vision_embeds=ve)

@@ -1,0 +1,52 @@
+"""Minimal msgpack checkpointing for pytrees of jnp arrays."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        if arr.dtype == jnp.bfloat16:
+            return {"__arr__": arr.astype(np.float32).tobytes(),
+                    "dtype": "bfloat16", "shape": list(arr.shape)}
+        return {"__arr__": arr.tobytes(), "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+    raise TypeError(type(obj))
+
+
+def _decode(obj):
+    if "__arr__" in obj:
+        dt = obj["dtype"]
+        if dt == "bfloat16":
+            arr = np.frombuffer(obj["__arr__"], np.float32)
+            return jnp.asarray(arr.reshape(obj["shape"]), jnp.bfloat16)
+        arr = np.frombuffer(obj["__arr__"], np.dtype(dt))
+        return jnp.asarray(arr.reshape(obj["shape"]))
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"structure": str(treedef),
+               "leaves": [ _encode(l) for l in leaves ]}
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, default=_encode))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), object_hook=_decode,
+                                  strict_map_key=False)
+    leaves = [_decode(l) if isinstance(l, dict) else l
+              for l in payload["leaves"]]
+    _, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(treedef, leaves)

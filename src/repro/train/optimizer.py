@@ -1,0 +1,85 @@
+"""Adam optimizer + schedules (pure JAX pytrees; optax is not available).
+
+The moment dtype follows the parameter dtype by default (bf16 moments for
+the bf16 mega-configs keep the dry-run optimizer-state footprint honest;
+f32 for the small f32 TPP models)."""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+class Adam(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adam(lr, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, clip_norm: float = 1.0,
+         schedule: Optional[Callable] = None) -> Adam:
+    """lr: float or callable(step)->lr. Returns (init, update)."""
+
+    def init(params):
+        zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x), p)
+        return AdamState(jnp.zeros((), jnp.int32), zeros(params),
+                         zeros(params))
+
+    def update(grads, state: AdamState, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if schedule is not None:
+            lr_t = lr_t * schedule(step)
+        if clip_norm and clip_norm > 0:
+            g_norm = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(g_norm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32)
+            v32 = v.astype(jnp.float32)
+            m_new = b1 * m32 + (1 - b1) * gf
+            v_new = b2 * v32 + (1 - b2) * gf * gf
+            mhat = m_new / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr_t * delta
+            return p_new.astype(p.dtype), m_new.astype(m.dtype), \
+                v_new.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamState(step, new_mu, new_nu)
+
+    return Adam(init, update)
+
+
+def cosine_warmup(warmup: int, total: int, floor: float = 0.1):
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return sched

@@ -1,0 +1,111 @@
+"""Data-pipeline and metrics coverage + dry-run collective parser units."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.core import thinning as thin
+from repro.data import synthetic as ds
+from repro import metrics as M
+
+
+def test_inhom_poisson_compensator_matches_quadrature():
+    proc = thin.InhomPoisson()
+    a, b = 3.0, 17.0
+    grid = np.linspace(a, b, 20001)
+    lam = np.array([proc.intensity(t, [], [])[0] for t in grid])
+    quad = np.trapezoid(lam, grid)
+    assert abs(proc.compensator(a, b, [], []) - quad) < 1e-3
+
+
+def test_hawkes_compensator_matches_quadrature():
+    proc = thin.Hawkes()
+    hist = [0.5, 1.2, 2.0]
+    marks = [0, 0, 0]
+    a, b = 2.0, 6.0
+    grid = np.linspace(a + 1e-9, b, 20001)
+    lam = np.array([proc.intensity(t, hist, marks)[0] for t in grid])
+    quad = np.trapezoid(lam, grid)
+    assert abs(proc.compensator(a, b, hist, marks) - quad) < 1e-3
+
+
+def test_multihawkes_stability_enforced():
+    d = ds.make_dataset("stackoverflow_like", n_seqs=2, t_end=5.0)
+    proc = d.process
+    B = proc.alpha / proc.beta
+    assert abs(np.linalg.eigvals(B)).max() < 1.0
+
+
+def test_ground_truth_loglik_favors_true_process():
+    """GT loglik of Hawkes samples must beat a wrong-parameter Hawkes."""
+    proc = thin.Hawkes()
+    wrong = thin.Hawkes(mu=0.5, alpha=0.2, beta=4.0)
+    rng = np.random.default_rng(0)
+    lls_true = lls_wrong = 0.0
+    for _ in range(5):
+        t, k = thin.thinning_sample(proc, 10.0, rng)
+        lls_true += thin.ground_truth_loglik(proc, t, k, 10.0)
+        lls_wrong += thin.ground_truth_loglik(wrong, t, k, 10.0)
+    assert lls_true > lls_wrong
+
+
+def test_pad_batch_shapes_and_masks():
+    seqs = [(np.array([0.5, 1.0]), np.array([0, 1])),
+            (np.array([0.2]), np.array([1]))]
+    b = ds.pad_batch(seqs, 4)
+    assert b["times"].shape == (2, 4)
+    np.testing.assert_array_equal(b["mask"], [[1, 1, 0, 0], [1, 0, 0, 0]])
+    np.testing.assert_array_equal(b["types"][0, :2], [0, 1])
+
+
+def test_batches_drop_last_and_determinism():
+    seqs = [(np.arange(1, 3, dtype=float), np.zeros(2, int))] * 10
+    bs = list(ds.batches(seqs, 4, 8, drop_last=True, seed=3))
+    assert len(bs) == 2
+    a = list(ds.batches(seqs, 4, 8, seed=5))
+    b = list(ds.batches(seqs, 4, 8, seed=5))
+    np.testing.assert_array_equal(a[0]["times"], b[0]["times"])
+
+
+def test_ks_statistic_calibrated():
+    rng = np.random.default_rng(0)
+    z = rng.exponential(1.0, 5000)
+    assert M.ks_statistic(z) < M.ks_confidence_band(5000)
+    z_bad = rng.exponential(2.0, 5000)  # wrong rate -> fails
+    assert M.ks_statistic(z_bad) > M.ks_confidence_band(5000)
+
+
+def test_wasserstein_matches_scipy():
+    rng = np.random.default_rng(1)
+    a, b = rng.normal(0, 1, 300), rng.normal(0.7, 1.3, 400)
+    ours = M.wasserstein_1d(a, b)
+    theirs = stats.wasserstein_distance(a, b)
+    assert abs(ours - theirs) < 0.05
+
+
+def test_collective_parser_counts_and_multiplies():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[4,128]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar = f32[16]{0} all-reduce(%y), to_apply=%sum
+  %cp = (f32[8]{0}, f32[8]{0}) collective-permute(%z, %w)
+  %not_a_coll = f32[999]{0} add(%a, %b)
+"""
+    total, by_type = collective_bytes(hlo)
+    assert by_type["all-gather"]["bytes"] == 4 * 128 * 2
+    assert by_type["all-reduce"]["bytes"] == 16 * 4 * 2   # counted 2x
+    assert by_type["collective-permute"]["bytes"] == 2 * 8 * 4
+    assert total == sum(v["bytes"] for v in by_type.values())
+
+
+def test_smoke_variant_invariants():
+    from repro.configs import ARCHS, smoke_variant
+    for cfg in ARCHS.values():
+        s = smoke_variant(cfg)
+        assert s.family == cfg.family
+        assert s.num_layers <= 4 and s.d_model <= 512
+        if s.is_moe:
+            assert s.num_experts <= 4

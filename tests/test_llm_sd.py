@@ -1,0 +1,95 @@
+"""Token-level speculative decoding over the architecture zoo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+
+def _chisq(counts, probs):
+    import numpy as _np
+    f_exp = _np.asarray(probs, float)
+    f_exp = f_exp / f_exp.sum() * counts.sum()
+    f_exp *= counts.sum() / f_exp.sum()   # exact renormalization
+    return stats.chisquare(counts, f_exp, sum_check=False)
+
+from repro.configs.base import ModelConfig
+from repro.core import llm_sd
+from repro.models import registry
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31):
+    return ModelConfig(name="t", family="dense", num_layers=num_layers,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=vocab, dtype="float32",
+                       param_dtype="float32", remat=False)
+
+
+def test_same_model_accepts_all_drafts():
+    cfg = _dense()
+    m = registry.get_model(cfg)
+    p = m.init_params(RNG)
+    st = llm_sd.serve_speculative(cfg, cfg, p, p, m, m,
+                                  jnp.arange(5, dtype=jnp.int32),
+                                  jax.random.PRNGKey(1), max_new_tokens=12,
+                                  gamma=4, max_len=64)
+    assert st.accepted == st.drafted
+    assert st.n == 12
+
+
+@pytest.mark.parametrize("family,extra", [
+    ("ssm", dict(num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=8)),
+    ("hybrid", dict(block_pattern=("rec", "rec", "attn"), lru_width=24,
+                    sliding_window=16, num_kv_heads=1, num_layers=4)),
+])
+def test_replay_families_speculative_serving(family, extra):
+    kw = dict(name="x", family=family, num_layers=2, d_model=32, num_heads=4,
+              num_kv_heads=2, d_ff=64, vocab_size=31, dtype="float32",
+              param_dtype="float32", remat=False)
+    kw.update(extra)
+    cfg = ModelConfig(**kw)
+    m = registry.get_model(cfg)
+    p = m.init_params(RNG)
+    st = llm_sd.serve_speculative(cfg, cfg, p, p, m, m,
+                                  jnp.arange(5, dtype=jnp.int32),
+                                  jax.random.PRNGKey(1), max_new_tokens=8,
+                                  gamma=3, max_len=64)
+    assert st.accepted == st.drafted  # identical models: zero rejections
+    assert st.n == 8
+
+
+def test_sd_token_distribution_matches_ar():
+    """First generated token over many seeds: SD dist == AR dist (both must
+    equal the target model's softmax)."""
+    cfg_t = _dense(num_layers=2, vocab=13)
+    cfg_d = _dense(num_layers=1, vocab=13)
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    pt, pd = mt.init_params(RNG), md.init_params(jax.random.PRNGKey(9))
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    lt, _ = mt.prefill(pt, {"tokens": prompt[None]}, 32)
+    target_p = np.array(jax.nn.softmax(lt[0, -1]))
+    N = 400
+    toks = []
+    for i in range(N):
+        st = llm_sd.serve_speculative(cfg_t, cfg_d, pt, pd, mt, md, prompt,
+                                      jax.random.PRNGKey(100 + i),
+                                      max_new_tokens=1, gamma=2, max_len=32)
+        toks.append(int(st.tokens[0]))
+    cnt = np.bincount(np.array(toks), minlength=13)
+    res = _chisq(cnt, target_p)
+    assert res.pvalue > 1e-3, (cnt / N, target_p)
+
+
+def test_speedup_accounting():
+    """SD must use fewer target forwards than AR for the same tokens."""
+    cfg = _dense()
+    m = registry.get_model(cfg)
+    p = m.init_params(RNG)
+    st = llm_sd.serve_speculative(cfg, cfg, p, p, m, m,
+                                  jnp.arange(5, dtype=jnp.int32),
+                                  jax.random.PRNGKey(1), max_new_tokens=20,
+                                  gamma=4, max_len=64)
+    # with all-accept, rounds ~ ceil(20 / (gamma+1)) << 20 AR steps
+    assert st.rounds <= 20 // 4 + 1

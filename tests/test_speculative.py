@@ -1,0 +1,172 @@
+"""Correctness of the speculative-decoding primitives and the full
+TPP-SD sampler: the output distribution must EQUAL target AR sampling
+(paper's central claim, App. A.2/A.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+
+def _chisq(counts, probs):
+    import numpy as _np
+    f_exp = _np.asarray(probs, float)
+    f_exp = f_exp / f_exp.sum() * counts.sum()
+    f_exp *= counts.sum() / f_exp.sum()   # exact renormalization
+    return stats.chisquare(counts, f_exp, sum_check=False)
+
+from repro.configs.base import TPPConfig
+from repro.core import sampler, speculative as spec
+from repro.models import tpp
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_adjusted_discrete_exact():
+    """draft-sample + accept/resample must reproduce the target pmf."""
+    logp_t = jax.nn.log_softmax(jnp.array([0.5, -0.2, 1.0, -1.0]))
+    logp_d = jax.nn.log_softmax(jnp.array([-0.5, 0.8, 0.1, 0.3]))
+    B = 100_000
+
+    def one(r):
+        r1, r2, r3 = jax.random.split(r, 3)
+        k = jax.random.categorical(r1, logp_d)
+        acc = spec.accept_logratio(r2, logp_t[k], logp_d[k])
+        k_adj = spec.adjusted_discrete(r3, logp_t, logp_d)
+        return jnp.where(acc, k, k_adj)
+
+    ks = np.array(jax.vmap(one)(jax.random.split(RNG, B)))
+    counts = np.bincount(ks, minlength=4)
+    p = np.exp(np.array(logp_t))
+    res = _chisq(counts, p)
+    assert res.pvalue > 1e-3, (counts / B, p)
+
+
+def test_adjusted_discrete_identical_dists_fallback():
+    lp = jax.nn.log_softmax(jnp.array([0.1, 0.2, 0.3]))
+    k = spec.adjusted_discrete(RNG, lp, lp)
+    assert int(k) in (0, 1, 2)
+
+
+def test_adjusted_continuous_matches_adjusted_density():
+    """Theorem 1 sampler vs numerically-normalized max(0, g_T - g_D)."""
+    mix_t = tpp.MixParams(jnp.log(jnp.array([0.6, 0.4])),
+                          jnp.array([0.0, 1.0]), jnp.array([0.5, 0.3]))
+    mix_d = tpp.MixParams(jnp.log(jnp.array([0.5, 0.5])),
+                          jnp.array([0.3, 1.2]), jnp.array([0.6, 0.4]))
+    B = 30_000
+    taus = np.array(jax.vmap(
+        lambda r: spec.adjusted_continuous(r, mix_t, mix_d))(
+            jax.random.split(RNG, B)))
+    # numeric CDF of the adjusted density on a grid
+    grid = np.linspace(1e-4, 20.0, 20_000)
+
+    def pdf(mix, x):
+        return np.exp(np.array(tpp.interval_logpdf(mix, jnp.asarray(x))))
+
+    adj = np.maximum(0.0, pdf(mix_t, grid) - pdf(mix_d, grid))
+    Z = np.trapezoid(adj, grid)
+    cdf_vals = np.cumsum(adj) * (grid[1] - grid[0]) / Z
+
+    def cdf(x):
+        return np.interp(x, grid, np.clip(cdf_vals, 0, 1))
+
+    res = stats.kstest(taus, cdf)
+    assert res.pvalue > 1e-3, res
+
+
+def _tiny_pair(K=3):
+    cfg_t = TPPConfig(encoder="thp", num_layers=2, num_heads=2, d_model=16,
+                      d_ff=32, num_marks=K, num_mix=4)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+@pytest.mark.parametrize("gamma", [1, 3])
+def test_sd_first_event_matches_analytic_target(gamma):
+    """The first SD event's (tau, k) must follow the target model's own
+    heads exactly — compared against the ANALYTIC distributions."""
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    K = cfg_t.num_marks
+    cache = tpp.init_cache(cfg_t, 4)
+    h, _ = tpp.extend(cfg_t, pt, cache, jnp.zeros(1),
+                      jnp.full((1,), K, jnp.int32))
+    target_pk = np.array(jax.nn.softmax(tpp.type_logits(cfg_t, pt, h[0])))
+    mix = tpp.interval_params(cfg_t, pt, h[0])
+
+    B = 15_000
+    def sd_one(r):
+        res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 1e9, gamma, 3,
+                                    rng=r)
+        return res.times[0], res.types[0]
+
+    ts, ks = jax.vmap(sd_one)(jax.random.split(jax.random.PRNGKey(7), B))
+    ts, ks = np.array(ts), np.array(ks)
+    cnt = np.bincount(ks, minlength=K)
+    chi = _chisq(cnt, target_pk)
+    assert chi.pvalue > 1e-3, (cnt / B, target_pk)
+
+    def mix_cdf(x):
+        z = ((np.log(np.maximum(x, 1e-30))[..., None] - np.array(mix.mu))
+             / np.array(mix.sigma))
+        return (np.exp(np.array(mix.log_w)) * stats.norm.cdf(z)).sum(-1)
+
+    assert stats.kstest(ts, mix_cdf).pvalue > 1e-3
+
+
+def test_sd_same_model_accepts_everything():
+    cfg_t, _, pt, _ = _tiny_pair()
+    res = sampler.sample_sd_jit(cfg_t, cfg_t, pt, pt, 3.0, 4, 64,
+                                rng=jax.random.PRNGKey(3))
+    assert int(res.accepted) == int(res.drafted)
+
+
+def test_sd_sequence_dist_matches_ar():
+    """Whole-sequence statistics AR vs SD (two-sample tests)."""
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    B, T_END, EMAX = 400, 2.0, 64
+    ra = sampler.sample_ar_batch(cfg_t, pt, jax.random.PRNGKey(4), T_END,
+                                 EMAX, B)
+    rs = sampler.sample_sd_batch(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(5),
+                                 T_END, 4, EMAX, B)
+    na, ns = np.array(ra.n), np.array(rs.n)
+    assert stats.ks_2samp(na, ns).pvalue > 1e-3
+    fa = np.array(ra.times[:, 0])[na > 0]
+    fs = np.array(rs.times[:, 0])[ns > 0]
+    assert stats.ks_2samp(fa, fs).pvalue > 1e-3
+
+
+def test_sd_host_and_jit_agree_in_distribution():
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    rj = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 2.0, 3, 32,
+                               rng=jax.random.PRNGKey(6))
+    rh = sampler.sample_sd_host(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(6),
+                                2.0, 3, 32)
+    # identical rng stream + identical round function => identical output
+    assert int(rj.n) == int(rh.n)
+    np.testing.assert_allclose(np.array(rj.times[:int(rj.n)]),
+                               np.array(rh.times[:int(rh.n)]), rtol=1e-6)
+
+
+def test_sd_gamma_one_and_tiny_budget_edges():
+    """gamma=1 and max_events smaller than one window must stay correct."""
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    r1 = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 5.0, 1, 2,
+                               rng=jax.random.PRNGKey(0))
+    assert 0 <= int(r1.n) <= 2
+    assert bool(jnp.all(jnp.diff(r1.times[:int(r1.n)]) > 0)) or int(r1.n) < 2
+    # large gamma vs small horizon: overshooting events are truncated
+    r2 = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 0.05, 8, 32,
+                               rng=jax.random.PRNGKey(1))
+    assert bool(jnp.all(r2.times[:int(r2.n)] <= 0.05))
+
+
+def test_sd_times_strictly_increasing():
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 4.0, 5, 128,
+                                rng=jax.random.PRNGKey(2))
+    n = int(res.n)
+    t = np.array(res.times[:n])
+    assert np.all(np.diff(t) > 0), "event times must be strictly increasing"

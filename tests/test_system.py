@@ -1,0 +1,112 @@
+"""End-to-end behaviour test of the paper's pipeline (reduced scale):
+
+  simulate Hawkes -> train target + draft CDF-TPPs -> sample with AR and
+  TPP-SD -> both sample sets must (a) pass the time-rescaling KS test
+  against the GROUND-TRUTH process within the 95% band and (b) agree with
+  each other; SD must use fewer target forwards per event than AR.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.configs.base import TPPConfig
+from repro.core import sampler, thinning as thin
+from repro.data import synthetic as ds
+from repro.metrics import ks_confidence_band, ks_for_samples
+from repro.train import trainer
+
+
+@pytest.fixture(scope="module")
+def trained_pair():
+    data = ds.make_dataset("hawkes", n_seqs=80, t_end=10.0, seed=0)
+    cfg_t = TPPConfig(encoder="thp", num_layers=2, num_heads=2, d_model=32,
+                      d_ff=64, num_marks=1, num_mix=8)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    tcfg = trainer.TPPTrainConfig(max_epochs=8, batch_size=16, patience=3)
+    pt, _ = trainer.train_tpp(cfg_t, data, tcfg)
+    pd, _ = trainer.train_tpp(cfg_d, data, tcfg)
+    return data, cfg_t, cfg_d, pt, pd
+
+
+def _to_seqs(result):
+    out = []
+    times = np.array(result.times)
+    types = np.array(result.types)
+    ns = np.array(result.n)
+    for i in range(times.shape[0]):
+        n = int(ns[i])
+        out.append((times[i, :n], types[i, :n]))
+    return out
+
+
+def test_end_to_end_sampling_quality_and_speed(trained_pair):
+    data, cfg_t, cfg_d, pt, pd = trained_pair
+    B, EMAX, GAMMA = 48, 128, 8
+    ra = sampler.sample_ar_batch(cfg_t, pt, jax.random.PRNGKey(1),
+                                 data.t_end, EMAX, B)
+    rs = sampler.sample_sd_batch(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(2),
+                                 data.t_end, GAMMA, EMAX, B)
+    seqs_ar, seqs_sd = _to_seqs(ra), _to_seqs(rs)
+    n_ar = sum(len(t) for t, _ in seqs_ar)
+    n_sd = sum(len(t) for t, _ in seqs_sd)
+    assert n_ar > 100 and n_sd > 100
+
+    # (a) both within (a generous multiple of) the KS band vs ground truth
+    ks_ar = ks_for_samples(data.process, seqs_ar)
+    ks_sd = ks_for_samples(data.process, seqs_sd)
+    band_sd = ks_confidence_band(n_sd)
+    # the model is only briefly trained; AR and SD must be EQUALLY good
+    assert ks_sd < max(3 * band_sd, ks_ar * 1.5 + band_sd)
+
+    # (b) AR vs SD two-sample agreement on event counts
+    na = np.array(ra.n)
+    ns = np.array(rs.n)
+    assert stats.ks_2samp(na, ns).pvalue > 1e-3
+
+    # (c) speedup mechanism: target forwards per committed event < 1
+    rounds = float(np.array(rs.rounds).sum())
+    events = float(ns.sum())
+    assert rounds < events, "SD must verify multiple events per forward"
+    alpha = float(np.array(rs.accepted).sum()) / max(
+        1.0, float(np.array(rs.drafted).sum()))
+    assert 0.0 < alpha <= 1.0
+
+
+def test_thinning_baseline_matches_ground_truth():
+    proc = thin.Hawkes()
+    rng = np.random.default_rng(0)
+    seqs = [thin.thinning_sample(proc, 30.0, rng) for _ in range(20)]
+    ks = ks_for_samples(proc, seqs)
+    n = sum(len(t) for t, _ in seqs)
+    assert ks < ks_confidence_band(n) * 1.5
+
+
+def test_cif_thinning_neural_baseline_matches_ar():
+    """App. D.1: CIF thinning on the neural model samples the same
+    distribution as AR but needs >> 1 target forwards per event."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import TPPConfig
+    from repro.core import cif_thinning, sampler
+
+    cfg = TPPConfig(encoder="thp", num_layers=1, num_heads=1, d_model=16,
+                    d_ff=32, num_marks=2, num_mix=4)
+    params = __import__("repro.models.tpp", fromlist=["x"]).init_params(
+        cfg, jax.random.PRNGKey(0))
+    firsts = []
+    forwards = events = 0
+    for i in range(40):
+        r = cif_thinning.sample_thinning_host(
+            cfg, params, jax.random.PRNGKey(100 + i), 3.0, 32)
+        forwards += int(r.forwards)
+        events += int(r.n)
+        if int(r.n):
+            firsts.append(float(r.times[0]))
+    assert forwards / max(events, 1) > 1.0, "thinning must cost >1 fwd/event"
+    ra = sampler.sample_ar_batch(cfg, params, jax.random.PRNGKey(7), 3.0,
+                                 32, 200)
+    na = np.array(ra.n)
+    fa = np.array(ra.times[:, 0])[na > 0]
+    assert stats.ks_2samp(np.array(firsts), fa).pvalue > 1e-3

@@ -1,0 +1,107 @@
+"""CDF-based Transformer TPP model tests (paper Sec. 4.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TPPConfig, paper_draft, paper_target
+from repro.models import tpp
+
+RNG = jax.random.PRNGKey(0)
+ENCODERS = ["thp", "sahp", "attnhp"]
+
+
+def _cfg(enc, **kw):
+    base = dict(encoder=enc, num_layers=2, num_heads=2, d_model=16, d_ff=32,
+                num_marks=3, num_mix=4)
+    base.update(kw)
+    return TPPConfig(**base)
+
+
+def _seq(n=10):
+    times = jnp.cumsum(jax.random.uniform(RNG, (n,), minval=0.1, maxval=1.0))
+    types = jax.random.randint(jax.random.fold_in(RNG, 1), (n,), 0, 3)
+    return times, types
+
+
+@pytest.mark.parametrize("enc", ENCODERS)
+def test_incremental_extend_matches_full_encode(enc):
+    cfg = _cfg(enc)
+    p = tpp.init_params(cfg, RNG)
+    times, types = _seq()
+    enc_t = jnp.concatenate([jnp.zeros(1), times])
+    enc_k = jnp.concatenate([jnp.full((1,), 3, jnp.int32), types])
+    h_full = tpp.encode(cfg, p, enc_t, enc_k)
+    cache = tpp.init_cache(cfg, 16)
+    h1, cache = tpp.extend(cfg, p, cache, enc_t[:4], enc_k[:4])
+    h2, cache = tpp.extend(cfg, p, cache, enc_t[4:], enc_k[4:])
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2])),
+                               np.asarray(h_full), atol=1e-5)
+
+
+@pytest.mark.parametrize("enc", ENCODERS)
+def test_loglik_finite_grads(enc):
+    cfg = _cfg(enc)
+    p = tpp.init_params(cfg, RNG)
+    times, types = _seq()
+    mask = jnp.ones_like(times)
+    ll = tpp.loglik(cfg, p, times, types, mask, 12.0)
+    assert bool(jnp.isfinite(ll))
+    g = jax.grad(lambda p: -tpp.loglik(cfg, p, times, types, mask, 12.0))(p)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(g))
+
+
+def test_loglik_respects_mask():
+    """padding events must not change the likelihood."""
+    cfg = _cfg("thp")
+    p = tpp.init_params(cfg, RNG)
+    times, types = _seq(6)
+    mask = jnp.ones(6)
+    ll1 = tpp.loglik(cfg, p, times, types, mask, 10.0)
+    times_pad = jnp.concatenate([times, jnp.zeros(3)])
+    types_pad = jnp.concatenate([types, jnp.zeros(3, jnp.int32)])
+    mask_pad = jnp.concatenate([mask, jnp.zeros(3)])
+    ll2 = tpp.loglik(cfg, p, times_pad, types_pad, mask_pad, 10.0)
+    # survival term reads h[n]; the BOS+masked-causal encoder makes the
+    # padded-history states identical at the valid positions
+    np.testing.assert_allclose(float(ll1), float(ll2), rtol=1e-5)
+
+
+def test_survival_term_decreases_loglik_for_longer_horizon():
+    cfg = _cfg("thp")
+    p = tpp.init_params(cfg, RNG)
+    times, types = _seq(5)
+    mask = jnp.ones(5)
+    ll_short = tpp.loglik(cfg, p, times, types, mask, float(times[-1]) + 0.1)
+    ll_long = tpp.loglik(cfg, p, times, types, mask, float(times[-1]) + 50.0)
+    assert float(ll_long) <= float(ll_short)
+
+
+def test_interval_params_sigma_clipped():
+    cfg = _cfg("thp", sigma_min=1e-2, sigma_max=5.0)
+    p = tpp.init_params(cfg, RNG)
+    h = jax.random.normal(RNG, (7, cfg.d_model)) * 100.0
+    mix = tpp.interval_params(cfg, p, h)
+    assert float(mix.sigma.min()) >= 1e-2 - 1e-6
+    assert float(mix.sigma.max()) <= 5.0 + 1e-6
+    np.testing.assert_allclose(np.asarray(jnp.exp(mix.log_w).sum(-1)), 1.0,
+                               rtol=1e-5)
+
+
+def test_paper_configs():
+    t = paper_target("attnhp", num_marks=5)
+    d = paper_draft("attnhp", num_marks=5)
+    assert t.num_layers == 20 and t.num_heads == 8
+    assert d.num_layers == 1 and d.num_heads == 1
+    assert t.d_model == 64 and t.num_mix == 64  # paper Sec. C.2
+
+
+@pytest.mark.parametrize("enc", ENCODERS)
+def test_temporal_encoding_shapes_and_finiteness(enc):
+    cfg = _cfg(enc)
+    p = tpp.init_params(cfg, RNG)
+    t = jnp.array([0.0, 0.5, 100.0, 1e4])
+    z = tpp.temporal_encoding(cfg, p, t)
+    assert z.shape == (4, cfg.d_model)
+    assert bool(jnp.isfinite(z).all())
+    assert float(jnp.abs(z).max()) <= 1.0 + 1e-5
