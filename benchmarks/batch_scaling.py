@@ -12,8 +12,8 @@ import jax
 import numpy as np
 
 from repro.configs.base import TPPConfig
-from repro.core import sampler
 from repro.data import synthetic as ds
+from repro.sampling import SamplerSpec, build_sampler
 from repro.train import trainer
 
 
@@ -33,16 +33,17 @@ def main():
     pd, _ = trainer.train_tpp(cfg_d, data, tcfg)
     print("name,us_per_call,derived")
     for B in (1, 4, 16, 64):
-        fn = lambda: sampler.sample_sd_batch(
-            cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(0), args.t_end,
-            args.gamma, args.emax, B)
-        out = fn()
+        fn = build_sampler(
+            SamplerSpec(method="sd", execution="vmap", t_end=args.t_end,
+                        gamma=args.gamma, max_events=args.emax, batch=B),
+            cfg_t, pt, cfg_d, pd)
+        out = fn(jax.random.PRNGKey(0))
         jax.block_until_ready(out.times)
         t0 = time.perf_counter()
-        out = fn()
+        out = fn(jax.random.PRNGKey(0))
         jax.block_until_ready(out.times)
         dt = time.perf_counter() - t0
-        ev = int(np.sum(np.array(out.n)))
+        ev = out.stats().events
         print(f"batch_scaling/B{B},{dt / B * 1e6:.1f},"
               f"events={ev};events_per_sec={ev / dt:.0f};"
               f"seconds={dt:.3f}")

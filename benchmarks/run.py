@@ -23,9 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TPPConfig, paper_draft, paper_target
-from repro.core import sampler, thinning as thin
+from repro.core import thinning as thin
 from repro.data import synthetic as ds
 from repro import metrics as M
+from repro.sampling import SamplerSpec, build_sampler
 from repro.train import trainer
 
 RESULTS: List[str] = []
@@ -66,14 +67,6 @@ def trained_pair(dataset, encoder, paper_scale, epochs):
     return _TRAIN_CACHE[key]
 
 
-def to_seqs(result) -> List[Tuple[np.ndarray, np.ndarray]]:
-    times, types, ns = (np.array(result.times), np.array(result.types),
-                        np.atleast_1d(np.array(result.n)))
-    times = np.atleast_2d(times)
-    types = np.atleast_2d(types)
-    return [(times[i, :ns[i]], types[i, :ns[i]]) for i in range(len(ns))]
-
-
 def timed(fn, *args, **kw):
     out = fn(*args, **kw)
     jax.block_until_ready(jax.tree.leaves(out))
@@ -84,31 +77,37 @@ def timed(fn, *args, **kw):
 
 
 def sample_both(cfg_t, cfg_d, pt, pd, t_end, gamma, emax, B, seed=0):
-    """(ar_seqs, sd_seqs, T_ar, T_sd, alpha, sd_result), jitted samplers."""
-    ra, t_ar = timed(sampler.sample_ar_batch, cfg_t, pt,
-                     jax.random.PRNGKey(seed), t_end, emax, B)
-    rs, t_sd = timed(sampler.sample_sd_batch, cfg_t, cfg_d, pt, pd,
-                     jax.random.PRNGKey(seed + 1), t_end, gamma, emax, B)
-    alpha = float(np.sum(np.array(rs.accepted))) / max(
-        1.0, float(np.sum(np.array(rs.drafted))))
-    return to_seqs(ra), to_seqs(rs), t_ar, t_sd, alpha, rs
+    """(ar_seqs, sd_seqs, T_ar, T_sd, alpha, sd_result) via the engine's
+    vmap executors (built samplers are compilation-cached per spec)."""
+    ar_fn = build_sampler(
+        SamplerSpec(method="ar", execution="vmap", t_end=t_end,
+                    max_events=emax, batch=B), cfg_t, pt)
+    sd_fn = build_sampler(
+        SamplerSpec(method="sd", execution="vmap", t_end=t_end, gamma=gamma,
+                    max_events=emax, batch=B), cfg_t, pt, cfg_d, pd)
+    ra, t_ar = timed(ar_fn, jax.random.PRNGKey(seed))
+    rs, t_sd = timed(sd_fn, jax.random.PRNGKey(seed + 1))
+    return (ra.to_seqs(), rs.to_seqs(), t_ar, t_sd,
+            rs.stats().acceptance_rate, rs)
 
 
 def host_speedup(cfg_t, cfg_d, pt, pd, t_end, gamma, emax, n_seq=2, seed=0):
     """Paper-faithful host-loop wall times (one sync per event / round)."""
-    sampler.sample_ar_host(cfg_t, pt, jax.random.PRNGKey(99), t_end, emax)
+    ar_fn = build_sampler(
+        SamplerSpec(method="ar", execution="host", t_end=t_end,
+                    max_events=emax), cfg_t, pt)
+    sd_fn = build_sampler(
+        SamplerSpec(method="sd", execution="host", t_end=t_end, gamma=gamma,
+                    max_events=emax), cfg_t, pt, cfg_d, pd)
+    ar_fn(jax.random.PRNGKey(99))
     t0 = time.perf_counter()
     for i in range(n_seq):
-        sampler.sample_ar_host(cfg_t, pt, jax.random.PRNGKey(seed + i),
-                               t_end, emax)
+        ar_fn(jax.random.PRNGKey(seed + i))
     t_ar = time.perf_counter() - t0
-    sampler.sample_sd_host(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(98),
-                           t_end, gamma, emax)
+    sd_fn(jax.random.PRNGKey(98))
     t0 = time.perf_counter()
     for i in range(n_seq):
-        sampler.sample_sd_host(cfg_t, cfg_d, pt, pd,
-                               jax.random.PRNGKey(seed + 10 + i), t_end,
-                               gamma, emax)
+        sd_fn(jax.random.PRNGKey(seed + 10 + i))
     t_sd = time.perf_counter() - t0
     return t_ar, t_sd
 
@@ -181,8 +180,8 @@ def _ar_next_event(cfg, params, hist_t, hist_k, n_rep):
 
 def _sd_next_event(cfg_t, cfg_d, pt, pd, hist_t, hist_k, n_rep, gamma=4):
     """The next event after a fixed history via one SD round, vmapped."""
-    from repro.core.sampler import _SDState, _sd_round
     from repro.models import tpp as tppm
+    from repro.sampling.loops import SDState, sd_round
     Kb = cfg_t.num_marks
     enc_t = jnp.concatenate([jnp.zeros(1),
                              jnp.asarray(hist_t[:-1], jnp.float32)])
@@ -194,11 +193,11 @@ def _sd_next_event(cfg_t, cfg_d, pt, pd, hist_t, hist_k, n_rep, gamma=4):
         cache_d = tppm.init_cache(cfg_d, len(hist_t) + gamma + 8)
         _, cache_t = tppm.extend(cfg_t, pt, cache_t, enc_t, enc_k)
         _, cache_d = tppm.extend(cfg_d, pd, cache_d, enc_t, enc_k)
-        st = _SDState(jnp.zeros(gamma + 2), jnp.zeros(gamma + 2, jnp.int32),
-                      jnp.int32(0), jnp.float32(hist_t[-1]),
-                      jnp.int32(hist_k[-1]), cache_t, cache_d, r,
-                      jnp.int32(0), jnp.int32(0), jnp.int32(0))
-        st = _sd_round(cfg_t, cfg_d, pt, pd, gamma, st)
+        st = SDState(jnp.zeros(gamma + 2), jnp.zeros(gamma + 2, jnp.int32),
+                     jnp.int32(0), jnp.float32(hist_t[-1]),
+                     jnp.int32(hist_k[-1]), cache_t, cache_d, r,
+                     jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        st = sd_round(cfg_t, cfg_d, pt, pd, gamma, st)
         return st.times[0], st.types[0]
 
     ts, ks = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(7), n_rep))
@@ -326,13 +325,14 @@ def appendix_d1_thinning(args):
     sd_rounds = float(np.sum(np.array(rs.rounds)))
     # CIF-based thinning ON THE NEURAL MODEL (App. D.1's rejected design):
     # every proposal costs a target forward
-    from repro.core import cif_thinning
+    thin_fn = build_sampler(
+        SamplerSpec(method="thinning", execution="host", t_end=args.t_end,
+                    max_events=args.emax), cfg_t, pt)
     nf = ne = 0
     for i in range(4):
-        r = cif_thinning.sample_thinning_host(
-            cfg_t, pt, jax.random.PRNGKey(50 + i), args.t_end, args.emax)
-        nf += int(r.forwards)
-        ne += int(r.n)
+        st = thin_fn(jax.random.PRNGKey(50 + i)).stats()
+        nf += st.rounds
+        ne += st.events
     emit("appendix_d1/verify_calls",
          t_thin / max(n_events, 1) * 1e6,
          f"gt_thinning_proposals_per_event={n_proposals / max(n_events, 1):.2f};"

@@ -10,9 +10,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import TPPConfig
-from repro.core import sampler
 from repro.data import synthetic as ds
 from repro import metrics as M
+from repro.sampling import SamplerSpec, build_sampler
 from repro.train import trainer
 
 
@@ -32,28 +32,27 @@ def main():
 
     print("3) sampling 16 sequences with AR and TPP-SD (gamma=8) ...")
     B, EMAX = 16, 256
-    ra = sampler.sample_ar_batch(cfg_t, params_t, jax.random.PRNGKey(1),
-                                 data.t_end, EMAX, B)
-    rs = sampler.sample_sd_batch(cfg_t, cfg_d, params_t, params_d,
-                                 jax.random.PRNGKey(2), data.t_end, 8,
-                                 EMAX, B)
-    seqs_ar = [(np.array(ra.times[i, :ra.n[i]]),
-                np.array(ra.types[i, :ra.n[i]])) for i in range(B)]
-    seqs_sd = [(np.array(rs.times[i, :rs.n[i]]),
-                np.array(rs.types[i, :rs.n[i]])) for i in range(B)]
+    base = SamplerSpec(execution="vmap", t_end=data.t_end, max_events=EMAX,
+                       batch=B)
+    ar_fn = build_sampler(base.replace(method="ar"), cfg_t, params_t)
+    sd_fn = build_sampler(base.replace(method="sd", gamma=8),
+                          cfg_t, params_t, cfg_d, params_d)
+    ra = ar_fn(jax.random.PRNGKey(1))
+    rs = sd_fn(jax.random.PRNGKey(2))
+    seqs_ar, seqs_sd = ra.to_seqs(), rs.to_seqs()
 
     print("4) quality (time-rescaling KS vs ground truth):")
-    n_ar = sum(len(t) for t, _ in seqs_ar)
-    n_sd = sum(len(t) for t, _ in seqs_sd)
+    n_ar = ra.stats().events
+    sd_stats = rs.stats()
+    n_sd = sd_stats.events
     print(f"   AR:     KS={M.ks_for_samples(data.process, seqs_ar):.4f} "
           f"(95% band {M.ks_confidence_band(n_ar):.4f}, n={n_ar})")
     print(f"   TPP-SD: KS={M.ks_for_samples(data.process, seqs_sd):.4f} "
           f"(95% band {M.ks_confidence_band(n_sd):.4f}, n={n_sd})")
-    alpha = float(np.sum(np.array(rs.accepted))) / max(
-        1, int(np.sum(np.array(rs.drafted))))
-    epf = n_sd / max(1, int(np.sum(np.array(rs.rounds))))
-    print(f"5) speed mechanism: acceptance rate alpha={alpha:.2f}, "
-          f"{epf:.2f} events per target forward (AR = 1.0)")
+    print(f"5) speed mechanism: acceptance rate "
+          f"alpha={sd_stats.acceptance_rate:.2f}, "
+          f"{sd_stats.events_per_forward:.2f} events per target forward "
+          f"(AR = 1.0)")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, smoke_variant
-from repro.core import llm_sd
 from repro.models import registry
+from repro.sampling import SamplerSpec, build_sampler
 
 
 def main():
@@ -35,24 +35,22 @@ def main():
     pd = md.init_params(jax.random.PRNGKey(1))
     prompt = jnp.arange(8, dtype=jnp.int32)
 
+    base = SamplerSpec(domain="token", execution="host",
+                       max_events=args.new_tokens, max_len=256)
+    ar_fn = build_sampler(base.replace(method="ar"), cfg_t, pt)
+    sd_fn = build_sampler(base.replace(method="sd", gamma=args.gamma),
+                          cfg_t, pt, cfg_d, pd)
     t0 = time.time()
-    ar = llm_sd.serve_autoregressive(cfg_t, pt, mt, prompt,
-                                     jax.random.PRNGKey(2),
-                                     max_new_tokens=args.new_tokens,
-                                     max_len=256)
+    ar = ar_fn(jax.random.PRNGKey(2), prompt).stats()
     t_ar = time.time() - t0
     t0 = time.time()
-    sd = llm_sd.serve_speculative(cfg_t, cfg_d, pt, pd, mt, md, prompt,
-                                  jax.random.PRNGKey(2),
-                                  max_new_tokens=args.new_tokens,
-                                  gamma=args.gamma, max_len=256)
+    sd = sd_fn(jax.random.PRNGKey(2), prompt).stats()
     t_sd = time.time() - t0
-    alpha = sd.accepted / max(1, sd.drafted)
-    print(f"AR : {ar.n} tokens in {t_ar:.2f}s "
-          f"({ar.n} target forwards)")
-    print(f"SD : {sd.n} tokens in {t_sd:.2f}s "
-          f"({sd.rounds} target forwards, alpha={alpha:.2f}, "
-          f"{sd.n / max(1, sd.rounds):.2f} tokens/target-forward)")
+    print(f"AR : {ar.events} tokens in {t_ar:.2f}s "
+          f"({ar.events} target forwards)")
+    print(f"SD : {sd.events} tokens in {t_sd:.2f}s "
+          f"({sd.rounds} target forwards, alpha={sd.acceptance_rate:.2f}, "
+          f"{sd.events_per_forward:.2f} tokens/target-forward)")
     print("note: on this 1-core CPU the wall-clock gain tracks dispatch "
           "latency, not FLOPs; tokens/target-forward is the "
           "hardware-independent gain (= the GPU/TPU speedup driver).")

@@ -16,9 +16,9 @@ import jax
 import numpy as np
 
 from repro.configs.base import TPPConfig, paper_draft, paper_target
-from repro.core import sampler
 from repro.data import synthetic as ds
 from repro import metrics as M
+from repro.sampling import SamplerSpec, build_sampler
 from repro.train import checkpoint, trainer
 
 
@@ -69,23 +69,22 @@ def main():
     print(f"test loglik/seq: target {test_ll_t:.3f}  draft {test_ll_d:.3f}")
 
     B, EMAX = 16, 512
-    ra = sampler.sample_ar_batch(cfg_t, params_t, jax.random.PRNGKey(1),
-                                 data.t_end, EMAX, B)
-    rs = sampler.sample_sd_batch(cfg_t, cfg_d, params_t, params_d,
-                                 jax.random.PRNGKey(2), data.t_end,
-                                 args.gamma, EMAX, B)
-    seqs_sd = [(np.array(rs.times[i, :rs.n[i]]),
-                np.array(rs.types[i, :rs.n[i]])) for i in range(B)]
+    base = SamplerSpec(execution="vmap", t_end=data.t_end, max_events=EMAX,
+                       batch=B)
+    ra = build_sampler(base.replace(method="ar"),
+                       cfg_t, params_t)(jax.random.PRNGKey(1))
+    rs = build_sampler(base.replace(method="sd", gamma=args.gamma),
+                       cfg_t, params_t, cfg_d, params_d)(jax.random.PRNGKey(2))
+    seqs_sd = rs.to_seqs()
+    sd_stats = rs.stats()
     report = {
         "dataset": args.dataset, "encoder": args.encoder,
         "train_seconds": round(train_s, 1),
         "test_ll_target": test_ll_t, "test_ll_draft": test_ll_d,
-        "mean_events_ar": float(np.mean(np.array(ra.n))),
-        "mean_events_sd": float(np.mean(np.array(rs.n))),
-        "alpha": float(np.sum(np.array(rs.accepted)))
-        / max(1, int(np.sum(np.array(rs.drafted)))),
-        "events_per_target_forward": float(np.sum(np.array(rs.n)))
-        / max(1, int(np.sum(np.array(rs.rounds)))),
+        "mean_events_ar": float(np.mean(np.array(ra.lengths))),
+        "mean_events_sd": float(np.mean(np.array(rs.lengths))),
+        "alpha": sd_stats.acceptance_rate,
+        "events_per_target_forward": sd_stats.events_per_forward,
     }
     if data.process is not None:
         report["ks_sd"] = M.ks_for_samples(data.process, seqs_sd)

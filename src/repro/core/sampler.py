@@ -1,291 +1,91 @@
-"""TPP samplers: naive autoregressive (Sec. 4.2) and TPP-SD (Sec. 4.3).
+"""DEPRECATED: thin shims over ``repro.sampling``.
 
-Two execution styles for each:
+The ``sample_{ar,sd}_{host,jit,batch}`` function zoo moved into the
+config-driven engine::
 
-  - ``*_host``: the paper-faithful host loop (one device sync per event /
-    per propose-verify round, as in the paper's PyTorch implementation).
-  - ``*_jit``:  the TPU-adapted sampler — the whole loop lives inside one
-    ``lax.while_loop`` (fixed shapes, cache rollback by counter), so a
-    full sequence is one device call, and ``jax.vmap`` batches whole
-    sequences with per-lane lengths. This is the beyond-paper fast path
-    recorded separately in EXPERIMENTS.md §Perf.
+    from repro.sampling import SamplerSpec, build_sampler
+    fn = build_sampler(SamplerSpec(method="sd", execution="vmap",
+                                   t_end=t_end, gamma=gamma,
+                                   max_events=max_events, batch=B),
+                       cfg_t, params_t, cfg_d, params_d)
+    batch = fn(rng)   # SampleBatch: [B, E] + acceptance stats
 
-All samplers operate on a single sequence; batch via vmap.
+These wrappers keep the old signatures (and rng streams) alive for
+existing callers and will be removed once nothing imports them.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+import warnings
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from ..models import tpp
-from . import speculative as spec
+from ..sampling import loops as _loops
+from ..sampling.result import SeqResult as SampleResult  # noqa: F401 (bc)
 
-
-class SampleResult(NamedTuple):
-    times: jnp.ndarray     # [max_events]
-    types: jnp.ndarray     # [max_events]
-    n: jnp.ndarray         # valid count (times <= t_end)
-    drafted: jnp.ndarray   # events proposed by the draft model
-    accepted: jnp.ndarray  # drafted events accepted by verification
-    rounds: jnp.ndarray    # propose-verify rounds (== target forwards)
-
-
-def _bos(cfg):
-    return jnp.float32(0.0), jnp.int32(cfg.num_marks)
+# Backward-compatible aliases for code that reached into the internals.
+# Resolved lazily (PEP 562): this module can be imported while
+# ``sampling.loops`` is still mid-initialization in the core<->sampling
+# import cycle.
+_LAZY_ALIASES = {
+    "_ARState": "ARState", "_SDState": "SDState", "_sd_round": "sd_round",
+    "_draft_window": "draft_window", "_sample_event": "sample_event",
+    "_bos": "bos_event",
+}
 
 
-def _sample_event(cfg, params, rng, h, t_cur):
-    r1, r2 = jax.random.split(rng)
-    mix = tpp.interval_params(cfg, params, h)
-    tau = tpp.sample_interval(r1, mix)
-    logits = tpp.type_logits(cfg, params, h)
-    k = jax.random.categorical(r2, logits)
-    return t_cur + tau, k.astype(jnp.int32)
+def __getattr__(name):
+    if name in _LAZY_ALIASES:
+        return getattr(_loops, _LAZY_ALIASES[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-# ---------------------------------------------------------------------------
-# autoregressive sampling
-# ---------------------------------------------------------------------------
-
-class _ARState(NamedTuple):
-    times: jnp.ndarray
-    types: jnp.ndarray
-    n: jnp.ndarray
-    t_last: jnp.ndarray
-    h: jnp.ndarray
-    cache: dict
-    rng: jnp.ndarray
+def _warn(old: str, spec_hint: str):
+    warnings.warn(
+        f"repro.core.sampler.{old} is deprecated; use "
+        f"repro.sampling.build_sampler(SamplerSpec({spec_hint}), ...)",
+        DeprecationWarning, stacklevel=3)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3, 4))
 def sample_ar_jit(cfg, params, rng, t_end: float, max_events: int
                   ) -> SampleResult:
-    t0, k0 = _bos(cfg)
-    cache = tpp.init_cache(cfg, max_events + 2)
-    h, cache = tpp.extend(cfg, params, cache, t0[None], k0[None])
-
-    def cond(s: _ARState):
-        return jnp.logical_and(s.t_last < t_end, s.n < max_events)
-
-    def body(s: _ARState):
-        rng, r = jax.random.split(s.rng)
-        t_new, k_new = _sample_event(cfg, params, r, s.h, s.t_last)
-        h, cache = tpp.extend(cfg, params, s.cache, t_new[None], k_new[None])
-        times = s.times.at[s.n].set(t_new)
-        types = s.types.at[s.n].set(k_new)
-        return _ARState(times, types, s.n + 1, t_new, h[0], cache, rng)
-
-    init = _ARState(jnp.zeros((max_events,), jnp.float32),
-                    jnp.zeros((max_events,), jnp.int32),
-                    jnp.int32(0), t0, h[0], cache, rng)
-    s = lax.while_loop(cond, body, init)
-    valid = jnp.sum((jnp.arange(max_events) < s.n)
-                    & (s.times <= t_end)).astype(jnp.int32)
-    return SampleResult(s.times, s.types, valid, jnp.int32(0), jnp.int32(0),
-                        s.n)
+    _warn("sample_ar_jit", "method='ar', execution='jit'")
+    return _loops.run_ar_device(cfg, params, rng, t_end, max_events)
 
 
 def sample_ar_host(cfg, params, rng, t_end: float, max_events: int
                    ) -> SampleResult:
-    """Paper-style host loop: one jitted model call (and one host sync)
-    per generated event."""
-    extend = jax.jit(lambda c, t, k: tpp.extend(cfg, params, c, t, k))
-    sample = jax.jit(lambda r, h, t: _sample_event(cfg, params, r, h, t))
-    t0, k0 = _bos(cfg)
-    cache = tpp.init_cache(cfg, max_events + 2)
-    h, cache = extend(cache, t0[None], k0[None])
-    times, types = [], []
-    t_last = 0.0
-    steps = 0
-    while t_last < t_end and len(times) < max_events:
-        rng, r = jax.random.split(rng)
-        t_new, k_new = sample(r, h[0], jnp.float32(t_last))
-        t_new = float(t_new)
-        h, cache = extend(cache, jnp.float32(t_new)[None],
-                          jnp.int32(k_new)[None])
-        times.append(t_new)
-        types.append(int(k_new))
-        t_last = t_new
-        steps += 1
-    times_a = jnp.zeros((max_events,), jnp.float32)
-    types_a = jnp.zeros((max_events,), jnp.int32)
-    keep = [(t, k) for t, k in zip(times, types) if t <= t_end]
-    n = len(keep)
-    if n:
-        times_a = times_a.at[:n].set(jnp.array([t for t, _ in keep]))
-        types_a = types_a.at[:n].set(jnp.array([k for _, k in keep]))
-    return SampleResult(times_a, types_a, jnp.int32(n), jnp.int32(0),
-                        jnp.int32(0), jnp.int32(steps))
+    _warn("sample_ar_host", "method='ar', execution='host'")
+    return _loops.run_ar_host(cfg, params, rng, t_end, max_events)
 
 
-# ---------------------------------------------------------------------------
-# TPP-SD (Algorithm 1)
-# ---------------------------------------------------------------------------
-
-class _SDState(NamedTuple):
-    times: jnp.ndarray
-    types: jnp.ndarray
-    n: jnp.ndarray
-    t_pend: jnp.ndarray
-    k_pend: jnp.ndarray
-    cache_t: dict
-    cache_d: dict
-    rng: jnp.ndarray
-    drafted: jnp.ndarray
-    accepted: jnp.ndarray
-    rounds: jnp.ndarray
-
-
-def _draft_window(cfg_d, params_d, rng, cache_d, t_pend, k_pend, gamma):
-    """Draft gamma events autoregressively; record densities (Alg.1 l.4-6).
-
-    The pending event is ingested first (it is committed but not yet in
-    either cache).
-    """
-    h, cache_d = tpp.extend(cfg_d, params_d, cache_d, t_pend[None],
-                            k_pend[None])
-
-    def step(carry, r):
-        h, cache_d, t_cur = carry
-        r1, r2 = jax.random.split(r)
-        mix = tpp.interval_params(cfg_d, params_d, h)
-        tau = tpp.sample_interval(r1, mix)
-        logits = jax.nn.log_softmax(tpp.type_logits(cfg_d, params_d, h))
-        k = jax.random.categorical(r2, logits).astype(jnp.int32)
-        t_new = t_cur + tau
-        h2, cache_d = tpp.extend(cfg_d, params_d, cache_d, t_new[None],
-                                 k[None])
-        out = (tau, k, t_new, mix.log_w, mix.mu, mix.sigma, logits)
-        return (h2[0], cache_d, t_new), out
-
-    (h_last, cache_d, _), outs = lax.scan(
-        step, (h[0], cache_d, t_pend), jax.random.split(rng, gamma))
-    d_tau, d_k, d_t, d_logw, d_mu, d_sigma, d_logits = outs
-    d_mix = tpp.MixParams(d_logw, d_mu, d_sigma)
-    return cache_d, d_tau, d_k, d_t, d_mix, d_logits
-
-
-def _sd_round(cfg_t, cfg_d, params_t, params_d, gamma, s: _SDState
-              ) -> _SDState:
-    rng, r_draft, r_ver, r_new1, r_new2, r_new3 = jax.random.split(s.rng, 6)
-    # --- draft ---
-    cache_d, d_tau, d_k, d_t, d_mix, d_logits = _draft_window(
-        cfg_d, params_d, r_draft, s.cache_d, s.t_pend, s.k_pend, gamma)
-    # --- verify: target processes pending + drafts in ONE parallel forward
-    ver_t = jnp.concatenate([s.t_pend[None], d_t])
-    ver_k = jnp.concatenate([s.k_pend[None], d_k])
-    h_t, cache_t = tpp.extend(cfg_t, params_t, s.cache_t, ver_t, ver_k)
-    mix_t_all = tpp.interval_params(cfg_t, params_t, h_t)     # [g+1, M]
-    logits_t_all = jax.nn.log_softmax(
-        tpp.type_logits(cfg_t, params_t, h_t))                # [g+1, K]
-    mix_hist = jax.tree.map(lambda x: x[:gamma], mix_t_all)
-    res = spec.verify_events(r_ver, d_tau, d_k,
-                             tpp.interval_logpdf(d_mix, d_tau), d_logits,
-                             mix_hist, logits_t_all[:gamma])
-    A, all_acc = res.num_accepted, res.all_accepted
-    Ac = jnp.minimum(A, gamma - 1)
-
-    # --- replacement / bonus event from h at the first non-accepted slot
-    mix_A = jax.tree.map(lambda x: x[A], mix_t_all)
-    logits_A = logits_t_all[A]
-    d_mix_A = jax.tree.map(lambda x: x[Ac], d_mix)
-    tau_adj = spec.adjusted_continuous(r_new1, mix_A, d_mix_A)
-    tau_direct = tpp.sample_interval(r_new2, mix_A)
-    new_tau = jnp.where(all_acc, tau_direct,
-                        jnp.where(res.tau_rejected, tau_adj, d_tau[Ac]))
-    k_adj = spec.adjusted_discrete(r_new3, logits_A, d_logits[Ac])
-    k_direct = jax.random.categorical(jax.random.fold_in(r_new3, 1),
-                                      logits_A).astype(jnp.int32)
-    new_k = jnp.where(all_acc | res.tau_rejected, k_direct,
-                      k_adj.astype(jnp.int32))
-    base_t = jnp.where(A > 0, d_t[jnp.maximum(A - 1, 0)], s.t_pend)
-    new_t = base_t + new_tau
-
-    # --- commit accepted prefix + the new event
-    g_idx = jnp.arange(gamma)
-    idx = s.n + g_idx
-    times = s.times.at[idx].set(
-        jnp.where(g_idx < A, d_t, s.times[idx]))
-    types = s.types.at[idx].set(
-        jnp.where(g_idx < A, d_k, s.types[idx]))
-    times = times.at[s.n + A].set(new_t)
-    types = types.at[s.n + A].set(new_k)
-    n_new = s.n + A + 1
-
-    # --- cache rollback (mask-by-counter; cache length invariant == n)
-    cache_t = tpp.rollback(cache_t, n_new)
-    cache_d = tpp.rollback(cache_d, n_new)
-    return _SDState(times, types, n_new, new_t, new_k, cache_t, cache_d,
-                    rng, s.drafted + gamma, s.accepted + A, s.rounds + 1)
-
-
-@functools.partial(jax.jit, static_argnums=(0, 1, 4, 5, 6))
 def sample_sd_jit(cfg_t, cfg_d, params_t, params_d, t_end: float,
                   gamma: int, max_events: int, rng=None) -> SampleResult:
-    t0, k0 = _bos(cfg_t)
-    cache_size = max_events + gamma + 2
-    init = _SDState(
-        jnp.zeros((max_events + gamma + 1,), jnp.float32),
-        jnp.zeros((max_events + gamma + 1,), jnp.int32),
-        jnp.int32(0), t0, k0,
-        tpp.init_cache(cfg_t, cache_size), tpp.init_cache(cfg_d, cache_size),
-        rng, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-
-    def cond(s: _SDState):
-        return jnp.logical_and(s.t_pend < t_end, s.n < max_events)
-
-    body = functools.partial(_sd_round, cfg_t, cfg_d, params_t, params_d,
-                             gamma)
-    s = lax.while_loop(cond, body, init)
-    E = s.times.shape[0]
-    n_eff = jnp.minimum(s.n, max_events)
-    valid = jnp.sum((jnp.arange(E) < n_eff) & (s.times <= t_end)
-                    ).astype(jnp.int32)
-    return SampleResult(s.times[:max_events], s.types[:max_events], valid,
-                        s.drafted, s.accepted, s.rounds)
+    _warn("sample_sd_jit", "method='sd', execution='jit'")
+    if rng is None:  # the old default crashed at trace time; default safely
+        rng = jax.random.PRNGKey(0)
+    return _loops.run_sd_device(cfg_t, cfg_d, params_t, params_d, rng,
+                                t_end, gamma, max_events)
 
 
 def sample_sd_host(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
                    gamma: int, max_events: int) -> SampleResult:
-    """Paper-faithful host loop: one device sync per propose-verify round."""
-    round_fn = jax.jit(functools.partial(_sd_round, cfg_t, cfg_d, params_t,
-                                         params_d, gamma))
-    t0, k0 = _bos(cfg_t)
-    cache_size = max_events + gamma + 2
-    s = _SDState(
-        jnp.zeros((max_events + gamma + 1,), jnp.float32),
-        jnp.zeros((max_events + gamma + 1,), jnp.int32),
-        jnp.int32(0), t0, k0,
-        tpp.init_cache(cfg_t, cache_size), tpp.init_cache(cfg_d, cache_size),
-        rng, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    while float(s.t_pend) < t_end and int(s.n) < max_events:
-        s = round_fn(s)
-    E = s.times.shape[0]
-    n_eff = jnp.minimum(s.n, max_events)
-    valid = jnp.sum((jnp.arange(E) < n_eff) & (s.times <= t_end)
-                    ).astype(jnp.int32)
-    return SampleResult(s.times[:max_events], s.types[:max_events], valid,
-                        s.drafted, s.accepted, s.rounds)
+    _warn("sample_sd_host", "method='sd', execution='host'")
+    return _loops.run_sd_host(cfg_t, cfg_d, params_t, params_d, rng, t_end,
+                              gamma, max_events)
 
-
-# ---------------------------------------------------------------------------
-# batched sampling (beyond-paper): vmap whole samplers over a seed batch
-# ---------------------------------------------------------------------------
 
 def sample_ar_batch(cfg, params, rng, t_end: float, max_events: int,
                     batch: int) -> SampleResult:
+    _warn("sample_ar_batch", "method='ar', execution='vmap'")
     rngs = jax.random.split(rng, batch)
-    fn = lambda r: sample_ar_jit(cfg, params, r, t_end, max_events)
+    fn = lambda r: _loops.run_ar_device(cfg, params, r, t_end, max_events)
     return jax.vmap(fn)(rngs)
 
 
 def sample_sd_batch(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
                     gamma: int, max_events: int, batch: int) -> SampleResult:
+    _warn("sample_sd_batch", "method='sd', execution='vmap'")
     rngs = jax.random.split(rng, batch)
-    fn = lambda r: sample_sd_jit(cfg_t, cfg_d, params_t, params_d, t_end,
-                                 gamma, max_events, rng=r)
+    fn = lambda r: _loops.run_sd_device(cfg_t, cfg_d, params_t, params_d, r,
+                                        t_end, gamma, max_events)
     return jax.vmap(fn)(rngs)

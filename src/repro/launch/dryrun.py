@@ -176,6 +176,8 @@ def _lower_costs(cfg, shape_name, mesh, fsdp, seq_shard, extra_rules=None):
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax wraps it in a list
+        cost = cost[0] if cost else {}
     coll_total, coll_by_type = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),

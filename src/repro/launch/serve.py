@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, get_arch, smoke_variant
-from ..core import llm_sd
 from ..models import registry
+from ..sampling import SamplerSpec, build_sampler
 
 
 def main():
@@ -39,20 +39,23 @@ def main():
     pd = md.init_params(jax.random.PRNGKey(1))
     print(f"serving {cfg_t.name} (target 4L, draft {args.draft_layers}L, "
           f"gamma={args.gamma})")
+    serve_fn = build_sampler(
+        SamplerSpec(domain="token", method="sd", execution="host",
+                    max_events=args.new_tokens, gamma=args.gamma,
+                    max_len=args.max_len),
+        cfg_t, pt, cfg_d, pd)
     tot_tok = tot_fwd = tot_acc = tot_drafted = 0
     t0 = time.time()
     for r in range(args.requests):
         prompt = jax.random.randint(jax.random.PRNGKey(10 + r), (8,), 0,
-                                    cfg_t.vocab_size)
-        st = llm_sd.serve_speculative(
-            cfg_t, cfg_d, pt, pd, mt, md, prompt.astype(jnp.int32),
-            jax.random.PRNGKey(100 + r), max_new_tokens=args.new_tokens,
-            gamma=args.gamma, max_len=args.max_len)
-        tot_tok += st.n
+                                    cfg_t.vocab_size).astype(jnp.int32)
+        st = serve_fn(jax.random.PRNGKey(100 + r), prompt).stats()
+        tot_tok += st.events
         tot_fwd += st.rounds
         tot_acc += st.accepted
         tot_drafted += st.drafted
-        print(f"request {r}: {st.n} tokens, {st.rounds} target forwards")
+        print(f"request {r}: {st.events} tokens, {st.rounds} target "
+              f"forwards")
     dt = time.time() - t0
     print(f"served {tot_tok} tokens in {dt:.1f}s | alpha="
           f"{tot_acc / max(tot_drafted, 1):.2f} | tokens/target-forward="

@@ -1,0 +1,28 @@
+"""Unified config-driven sampling subsystem (TPP-SD paper Sec. 4).
+
+Public API:
+
+    SamplerSpec    — frozen config: method x execution x sizes
+    SamplingEngine — build(spec, cfg_t, params_t[, cfg_d, params_d])
+                     -> callable(rng) -> SampleBatch
+    ENGINE         — process-wide engine (shared compilation cache)
+    build_sampler / sample — conveniences over ENGINE
+
+Strategies ("ar" | "sd" | "thinning" + token-domain "llm_*") and draft
+policies ("fixed") are decorator-registered; see ``registry.py``.
+"""
+from .engine import ENGINE, SamplingEngine, build_sampler, sample
+from .policies import DraftPolicy, FixedGamma
+from .registry import (draft_policy_names, get_draft_policy, get_strategy,
+                       register_draft_policy, register_strategy,
+                       strategy_names)
+from .result import SampleBatch, SampleStats, SeqResult
+from .spec import SamplerSpec, SpecError
+
+__all__ = [
+    "ENGINE", "SamplingEngine", "build_sampler", "sample",
+    "SamplerSpec", "SpecError", "SampleBatch", "SampleStats", "SeqResult",
+    "DraftPolicy", "FixedGamma",
+    "register_strategy", "get_strategy", "strategy_names",
+    "register_draft_policy", "get_draft_policy", "draft_policy_names",
+]

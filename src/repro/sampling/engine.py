@@ -1,0 +1,179 @@
+"""``SamplingEngine``: the one config-driven entrypoint for sampling.
+
+    spec = SamplerSpec(method="sd", execution="vmap", t_end=20.0,
+                       gamma=10, max_events=256, batch=64)
+    fn = ENGINE.build(spec, cfg_t, params_t, cfg_d, params_d)
+    batch = fn(jax.random.PRNGKey(0))        # -> SampleBatch
+    print(batch.stats().describe())
+
+Execution lowering:
+
+  host    — python loop per sequence (paper-faithful sync-per-step),
+            batch handled by splitting the seed on the host.
+  jit     — the strategy's single-sequence lax.while_loop sampler; B=1.
+  vmap    — jax.vmap of the jitted sampler over a split seed batch.
+  sharded — vmap + the seed batch placed over the device mesh via the
+            logical-axis rules in ``distributed/sharding.py`` ("batch"
+            maps to the data axis, divisible-or-replicate fallback), so
+            the same spec fans whole sequences out across devices.
+
+Built callables are cached per (spec, model-bundle identity) so repeated
+calls reuse compilations.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import strategies as _strategies  # noqa: F401  (registers builtin strategies)
+from .registry import get_strategy
+from .result import (SampleBatch, batch_from_mapped, batch_from_seq,
+                     stack_seqs)
+from .spec import SamplerSpec, SpecError
+from .strategies import ModelBundle, TokenBundle
+
+
+def _data_mesh():
+    """1-D mesh over every visible device: whole-sequence fan-out."""
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+def _shard_rngs(rngs, mesh):
+    """Place the seed batch over the mesh's data axis (replicate fallback
+    when the batch does not divide the device count)."""
+    from ..distributed.sharding import Rules
+    rules = Rules(mesh)
+    sh = rules.sharding(("batch", None), dims=tuple(rngs.shape))
+    return jax.device_put(rngs, sh)
+
+
+class SamplingEngine:
+    """Builds spec-driven samplers; caches built callables.
+
+    The cache is LRU-bounded: entries keep their params trees alive (the
+    id-based key is only valid while the objects live), so an unbounded
+    cache would pin every superseded checkpoint for process lifetime.
+    """
+
+    MAX_CACHED = 32
+
+    def __init__(self):
+        from collections import OrderedDict
+        self._cache = OrderedDict()
+
+    # -- TPP domain --------------------------------------------------------
+    def build(self, spec: SamplerSpec, cfg_t, params_t, cfg_d=None,
+              params_d=None) -> Callable[..., SampleBatch]:
+        """Return ``fn(rng) -> SampleBatch`` for domain="tpp" specs, or
+        ``fn(rng, prompt) -> SampleBatch`` for domain="token" specs."""
+        spec.validate()
+        if spec.requires_draft and (cfg_d is None or params_d is None):
+            raise SpecError(f"method={spec.method!r} needs a draft model "
+                            "(cfg_d, params_d)")
+        key = (spec, id(cfg_t), id(params_t), id(cfg_d), id(params_d))
+        if key not in self._cache:
+            if spec.domain == "token":
+                fn = self._build_token(spec, cfg_t, params_t, cfg_d, params_d)
+            else:
+                fn = self._build_tpp(spec, cfg_t, params_t, cfg_d, params_d)
+            # keep the params alive alongside the closure (id keys are
+            # only unique while the objects live)
+            self._cache[key] = (fn, (cfg_t, params_t, cfg_d, params_d))
+            while len(self._cache) > self.MAX_CACHED:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
+        return self._cache[key][0]
+
+    def sample(self, spec: SamplerSpec, cfg_t, params_t, rng, cfg_d=None,
+               params_d=None, prompt=None) -> SampleBatch:
+        """One-shot convenience: build (cached) and call."""
+        fn = self.build(spec, cfg_t, params_t, cfg_d, params_d)
+        if spec.domain == "token":
+            if prompt is None:
+                raise SpecError("domain='token' sampling needs a prompt")
+            return fn(rng, prompt)
+        return fn(rng)
+
+    def _build_tpp(self, spec, cfg_t, params_t, cfg_d, params_d):
+        strat = get_strategy(spec.method)
+        bundle = ModelBundle(cfg_t, params_t, cfg_d, params_d)
+
+        if spec.execution == "host":
+            single = strat.build_host(spec, bundle)
+
+            def host_fn(rng):
+                rngs = (jax.random.split(rng, spec.batch)
+                        if spec.batch > 1 else [rng])
+                return stack_seqs([single(r) for r in rngs])
+            return host_fn
+
+        single = strat.build_device(spec, bundle)
+        if single is None:
+            raise SpecError(f"method={spec.method!r} has no device "
+                            "execution; use execution='host'")
+        if spec.execution == "jit":
+            return lambda rng: batch_from_seq(single(rng))
+
+        mapped = jax.vmap(single)
+        if spec.execution == "vmap":
+            return lambda rng: batch_from_mapped(
+                mapped(jax.random.split(rng, spec.batch)))
+
+        # sharded: vmap + seed batch placed over the device mesh; GSPMD
+        # propagates the batch partitioning through the whole loop.
+        mesh = _data_mesh()
+        jit_mapped = jax.jit(mapped)
+
+        def sharded_fn(rng):
+            rngs = _shard_rngs(jax.random.split(rng, spec.batch), mesh)
+            return batch_from_mapped(jit_mapped(rngs))
+        return sharded_fn
+
+    # -- token domain ------------------------------------------------------
+    def _build_token(self, spec, cfg_t, params_t, cfg_d, params_d):
+        from ..models import registry as model_registry
+        model_t = model_registry.get_model(cfg_t)
+        model_d = (model_registry.get_model(cfg_d)
+                   if cfg_d is not None else None)
+        strat = get_strategy(f"llm_{spec.method}")
+        bundle = TokenBundle(cfg_t, params_t, model_t, cfg_d, params_d,
+                             model_d)
+        single = strat.build_host(spec, bundle)
+
+        def token_fn(rng, prompt):
+            prompt = jnp.asarray(prompt, jnp.int32)
+            # the real cache constraint is prompt + new tokens <= max_len
+            # and is only knowable per call
+            if prompt.shape[-1] + spec.max_events > spec.max_len:
+                raise SpecError(
+                    f"prompt length {prompt.shape[-1]} + max_events "
+                    f"{spec.max_events} exceeds max_len {spec.max_len}")
+            if spec.batch == 1 and prompt.ndim == 1:
+                return stack_seqs([single(rng, prompt)])
+            prompts = (prompt if prompt.ndim == 2
+                       else jnp.broadcast_to(prompt, (spec.batch,)
+                                             + prompt.shape))
+            rngs = jax.random.split(rng, prompts.shape[0])
+            return stack_seqs([single(r, p)
+                               for r, p in zip(rngs, prompts)])
+        return token_fn
+
+
+# Module-level engine: one compilation cache per process.
+ENGINE = SamplingEngine()
+
+
+def build_sampler(spec: SamplerSpec, cfg_t, params_t, cfg_d=None,
+                  params_d=None) -> Callable[..., SampleBatch]:
+    return ENGINE.build(spec, cfg_t, params_t, cfg_d, params_d)
+
+
+def sample(spec: SamplerSpec, cfg_t, params_t, rng, cfg_d=None,
+           params_d=None, prompt=None) -> SampleBatch:
+    return ENGINE.sample(spec, cfg_t, params_t, rng, cfg_d, params_d,
+                         prompt=prompt)

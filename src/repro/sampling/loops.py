@@ -1,0 +1,284 @@
+"""Single-sequence sampling loops (AR — Sec. 4.2; TPP-SD — Sec. 4.3 /
+Algorithm 1) plus the shared state-init / finalize helpers that the
+host and device execution paths both build on.
+
+Two execution styles share each loop body:
+
+  - host  : python loop, one jitted model call (and one device sync) per
+    event / per propose-verify round — the paper-faithful style.
+  - device: the whole loop inside one ``lax.while_loop`` (fixed shapes,
+    cache rollback by counter) so a full sequence is one device call and
+    ``jax.vmap`` batches whole sequences with per-lane lengths.
+
+Everything here operates on a single sequence; the engine's executors
+(``engine.py``) handle batching, sharding, and result packaging.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import speculative as spec
+from ..models import tpp
+from .result import SeqResult
+
+
+def bos_event(cfg):
+    """Algorithm 1's initial (t_0, k_0): t=0 with the BOS sentinel mark."""
+    return jnp.float32(0.0), jnp.int32(cfg.num_marks)
+
+
+def sample_event(cfg, params, rng, h, t_cur):
+    """Draw the next (t, k) from the model heads at history embedding h."""
+    r1, r2 = jax.random.split(rng)
+    mix = tpp.interval_params(cfg, params, h)
+    tau = tpp.sample_interval(r1, mix)
+    logits = tpp.type_logits(cfg, params, h)
+    k = jax.random.categorical(r2, logits)
+    return t_cur + tau, k.astype(jnp.int32)
+
+
+def event_buffers(size: int):
+    """Zeroed fixed-shape (times, types) buffers."""
+    return jnp.zeros((size,), jnp.float32), jnp.zeros((size,), jnp.int32)
+
+
+def finalize_seq(times, types, n, t_end: float, max_events: int,
+                 drafted, accepted, rounds) -> SeqResult:
+    """Shared epilogue of every loop: count events with ordinal < n that
+    landed inside the horizon, truncate buffers to ``max_events``."""
+    E = times.shape[0]
+    n_eff = jnp.minimum(n, max_events)
+    valid = jnp.sum((jnp.arange(E) < n_eff) & (times <= t_end)
+                    ).astype(jnp.int32)
+    return SeqResult(times[:max_events], types[:max_events], valid,
+                     jnp.asarray(drafted, jnp.int32),
+                     jnp.asarray(accepted, jnp.int32),
+                     jnp.asarray(rounds, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# autoregressive sampling
+# ---------------------------------------------------------------------------
+
+class ARState(NamedTuple):
+    times: jnp.ndarray
+    types: jnp.ndarray
+    n: jnp.ndarray
+    t_last: jnp.ndarray
+    h: jnp.ndarray
+    cache: dict
+    rng: jnp.ndarray
+
+
+def init_ar_state(cfg, params, rng, max_events: int) -> ARState:
+    """Seed the AR loop: BOS in the cache, empty event buffers."""
+    t0, k0 = bos_event(cfg)
+    cache = tpp.init_cache(cfg, max_events + 2)
+    h, cache = tpp.extend(cfg, params, cache, t0[None], k0[None])
+    times, types = event_buffers(max_events)
+    return ARState(times, types, jnp.int32(0), t0, h[0], cache, rng)
+
+
+def ar_step(cfg, params, s: ARState) -> ARState:
+    """One committed event: sample from the heads, ingest into the cache."""
+    rng, r = jax.random.split(s.rng)
+    t_new, k_new = sample_event(cfg, params, r, s.h, s.t_last)
+    h, cache = tpp.extend(cfg, params, s.cache, t_new[None], k_new[None])
+    times = s.times.at[s.n].set(t_new)
+    types = s.types.at[s.n].set(k_new)
+    return ARState(times, types, s.n + 1, t_new, h[0], cache, rng)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def run_ar_device(cfg, params, rng, t_end: float, max_events: int
+                  ) -> SeqResult:
+    def cond(s: ARState):
+        return jnp.logical_and(s.t_last < t_end, s.n < max_events)
+
+    s = lax.while_loop(cond, functools.partial(ar_step, cfg, params),
+                       init_ar_state(cfg, params, rng, max_events))
+    return finalize_seq(s.times, s.types, s.n, t_end, max_events,
+                        jnp.int32(0), jnp.int32(0), s.n)
+
+
+def run_ar_host(cfg, params, rng, t_end: float, max_events: int,
+                step=None) -> SeqResult:
+    """Paper-style host loop: one jitted step (and one host sync) per
+    generated event.
+
+    Pass a prebuilt ``step`` (jitted ``ar_step`` closure) to reuse its
+    compilation across calls — the engine's strategies do."""
+    if step is None:
+        step = jax.jit(functools.partial(ar_step, cfg, params))
+    s = init_ar_state(cfg, params, rng, max_events)
+    while float(s.t_last) < t_end and int(s.n) < max_events:
+        s = step(s)
+    return finalize_seq(s.times, s.types, s.n, t_end, max_events,
+                        jnp.int32(0), jnp.int32(0), s.n)
+
+
+# ---------------------------------------------------------------------------
+# TPP-SD (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class SDState(NamedTuple):
+    times: jnp.ndarray
+    types: jnp.ndarray
+    n: jnp.ndarray
+    t_pend: jnp.ndarray
+    k_pend: jnp.ndarray
+    cache_t: dict
+    cache_d: dict
+    rng: jnp.ndarray
+    drafted: jnp.ndarray
+    accepted: jnp.ndarray
+    rounds: jnp.ndarray
+
+
+def init_sd_state(cfg_t, cfg_d, rng, gamma: int, max_events: int) -> SDState:
+    """Seed the SD loop: BOS pending, both caches empty, buffers sized so
+    one full window past ``max_events`` still fits before truncation."""
+    t0, k0 = bos_event(cfg_t)
+    cache_size = max_events + gamma + 2
+    times, types = event_buffers(max_events + gamma + 1)
+    return SDState(times, types, jnp.int32(0), t0, k0,
+                   tpp.init_cache(cfg_t, cache_size),
+                   tpp.init_cache(cfg_d, cache_size),
+                   rng, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+
+
+def draft_window(cfg_d, params_d, rng, cache_d, t_pend, k_pend, gamma):
+    """Draft gamma events autoregressively; record densities (Alg.1 l.4-6).
+
+    The pending event is ingested first (it is committed but not yet in
+    either cache).
+    """
+    h, cache_d = tpp.extend(cfg_d, params_d, cache_d, t_pend[None],
+                            k_pend[None])
+
+    def step(carry, r):
+        h, cache_d, t_cur = carry
+        r1, r2 = jax.random.split(r)
+        mix = tpp.interval_params(cfg_d, params_d, h)
+        tau = tpp.sample_interval(r1, mix)
+        logits = jax.nn.log_softmax(tpp.type_logits(cfg_d, params_d, h))
+        k = jax.random.categorical(r2, logits).astype(jnp.int32)
+        t_new = t_cur + tau
+        h2, cache_d = tpp.extend(cfg_d, params_d, cache_d, t_new[None],
+                                 k[None])
+        out = (tau, k, t_new, mix.log_w, mix.mu, mix.sigma, logits)
+        return (h2[0], cache_d, t_new), out
+
+    (h_last, cache_d, _), outs = lax.scan(
+        step, (h[0], cache_d, t_pend), jax.random.split(rng, gamma))
+    d_tau, d_k, d_t, d_logw, d_mu, d_sigma, d_logits = outs
+    d_mix = tpp.MixParams(d_logw, d_mu, d_sigma)
+    return cache_d, d_tau, d_k, d_t, d_mix, d_logits
+
+
+def sd_round(cfg_t, cfg_d, params_t, params_d, gamma, s: SDState) -> SDState:
+    """One propose-verify round of Algorithm 1."""
+    rng, r_draft, r_ver, r_new1, r_new2, r_new3 = jax.random.split(s.rng, 6)
+    # --- draft ---
+    cache_d, d_tau, d_k, d_t, d_mix, d_logits = draft_window(
+        cfg_d, params_d, r_draft, s.cache_d, s.t_pend, s.k_pend, gamma)
+    # --- verify: target processes pending + drafts in ONE parallel forward
+    ver_t = jnp.concatenate([s.t_pend[None], d_t])
+    ver_k = jnp.concatenate([s.k_pend[None], d_k])
+    h_t, cache_t = tpp.extend(cfg_t, params_t, s.cache_t, ver_t, ver_k)
+    mix_t_all = tpp.interval_params(cfg_t, params_t, h_t)     # [g+1, M]
+    logits_t_all = jax.nn.log_softmax(
+        tpp.type_logits(cfg_t, params_t, h_t))                # [g+1, K]
+    mix_hist = jax.tree.map(lambda x: x[:gamma], mix_t_all)
+    res = spec.verify_events(r_ver, d_tau, d_k,
+                             tpp.interval_logpdf(d_mix, d_tau), d_logits,
+                             mix_hist, logits_t_all[:gamma])
+    A, all_acc = res.num_accepted, res.all_accepted
+    Ac = jnp.minimum(A, gamma - 1)
+
+    # --- replacement / bonus event from h at the first non-accepted slot
+    mix_A = jax.tree.map(lambda x: x[A], mix_t_all)
+    logits_A = logits_t_all[A]
+    d_mix_A = jax.tree.map(lambda x: x[Ac], d_mix)
+    tau_adj = spec.adjusted_continuous(r_new1, mix_A, d_mix_A)
+    tau_direct = tpp.sample_interval(r_new2, mix_A)
+    new_tau = jnp.where(all_acc, tau_direct,
+                        jnp.where(res.tau_rejected, tau_adj, d_tau[Ac]))
+    k_adj = spec.adjusted_discrete(r_new3, logits_A, d_logits[Ac])
+    k_direct = jax.random.categorical(jax.random.fold_in(r_new3, 1),
+                                      logits_A).astype(jnp.int32)
+    new_k = jnp.where(all_acc | res.tau_rejected, k_direct,
+                      k_adj.astype(jnp.int32))
+    base_t = jnp.where(A > 0, d_t[jnp.maximum(A - 1, 0)], s.t_pend)
+    new_t = base_t + new_tau
+
+    # --- commit accepted prefix + the new event
+    g_idx = jnp.arange(gamma)
+    idx = s.n + g_idx
+    times = s.times.at[idx].set(
+        jnp.where(g_idx < A, d_t, s.times[idx]))
+    types = s.types.at[idx].set(
+        jnp.where(g_idx < A, d_k, s.types[idx]))
+    times = times.at[s.n + A].set(new_t)
+    types = types.at[s.n + A].set(new_k)
+    n_new = s.n + A + 1
+
+    # --- cache rollback (mask-by-counter; cache length invariant == n)
+    cache_t = tpp.rollback(cache_t, n_new)
+    cache_d = tpp.rollback(cache_d, n_new)
+    return SDState(times, types, n_new, new_t, new_k, cache_t, cache_d,
+                   rng, s.drafted + gamma, s.accepted + A, s.rounds + 1)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 5, 6, 7))
+def run_sd_device(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
+                  gamma: int, max_events: int) -> SeqResult:
+    def cond(s: SDState):
+        return jnp.logical_and(s.t_pend < t_end, s.n < max_events)
+
+    body = functools.partial(sd_round, cfg_t, cfg_d, params_t, params_d,
+                             gamma)
+    s = lax.while_loop(cond, body,
+                       init_sd_state(cfg_t, cfg_d, rng, gamma, max_events))
+    return finalize_seq(s.times, s.types, s.n, t_end, max_events,
+                        s.drafted, s.accepted, s.rounds)
+
+
+def run_sd_host(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
+                gamma: int, max_events: int, round_fn=None) -> SeqResult:
+    """Paper-faithful host loop: one device sync per propose-verify round.
+
+    Uses the SAME jitted round function as the device path, so with an
+    identical rng the two paths produce identical sequences. Pass a
+    prebuilt ``round_fn`` (jitted ``sd_round`` closure) to reuse its
+    compilation across calls — the engine's strategies do."""
+    if round_fn is None:
+        round_fn = jax.jit(functools.partial(sd_round, cfg_t, cfg_d,
+                                             params_t, params_d, gamma))
+    s = init_sd_state(cfg_t, cfg_d, rng, gamma, max_events)
+    while float(s.t_pend) < t_end and int(s.n) < max_events:
+        s = round_fn(s)
+    return finalize_seq(s.times, s.types, s.n, t_end, max_events,
+                        s.drafted, s.accepted, s.rounds)
+
+
+# ---------------------------------------------------------------------------
+# neural CIF thinning (App. D.1 baseline)
+# ---------------------------------------------------------------------------
+
+def run_thinning_host(cfg, params, rng, t_end: float, max_events: int, *,
+                      safety: float = 2.0, grid: int = 8,
+                      horizon: float = 2.0) -> SeqResult:
+    """Wrap the App. D.1 thinning baseline into the unified result shape:
+    ``drafted`` = proposals, ``accepted`` = kept events, ``rounds`` =
+    target forwards (so events_per_forward stays the comparable stat)."""
+    from ..core import cif_thinning
+    r = cif_thinning.sample_thinning_host(cfg, params, rng, t_end,
+                                          max_events, safety=safety,
+                                          grid=grid, horizon=horizon)
+    return SeqResult(r.times, r.types, r.n, r.proposals, r.n, r.forwards)

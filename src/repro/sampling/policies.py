@@ -1,0 +1,56 @@
+"""Draft policies: how many events the draft model proposes per round.
+
+The jitted SD loop needs a *static* window length per compiled round, so a
+policy exposes ``round_gamma(round_idx)``; FixedGamma returns a constant
+(the paper's setting). An adaptive-gamma policy (Leviathan et al. 2023's
+lenience analysis, or acceptance-rate feedback) plugs in here by returning
+a schedule — the engine compiles one round per distinct gamma and the host
+executor can follow the schedule exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .registry import register_draft_policy
+
+
+class DraftPolicy:
+    """Interface: per-round draft window length."""
+
+    def round_gamma(self, round_idx: int) -> int:
+        raise NotImplementedError
+
+    @property
+    def max_gamma(self) -> int:
+        """Upper bound on any round's gamma (sizes the fixed buffers)."""
+        raise NotImplementedError
+
+    @property
+    def is_static(self) -> bool:
+        """True if every round uses the same gamma (single compilation)."""
+        return False
+
+
+@register_draft_policy("fixed")
+@dataclass(frozen=True)
+class FixedGamma(DraftPolicy):
+    """The paper's policy: a constant draft window."""
+    gamma: int
+
+    def round_gamma(self, round_idx: int) -> int:
+        return self.gamma
+
+    @property
+    def max_gamma(self) -> int:
+        return self.gamma
+
+    @property
+    def is_static(self) -> bool:
+        return True
+
+
+def resolve_policy(spec) -> DraftPolicy:
+    """Instantiate the spec's draft policy (today: name -> cls(gamma))."""
+    from .registry import get_draft_policy
+    cls = get_draft_policy(spec.draft_policy)
+    return cls(spec.gamma)

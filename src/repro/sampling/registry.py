@@ -1,0 +1,53 @@
+"""Decorator registries for sampling strategies and draft policies
+(mirrors ``models/registry.py``: names -> implementations, so new methods
+plug in without another combinatorial explosion of entrypoints)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_STRATEGIES: Dict[str, object] = {}
+_DRAFT_POLICIES: Dict[str, Callable] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: register a sampling strategy under ``name``.
+
+    A strategy instance provides:
+      - ``build_device(spec, bundle) -> fn(rng) -> SeqResult`` — a
+        jit/vmap-compatible single-sequence sampler (None if unsupported);
+      - ``build_host(spec, bundle) -> fn(rng) -> SeqResult`` — the
+        paper-faithful host loop for one sequence.
+    """
+    def deco(cls):
+        _STRATEGIES[name] = cls()
+        return cls
+    return deco
+
+
+def get_strategy(name: str):
+    if name not in _STRATEGIES:
+        raise KeyError(f"no sampling strategy {name!r}; registered: "
+                       f"{sorted(_STRATEGIES)}")
+    return _STRATEGIES[name]
+
+
+def strategy_names():
+    return sorted(_STRATEGIES)
+
+
+def register_draft_policy(name: str):
+    def deco(cls):
+        _DRAFT_POLICIES[name] = cls
+        return cls
+    return deco
+
+
+def get_draft_policy(name: str):
+    if name not in _DRAFT_POLICIES:
+        raise KeyError(f"no draft policy {name!r}; registered: "
+                       f"{sorted(_DRAFT_POLICIES)}")
+    return _DRAFT_POLICIES[name]
+
+
+def draft_policy_names():
+    return sorted(_DRAFT_POLICIES)

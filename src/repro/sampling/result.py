@@ -1,0 +1,108 @@
+"""Unified sampling results.
+
+Every execution path of every strategy returns the same two shapes:
+
+  - ``SeqResult``  — one sequence (no batch dim); what the single-sequence
+    loops in ``loops.py`` produce and what ``jax.vmap`` maps over.
+  - ``SampleBatch`` — the engine's public result: a leading batch dim is
+    ALWAYS present (B=1 for single-sequence execution), plus the
+    acceptance/round accounting and derived stats computed once here
+    instead of at every call site.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SeqResult(NamedTuple):
+    """One sampled sequence in fixed-shape buffers (valid prefix = n)."""
+    times: jnp.ndarray     # [max_events] float32
+    types: jnp.ndarray     # [max_events] int32
+    n: jnp.ndarray         # valid count (times <= t_end)
+    drafted: jnp.ndarray   # events proposed by the draft model
+    accepted: jnp.ndarray  # drafted events accepted by verification
+    rounds: jnp.ndarray    # propose-verify rounds (== target forwards)
+
+
+@dataclass(frozen=True)
+class SampleStats:
+    """Host-side accounting derived once from a ``SampleBatch``."""
+    events: int
+    drafted: int
+    accepted: int
+    rounds: int
+
+    @property
+    def acceptance_rate(self) -> float:
+        """alpha (paper Sec. 5): accepted / drafted; 0 for non-SD methods."""
+        return self.accepted / max(1, self.drafted)
+
+    @property
+    def events_per_forward(self) -> float:
+        """Events committed per target forward (AR == 1.0 by construction);
+        the hardware-independent speedup driver."""
+        return self.events / max(1, self.rounds)
+
+    def describe(self) -> str:
+        return (f"events={self.events} rounds={self.rounds} "
+                f"alpha={self.acceptance_rate:.2f} "
+                f"ev/fwd={self.events_per_forward:.2f}")
+
+
+class SampleBatch(NamedTuple):
+    """Batched sampling result: [B, E] buffers with per-lane lengths."""
+    times: jnp.ndarray     # [B, max_events] float32
+    types: jnp.ndarray     # [B, max_events] int32
+    lengths: jnp.ndarray   # [B] int32 valid counts
+    drafted: jnp.ndarray   # [B]
+    accepted: jnp.ndarray  # [B]
+    rounds: jnp.ndarray    # [B]
+
+    # `n` mirrors the legacy SampleResult field so downstream code that
+    # reads `.n` keeps working on either type.
+    @property
+    def n(self) -> jnp.ndarray:
+        return self.lengths
+
+    def to_seqs(self) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Ragged view: [(times_i, types_i)] trimmed to each lane's length."""
+        times = np.atleast_2d(np.array(self.times))
+        types = np.atleast_2d(np.array(self.types))
+        ns = np.atleast_1d(np.array(self.lengths))
+        return [(times[i, :ns[i]], types[i, :ns[i]]) for i in range(len(ns))]
+
+    def stats(self) -> SampleStats:
+        return SampleStats(
+            events=int(np.sum(np.array(self.lengths))),
+            drafted=int(np.sum(np.array(self.drafted))),
+            accepted=int(np.sum(np.array(self.accepted))),
+            rounds=int(np.sum(np.array(self.rounds))))
+
+
+def batch_from_seq(res: SeqResult) -> SampleBatch:
+    """Promote a single-sequence result to a B=1 ``SampleBatch``."""
+    return SampleBatch(res.times[None], res.types[None], res.n[None],
+                       jnp.asarray(res.drafted)[None],
+                       jnp.asarray(res.accepted)[None],
+                       jnp.asarray(res.rounds)[None])
+
+
+def batch_from_mapped(res: SeqResult) -> SampleBatch:
+    """Re-label a vmapped SeqResult (leaves already carry a batch dim)."""
+    return SampleBatch(res.times, res.types, res.n, res.drafted,
+                       res.accepted, res.rounds)
+
+
+def stack_seqs(results: List[SeqResult]) -> SampleBatch:
+    """Stack host-loop per-sequence results into one batch."""
+    return SampleBatch(
+        jnp.stack([r.times for r in results]),
+        jnp.stack([r.types for r in results]),
+        jnp.stack([jnp.asarray(r.n) for r in results]),
+        jnp.stack([jnp.asarray(r.drafted) for r in results]),
+        jnp.stack([jnp.asarray(r.accepted) for r in results]),
+        jnp.stack([jnp.asarray(r.rounds) for r in results]))

@@ -1,0 +1,100 @@
+"""``SamplerSpec``: one frozen, hashable config describing a sampling run.
+
+The spec replaces the combinatorial ``sample_{ar,sd}_{host,jit,batch}``
+function zoo: method x execution are orthogonal axes, and a spec can be
+closed over by jitted functions (frozen dataclass => hashable static arg).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+METHODS = ("ar", "sd", "thinning")
+EXECUTIONS = ("host", "jit", "vmap", "sharded")
+DOMAINS = ("tpp", "token")
+
+
+class SpecError(ValueError):
+    """Invalid ``SamplerSpec`` combination."""
+
+
+@dataclass(frozen=True)
+class SamplerSpec:
+    """What to sample and how to execute it.
+
+    method     : "ar" (autoregressive), "sd" (TPP-SD, Algorithm 1) or
+                 "thinning" (neural CIF thinning, App. D.1 baseline).
+    execution  : "host"    — python loop, one device sync per step/round
+                 "jit"     — whole loop in one lax.while_loop device call
+                 "vmap"    — jit + jax.vmap over a batch of seeds
+                 "sharded" — vmap with the seed batch sharded over the
+                             device mesh (multi-device fan-out)
+    batch      : number of sequences (ignored for execution="jit": 1).
+    gamma      : draft window length for method="sd".
+    draft_policy: name in the draft-policy registry ("fixed" today; the
+                 hook for adaptive-gamma policies later).
+    domain     : "tpp" (continuous-time event sequences) or "token" (the
+                 discrete LLM special case served from the model zoo);
+                 for "token", max_events is the max-new-tokens budget and
+                 t_end is ignored.
+    """
+
+    method: str = "sd"
+    execution: str = "jit"
+    t_end: float = 20.0
+    max_events: int = 256
+    batch: int = 1
+    gamma: int = 10
+    draft_policy: str = "fixed"
+    domain: str = "tpp"
+    # token-domain knobs
+    max_len: int = 256
+    temperature: float = 1.0
+    # thinning-only knobs (App. D.1 adaptive bound)
+    thinning_safety: float = 2.0
+    thinning_grid: int = 8
+    thinning_horizon: float = 2.0
+
+    def replace(self, **kw) -> "SamplerSpec":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> "SamplerSpec":
+        """Raise ``SpecError`` on an invalid combination; return self."""
+        if self.method not in METHODS:
+            raise SpecError(f"unknown method {self.method!r}; "
+                            f"expected one of {METHODS}")
+        if self.execution not in EXECUTIONS:
+            raise SpecError(f"unknown execution {self.execution!r}; "
+                            f"expected one of {EXECUTIONS}")
+        if self.domain not in DOMAINS:
+            raise SpecError(f"unknown domain {self.domain!r}; "
+                            f"expected one of {DOMAINS}")
+        if self.method == "thinning" and self.execution != "host":
+            raise SpecError("method='thinning' is host-only (data-dependent "
+                            "proposal counts cannot live in a fixed-shape "
+                            "device loop)")
+        if self.domain == "token":
+            if self.method == "thinning":
+                raise SpecError("method='thinning' has no token-domain "
+                                "analogue")
+            if self.execution != "host":
+                raise SpecError("domain='token' serving is host-only today")
+            if self.max_len < self.max_events:
+                raise SpecError("max_len must cover max_events new tokens")
+        if self.execution == "jit" and self.batch != 1:
+            raise SpecError("execution='jit' samples a single sequence; use "
+                            "execution='vmap' or 'sharded' for batch > 1")
+        if self.t_end <= 0:
+            raise SpecError(f"t_end must be > 0, got {self.t_end}")
+        if self.max_events < 1:
+            raise SpecError(f"max_events must be >= 1, got {self.max_events}")
+        if self.batch < 1:
+            raise SpecError(f"batch must be >= 1, got {self.batch}")
+        if self.method == "sd" and self.gamma < 1:
+            raise SpecError(f"gamma must be >= 1 for method='sd', "
+                            f"got {self.gamma}")
+        return self
+
+    @property
+    def requires_draft(self) -> bool:
+        return self.method == "sd"

@@ -1,0 +1,142 @@
+"""Registered sampling strategies.
+
+A strategy binds a (spec, model bundle) pair to single-sequence sampler
+callables; the engine's executors then lift those over batches, devices,
+and meshes. TPP strategies return ``SeqResult``; token strategies (the
+discrete LLM special case served by ``launch/serve.py``) additionally
+take the prompt.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import loops
+from .policies import resolve_policy
+from .registry import register_strategy
+from .result import SeqResult
+
+
+class ModelBundle(NamedTuple):
+    """Target (+ optional draft) model pair handed to ``build``."""
+    cfg_t: Any
+    params_t: Any
+    cfg_d: Optional[Any] = None
+    params_d: Optional[Any] = None
+
+
+@register_strategy("ar")
+class ARStrategy:
+    """Naive autoregressive sampling (Sec. 4.2): one forward per event."""
+
+    def build_device(self, spec, b: ModelBundle):
+        return lambda rng: loops.run_ar_device(
+            b.cfg_t, b.params_t, rng, spec.t_end, spec.max_events)
+
+    def build_host(self, spec, b: ModelBundle):
+        # jit the step once here so every call through the built sampler
+        # (and every lane of a host batch) reuses the compilation
+        step = jax.jit(functools.partial(loops.ar_step, b.cfg_t, b.params_t))
+        return lambda rng: loops.run_ar_host(
+            b.cfg_t, b.params_t, rng, spec.t_end, spec.max_events,
+            step=step)
+
+
+@register_strategy("sd")
+class SDStrategy:
+    """TPP-SD (Algorithm 1): draft gamma events, verify in one target
+    forward, commit the accepted prefix + one replacement/bonus event."""
+
+    def build_device(self, spec, b: ModelBundle):
+        gamma = resolve_policy(spec).round_gamma(0)
+        return lambda rng: loops.run_sd_device(
+            b.cfg_t, b.cfg_d, b.params_t, b.params_d, rng, spec.t_end,
+            gamma, spec.max_events)
+
+    def build_host(self, spec, b: ModelBundle):
+        gamma = resolve_policy(spec).round_gamma(0)
+        round_fn = jax.jit(functools.partial(
+            loops.sd_round, b.cfg_t, b.cfg_d, b.params_t, b.params_d,
+            gamma))
+        return lambda rng: loops.run_sd_host(
+            b.cfg_t, b.cfg_d, b.params_t, b.params_d, rng, spec.t_end,
+            gamma, spec.max_events, round_fn=round_fn)
+
+
+@register_strategy("thinning")
+class ThinningStrategy:
+    """Neural CIF thinning (App. D.1): the rejected baseline, kept as the
+    structural comparison — every proposal costs a target forward."""
+
+    def build_device(self, spec, b: ModelBundle):
+        return None  # data-dependent proposal counts: host-only
+
+    def build_host(self, spec, b: ModelBundle):
+        return lambda rng: loops.run_thinning_host(
+            b.cfg_t, b.params_t, rng, spec.t_end, spec.max_events,
+            safety=spec.thinning_safety, grid=spec.thinning_grid,
+            horizon=spec.thinning_horizon)
+
+
+# ---------------------------------------------------------------------------
+# token domain: the discrete LLM special case (Leviathan et al.)
+# ---------------------------------------------------------------------------
+
+def _token_result(st, max_events: int) -> SeqResult:
+    """Pad ServeStats tokens into the unified fixed-shape result."""
+    types = jnp.zeros((max_events,), jnp.int32)
+    n = min(int(st.n), max_events)
+    if n:
+        types = types.at[:n].set(st.tokens[:n])
+    return SeqResult(jnp.zeros((max_events,), jnp.float32), types,
+                     jnp.int32(n), jnp.int32(st.drafted),
+                     jnp.int32(st.accepted), jnp.int32(st.rounds))
+
+
+class TokenBundle(NamedTuple):
+    """Model-zoo bundle: configs + params + registry ModelApi pair."""
+    cfg_t: Any
+    params_t: Any
+    model_t: Any
+    cfg_d: Optional[Any] = None
+    params_d: Optional[Any] = None
+    model_d: Optional[Any] = None
+
+
+@register_strategy("llm_ar")
+class TokenARStrategy:
+    def build_device(self, spec, b: TokenBundle):
+        return None
+
+    def build_host(self, spec, b: TokenBundle):
+        from ..core import llm_sd
+
+        def fn(rng, prompt):
+            st = llm_sd.serve_autoregressive(
+                b.cfg_t, b.params_t, b.model_t, prompt, rng,
+                max_new_tokens=spec.max_events, max_len=spec.max_len,
+                temperature=spec.temperature)
+            return _token_result(st, spec.max_events)
+        return fn
+
+
+@register_strategy("llm_sd")
+class TokenSDStrategy:
+    def build_device(self, spec, b: TokenBundle):
+        return None
+
+    def build_host(self, spec, b: TokenBundle):
+        from ..core import llm_sd
+        gamma = resolve_policy(spec).round_gamma(0)
+
+        def fn(rng, prompt):
+            st = llm_sd.serve_speculative(
+                b.cfg_t, b.cfg_d, b.params_t, b.params_d, b.model_t,
+                b.model_d, prompt, rng, max_new_tokens=spec.max_events,
+                gamma=gamma, max_len=spec.max_len,
+                temperature=spec.temperature)
+            return _token_result(st, spec.max_events)
+        return fn

@@ -1,0 +1,14 @@
+"""Shared statistical test helpers."""
+import numpy as np
+from scipy import stats
+
+
+def chisq(counts, probs):
+    """Chi-square GoF against probs, exactly renormalized to counts."""
+    f_exp = np.asarray(probs, float)
+    f_exp = f_exp / f_exp.sum() * counts.sum()
+    f_exp *= counts.sum() / f_exp.sum()   # exact renormalization
+    try:
+        return stats.chisquare(counts, f_exp, sum_check=False)
+    except TypeError:  # scipy < 1.16 has no sum_check (sums match anyway)
+        return stats.chisquare(counts, f_exp)

@@ -6,12 +6,7 @@ import pytest
 from scipy import stats
 
 
-def _chisq(counts, probs):
-    import numpy as _np
-    f_exp = _np.asarray(probs, float)
-    f_exp = f_exp / f_exp.sum() * counts.sum()
-    f_exp *= counts.sum() / f_exp.sum()   # exact renormalization
-    return stats.chisquare(counts, f_exp, sum_check=False)
+from _stats import chisq as _chisq
 
 from repro.configs.base import ModelConfig
 from repro.core import llm_sd

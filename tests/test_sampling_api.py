@@ -1,0 +1,223 @@
+"""Tests for the unified ``repro.sampling`` engine: spec validation,
+strategy registry round-trip, AR-vs-SD distribution agreement through the
+engine (the paper's central claim via the new API), and batched/sharded
+execution smoke."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.configs.base import TPPConfig
+from repro.models import tpp
+from repro.sampling import (ENGINE, FixedGamma, SampleBatch, SamplerSpec,
+                            SpecError, build_sampler, get_strategy,
+                            register_strategy, strategy_names)
+
+
+@pytest.fixture(scope="module")
+def tiny_pair():
+    cfg_t = TPPConfig(encoder="thp", num_layers=2, num_heads=2, d_model=16,
+                      d_ff=32, num_marks=3, num_mix=4)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(method="nope"), "unknown method"),
+    (dict(execution="nope"), "unknown execution"),
+    (dict(method="thinning", execution="jit"), "host-only"),
+    (dict(execution="jit", batch=4), "single sequence"),
+    (dict(t_end=0.0), "t_end"),
+    (dict(max_events=0), "max_events"),
+    (dict(batch=0), "batch"),
+    (dict(method="sd", gamma=0), "gamma"),
+    (dict(domain="nope"), "unknown domain"),
+    (dict(domain="token", method="thinning", execution="host"),
+     "no token-domain analogue"),
+    (dict(domain="token", method="sd", execution="vmap"), "host-only"),
+    (dict(domain="token", method="sd", execution="host",
+          max_events=64, max_len=32), "max_len"),
+])
+def test_spec_validation_errors(kw, match):
+    with pytest.raises(SpecError, match=match):
+        SamplerSpec(**kw).validate()
+
+
+def test_spec_valid_combinations_pass():
+    for method in ("ar", "sd"):
+        for execution in ("host", "jit", "vmap", "sharded"):
+            s = SamplerSpec(method=method, execution=execution,
+                            batch=1 if execution == "jit" else 4)
+            assert s.validate() is s
+    SamplerSpec(method="thinning", execution="host").validate()
+
+
+def test_engine_requires_draft_for_sd(tiny_pair):
+    cfg_t, _, pt, _ = tiny_pair
+    with pytest.raises(SpecError, match="draft"):
+        ENGINE.build(SamplerSpec(method="sd", execution="jit", t_end=1.0,
+                                 max_events=8), cfg_t, pt)
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip():
+    for name in ("ar", "sd", "thinning", "llm_ar", "llm_sd"):
+        assert name in strategy_names()
+        assert get_strategy(name) is get_strategy(name)
+    with pytest.raises(KeyError, match="no sampling strategy"):
+        get_strategy("does-not-exist")
+
+
+def test_registry_accepts_new_strategy(tiny_pair):
+    cfg_t, _, pt, _ = tiny_pair
+
+    @register_strategy("_test_constant")
+    class ConstantStrategy:
+        """Degenerate strategy: no events, one round."""
+
+        def build_device(self, spec, bundle):
+            from repro.sampling.result import SeqResult
+            E = spec.max_events
+            return lambda rng: SeqResult(
+                jnp.zeros((E,)), jnp.zeros((E,), jnp.int32), jnp.int32(0),
+                jnp.int32(0), jnp.int32(0), jnp.int32(1))
+
+        def build_host(self, spec, bundle):
+            return self.build_device(spec, bundle)
+
+    assert "_test_constant" in strategy_names()
+    strat = get_strategy("_test_constant")
+    spec = SamplerSpec(method="ar", execution="jit", t_end=1.0, max_events=4)
+    res = strat.build_device(spec, None)(jax.random.PRNGKey(0))
+    assert int(res.n) == 0 and int(res.rounds) == 1
+
+
+def test_draft_policy_registry():
+    from repro.sampling import draft_policy_names, get_draft_policy
+    assert "fixed" in draft_policy_names()
+    pol = get_draft_policy("fixed")(5)
+    assert isinstance(pol, FixedGamma)
+    assert pol.round_gamma(0) == 5 and pol.max_gamma == 5 and pol.is_static
+
+
+# ---------------------------------------------------------------------------
+# execution paths
+# ---------------------------------------------------------------------------
+
+def test_vmap_batched_smoke(tiny_pair):
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    fn = build_sampler(SamplerSpec(method="sd", execution="vmap", t_end=2.0,
+                                   gamma=3, max_events=32, batch=8),
+                       cfg_t, pt, cfg_d, pd)
+    b = fn(jax.random.PRNGKey(0))
+    assert isinstance(b, SampleBatch)
+    assert b.times.shape == (8, 32) and b.lengths.shape == (8,)
+    seqs = b.to_seqs()
+    assert len(seqs) == 8
+    for (t, k), n in zip(seqs, np.array(b.lengths)):
+        assert len(t) == len(k) == n
+        assert np.all(np.diff(t) > 0) or n < 2
+        assert np.all(t <= 2.0)
+    st = b.stats()
+    assert st.drafted >= st.accepted >= 0
+    assert 0.0 < st.acceptance_rate <= 1.0
+
+
+def test_sharded_matches_vmap(tiny_pair):
+    """Sharded execution = vmap + device placement; same seeds, same
+    sequences (1-device CPU degrades to replicate fallback)."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    base = SamplerSpec(method="sd", t_end=2.0, gamma=3, max_events=16,
+                       batch=4)
+    bv = build_sampler(base.replace(execution="vmap"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(3))
+    bs = build_sampler(base.replace(execution="sharded"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.array(bv.lengths), np.array(bs.lengths))
+    np.testing.assert_allclose(np.array(bv.times), np.array(bs.times),
+                               rtol=1e-6)
+
+
+def test_host_and_jit_agree_through_engine(tiny_pair):
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    base = SamplerSpec(method="sd", t_end=2.0, gamma=3, max_events=32)
+    bj = build_sampler(base.replace(execution="jit"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
+    bh = build_sampler(base.replace(execution="host"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
+    assert int(bj.lengths[0]) == int(bh.lengths[0])
+    np.testing.assert_allclose(np.array(bj.times), np.array(bh.times),
+                               rtol=1e-6)
+
+
+def test_thinning_through_engine(tiny_pair):
+    cfg_t, _, pt, _ = tiny_pair
+    fn = build_sampler(SamplerSpec(method="thinning", execution="host",
+                                   t_end=2.0, max_events=32), cfg_t, pt)
+    st = fn(jax.random.PRNGKey(1)).stats()
+    # every proposal costs a target forward: the App. D.1 structural point
+    assert st.rounds >= st.events
+
+
+# ---------------------------------------------------------------------------
+# AR vs SD distribution agreement through the engine (central claim)
+# ---------------------------------------------------------------------------
+
+def test_ar_and_sd_specs_agree_in_distribution(tiny_pair):
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    B, T_END, EMAX = 400, 2.0, 64
+    base = SamplerSpec(execution="vmap", t_end=T_END, max_events=EMAX,
+                       batch=B)
+    ra = build_sampler(base.replace(method="ar"),
+                       cfg_t, pt)(jax.random.PRNGKey(4))
+    rs = build_sampler(base.replace(method="sd", gamma=4),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(5))
+    na, ns = np.array(ra.lengths), np.array(rs.lengths)
+    assert stats.ks_2samp(na, ns).pvalue > 1e-3
+    fa = np.array(ra.times[:, 0])[na > 0]
+    fs = np.array(rs.times[:, 0])[ns > 0]
+    assert stats.ks_2samp(fa, fs).pvalue > 1e-3
+    # the SD run must also report a meaningful acceptance rate
+    st = rs.stats()
+    assert 0.0 < st.acceptance_rate <= 1.0
+    assert st.events_per_forward > 1.0, \
+        "SD must commit more than one event per target forward"
+    ar_st = ra.stats()
+    assert ar_st.drafted == 0 and ar_st.events_per_forward <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_shim_sample_sd_jit_rng_default_no_crash(tiny_pair):
+    """The old rng=None default crashed at trace time; the shim must now
+    default it safely."""
+    from repro.core import sampler
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    with pytest.deprecated_call():
+        res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 1.0, 2, 8)
+    assert int(res.n) >= 0
+
+
+def test_shims_match_engine_results(tiny_pair):
+    from repro.core import sampler
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    rng = jax.random.PRNGKey(9)
+    old = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 2.0, 3, 16, rng=rng)
+    new = build_sampler(SamplerSpec(method="sd", execution="jit", t_end=2.0,
+                                    gamma=3, max_events=16),
+                        cfg_t, pt, cfg_d, pd)(rng)
+    assert int(old.n) == int(new.lengths[0])
+    np.testing.assert_allclose(np.array(old.times), np.array(new.times[0]),
+                               rtol=1e-6)
