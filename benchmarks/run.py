@@ -341,12 +341,55 @@ def appendix_d1_thinning(args):
          f"alpha={alpha:.2f}")
 
 
+# ---------------------------------------------------------------------------
+# Serving throughput: continuous-batching LLM speculative serving
+# ---------------------------------------------------------------------------
+
+def serving_throughput(args):
+    """tokens/sec + tokens/target-forward of ``repro.serving`` on the
+    smoke LLM config, single-request vs continuous batching — the line
+    that makes BENCH_*.json track serving throughput over time."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.models import registry as zoo
+    from repro.serving import ServeRequest, ServingEngine
+
+    cfg_t = smoke_variant(get_arch("llama3.2-1b")).replace(num_layers=4)
+    cfg_d = cfg_t.replace(num_layers=1)
+    pt = zoo.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = zoo.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    prompt = jnp.arange(8, dtype=jnp.int32)
+    new_tokens = 16 if args.quick else 32
+    gamma = 4   # fixed smoke setting so BENCH rows stay comparable
+
+    def run(max_batch, n_req):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
+                            max_len=256, gamma=gamma)
+        for i in range(n_req):
+            eng.submit(ServeRequest(prompt=prompt,
+                                    max_new_tokens=new_tokens, rng=100 + i))
+        eng.run()
+        return eng.stats()
+
+    run(1, 1)          # compile
+    s1 = run(1, 2)
+    run(4, 1)          # compile the batched round
+    sb = run(4, 8)
+    emit("serving/llm_sd", 1e6 / max(sb.tokens_per_sec, 1e-9),
+         f"tok_per_sec_b1={s1.tokens_per_sec:.1f};"
+         f"tok_per_sec_b4={sb.tokens_per_sec:.1f};"
+         f"tok_per_fwd_b1={s1.tokens_per_forward:.2f};"
+         f"tok_per_fwd_b4={sb.tokens_per_forward:.2f};"
+         f"alpha={sb.acceptance_rate:.2f};"
+         f"gamma={gamma};requests=8;max_batch=4")
+
+
 TABLES = {
     "table1": table1_synthetic,
     "table2": table2_real_like,
     "table3": table3_draft_size,
     "fig3": fig3_gamma_sweep,
     "appendix_d1": appendix_d1_thinning,
+    "serving": serving_throughput,
 }
 
 

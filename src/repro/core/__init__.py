@@ -1,6 +1,9 @@
 """The paper's primary contribution: speculative decoding for TPP sampling
-(propose-verify engine, thinning baseline, AR + SD samplers, LLM-token SD)."""
-from . import llm_sd, sampler, speculative, thinning
-from .sampler import (SampleResult, sample_ar_batch, sample_ar_host,
-                      sample_ar_jit, sample_sd_batch, sample_sd_host,
-                      sample_sd_jit)
+(propose-verify engine, thinning baseline, LLM-token SD).
+
+The old ``core.sampler`` shim module (``sample_{ar,sd}_{host,jit,batch}``)
+is gone — build samplers through ``repro.sampling``:
+
+    from repro.sampling import SamplerSpec, build_sampler
+"""
+from . import llm_sd, speculative, thinning

@@ -4,47 +4,24 @@ The same propose-verify engine as TPP-SD restricted to the discrete
 component — i.e. Leviathan et al. — applied to any model in
 ``repro.models.registry`` that exposes ``extend``/``prefill``.
 
-Cache rollback strategies per family:
+Since the ``repro.serving`` redesign there is ONE serving code path:
+these functions are thin batch-1 wrappers over ``ServingEngine``, so a
+single request runs exactly the same batched draft/verify/rollback
+round (with the batch dimension = 1) as production continuous-batching
+traffic. Cache rollback strategies per family:
+
   - mask   : transformer / vlm / encdec — rollback-by-counter (O(1)).
-  - replay : ssm / hybrid — recurrent states cannot be length-masked; we
-    keep the round's entry cache (a cheap O(d_state) checkpoint, held
-    automatically because JAX caches are immutable values) and re-extend
-    the accepted prefix. Cost: one extra draft-side forward of <= gamma
-    tokens per round, amortized by acceptance.
+  - replay : ssm / hybrid — recurrent states cannot be length-masked;
+    the engine keeps the round's entry cache (a cheap checkpoint, held
+    automatically because JAX caches are immutable values) and
+    re-extends the accepted prefix. Cost: one extra draft-side forward
+    of <= gamma tokens per round, amortized by acceptance.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
-
-from ..models import registry
-from ..models import transformer as tfm
-from ..models import encdec as edc
-from . import speculative as spec
-
-_MASK_FAMILIES = {"dense", "moe", "vlm"}
-
-# jit wrappers cached by callable identity so repeated serve calls with the
-# same model bundle reuse compilations
-_JIT_CACHE = {}
-
-
-def _jit(fn):
-    key = id(fn)
-    if key not in _JIT_CACHE:
-        _JIT_CACHE[key] = (fn, jax.jit(fn))
-    return _JIT_CACHE[key][1]
-
-
-def _jit_prefill(fn, max_len: int):
-    key = (id(fn), max_len)
-    if key not in _JIT_CACHE:
-        _JIT_CACHE[key] = (fn, jax.jit(
-            lambda params, batch: fn(params, batch, max_len)))
-    return _JIT_CACHE[key][1]
 
 
 class ServeStats(NamedTuple):
@@ -55,116 +32,39 @@ class ServeStats(NamedTuple):
     rounds: int
 
 
-def _rollback(cfg, model, params, cache_before, cache_after, tokens_committed):
-    if cfg.family in _MASK_FAMILIES:
-        return tfm.rollback(cache_after,
-                            cache_before["len"] + tokens_committed.shape[0])
-    if cfg.family == "encdec":
-        new_len = cache_before["len"] + tokens_committed.shape[0]
-        out = dict(cache_after)
-        out["pos"] = jnp.where(cache_after["pos"] < new_len,
-                               cache_after["pos"], jnp.iinfo(jnp.int32).max)
-        out["len"] = jnp.asarray(new_len, jnp.int32)
-        return out
-    # replay: recompute states from the round-entry checkpoint
-    if tokens_committed.shape[0] == 0:
-        return cache_before
-    _, cache = _jit(model.extend)(params, cache_before,
-                                  tokens_committed[None, :])
-    return cache
+def _run_single(cfg_t, params_t, cfg_d, params_d, prompt, rng, *,
+                method: str, max_new_tokens: int, gamma: int, max_len: int,
+                temperature: float) -> ServeStats:
+    from ..serving import ServeRequest, ServingEngine
+    engine = ServingEngine(cfg_t, params_t, cfg_d, params_d, method=method,
+                           max_batch=1, max_len=max_len, gamma=gamma)
+    engine.submit(ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
+                               temperature=temperature, rng=rng))
+    res = engine.run()[0]
+    return ServeStats(jnp.asarray(res.tokens, jnp.int32), res.n,
+                      res.drafted, res.accepted, res.rounds)
 
 
 def serve_speculative(cfg_t, cfg_d, params_t, params_d, model_t, model_d,
                       prompt, rng, *, max_new_tokens: int, gamma: int,
                       max_len: int, temperature: float = 1.0) -> ServeStats:
-    """Host-loop speculative serving of one sequence (batch dim = 1).
+    """Speculative serving of one sequence (batch-1 ``ServingEngine``).
 
-    prompt: [P] int32. Returns generated tokens + accounting.
+    prompt: [P] int32. Returns generated tokens + accounting. The
+    ``model_t``/``model_d`` arguments are accepted for backward
+    compatibility; the engine resolves (and memoizes) the registry
+    models from the configs.
     """
-    def logp(logits):
-        return jax.nn.log_softmax(logits / temperature, axis=-1)
-
-    # prefill both models on the prompt
-    prefill_t = _jit_prefill(model_t.prefill, max_len)
-    prefill_d = _jit_prefill(model_d.prefill, max_len)
-    lt, cache_t = prefill_t(params_t, {"tokens": prompt[None, :]})
-    ld, cache_d = prefill_d(params_d, {"tokens": prompt[None, :]})
-    lp_last = logp(lt[0, -1])
-    lp_last_d = logp(ld[0, -1])
-    out = []
-    drafted = accepted = rounds = 0
-
-    extend_t = _jit(model_t.extend)
-    extend_d = _jit(model_d.extend)
-
-    while len(out) < max_new_tokens:
-        rounds += 1
-        rng, r_d, r_v, r_a, r_b = jax.random.split(rng, 5)
-        # ---- draft gamma tokens autoregressively (from the DRAFT's dist)
-        cache_d_in = cache_d
-        d_toks, d_logps = [], []
-        lp_d = lp_last_d
-        cd = cache_d
-        for i in range(gamma):
-            tok = int(jax.random.categorical(jax.random.fold_in(r_d, i),
-                                             lp_d))
-            d_toks.append(tok)
-            d_logps.append(lp_d)
-            ldd, cd = extend_d(params_d, cd, jnp.array([[tok]], jnp.int32))
-            lp_d = logp(ldd[0, -1])
-        d_toks_a = jnp.array(d_toks, jnp.int32)
-        # ---- verify in one target forward
-        lt, cache_t_after = extend_t(params_t, cache_t,
-                                     d_toks_a[None, :])
-        lp_t_all = jnp.concatenate([lp_last[None], logp(lt[0])], axis=0)
-        # accept tests
-        A = 0
-        for i, tok in enumerate(d_toks):
-            u = jax.random.uniform(jax.random.fold_in(r_v, i), ())
-            if float(jnp.log(u)) < float(lp_t_all[i, tok]
-                                         - d_logps[i][tok]):
-                A += 1
-            else:
-                break
-        drafted += gamma
-        accepted += A
-        committed = list(d_toks[:A])
-        if A == gamma:  # bonus token from the target's extra distribution
-            bonus = int(jax.random.categorical(r_b, lp_t_all[gamma]))
-            committed.append(bonus)
-        else:
-            tok_adj = int(spec.adjusted_discrete(r_a, lp_t_all[A],
-                                                 d_logps[A]))
-            committed.append(tok_adj)
-        # ---- commit + rollback
-        comm = jnp.array(committed[:-1], jnp.int32)  # in target cache already
-        cache_t = _rollback(cfg_t, model_t, params_t, cache_t, cache_t_after,
-                            comm)
-        cache_d = _rollback(cfg_d, model_d, params_d, cache_d_in, cd, comm)
-        # ingest the final committed token into both caches to obtain lp_last
-        last = jnp.array([[committed[-1]]], jnp.int32)
-        lt2, cache_t = extend_t(params_t, cache_t, last)
-        ld2, cache_d = extend_d(params_d, cache_d, last)
-        lp_last = logp(lt2[0, -1])
-        lp_last_d = logp(ld2[0, -1])
-        out.extend(committed)
-    toks = jnp.array(out[:max_new_tokens], jnp.int32)
-    return ServeStats(toks, len(out[:max_new_tokens]), drafted, accepted,
-                      rounds)
+    del model_t, model_d
+    return _run_single(cfg_t, params_t, cfg_d, params_d, prompt, rng,
+                       method="sd", max_new_tokens=max_new_tokens,
+                       gamma=gamma, max_len=max_len, temperature=temperature)
 
 
 def serve_autoregressive(cfg, params, model, prompt, rng, *,
                          max_new_tokens: int, max_len: int,
                          temperature: float = 1.0) -> ServeStats:
-    lt, cache = model.prefill(params, {"tokens": prompt[None, :]}, max_len)
-    extend = _jit(model.extend)
-    lp = jax.nn.log_softmax(lt[0, -1] / temperature)
-    out = []
-    for i in range(max_new_tokens):
-        rng, r = jax.random.split(rng)
-        tok = int(jax.random.categorical(r, lp))
-        out.append(tok)
-        lt, cache = extend(params, cache, jnp.array([[tok]], jnp.int32))
-        lp = jax.nn.log_softmax(lt[0, -1] / temperature)
-    return ServeStats(jnp.array(out, jnp.int32), len(out), 0, 0,
-                      max_new_tokens)
+    del model
+    return _run_single(cfg, params, None, None, prompt, rng, method="ar",
+                       max_new_tokens=max_new_tokens, gamma=1,
+                       max_len=max_len, temperature=temperature)

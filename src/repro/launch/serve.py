@@ -1,65 +1,77 @@
-"""Speculative-serving launcher (the paper's technique as the serving
-layer of the framework).
+"""Speculative-serving launcher: a thin CLI over ``repro.serving``.
 
 Serves a target architecture with a smaller same-family draft via
-token-level speculative decoding, reporting acceptance and
-tokens-per-target-forward.
+continuous-batching token-level speculative decoding: requests stream
+through a FIFO queue into ``--max-batch`` KV-cache slots, and every
+engine step verifies gamma drafted tokens for all active slots in one
+batched target forward.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --requests 4 --new-tokens 32 --gamma 4
+      --requests 8 --new-tokens 32 --gamma 4 --max-batch 4
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, get_arch, smoke_variant
 from ..models import registry
-from ..sampling import SamplerSpec, build_sampler
+from ..serving import ServeRequest, ServingEngine
+
+
+def build_engine(args):
+    cfg_t = smoke_variant(get_arch(args.arch)).replace(num_layers=4)
+    pt = registry.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    cfg_d = pd = None
+    if args.method == "sd":
+        cfg_d = cfg_t.replace(num_layers=args.draft_layers)
+        pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    return cfg_t, ServingEngine(
+        cfg_t, pt, cfg_d, pd, method=args.method, max_batch=args.max_batch,
+        max_len=args.max_len, gamma=args.gamma,
+        draft_policy=args.draft_policy)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--method", default="sd", choices=["sd", "ar"])
     ap.add_argument("--draft-layers", type=int, default=1)
+    ap.add_argument("--draft-policy", default="fixed",
+                    choices=["fixed", "adaptive"])
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=4)
     args = ap.parse_args()
 
-    cfg_t = smoke_variant(get_arch(args.arch)).replace(num_layers=4)
-    cfg_d = cfg_t.replace(num_layers=args.draft_layers)
-    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
-    pt = mt.init_params(jax.random.PRNGKey(0))
-    pd = md.init_params(jax.random.PRNGKey(1))
+    cfg_t, engine = build_engine(args)
     print(f"serving {cfg_t.name} (target 4L, draft {args.draft_layers}L, "
-          f"gamma={args.gamma})")
-    serve_fn = build_sampler(
-        SamplerSpec(domain="token", method="sd", execution="host",
-                    max_events=args.new_tokens, gamma=args.gamma,
-                    max_len=args.max_len),
-        cfg_t, pt, cfg_d, pd)
-    tot_tok = tot_fwd = tot_acc = tot_drafted = 0
-    t0 = time.time()
+          f"method={args.method}, gamma={args.gamma}, "
+          f"policy={args.draft_policy}, max_batch={args.max_batch}, "
+          f"requests={args.requests})")
     for r in range(args.requests):
-        prompt = jax.random.randint(jax.random.PRNGKey(10 + r), (8,), 0,
-                                    cfg_t.vocab_size).astype(jnp.int32)
-        st = serve_fn(jax.random.PRNGKey(100 + r), prompt).stats()
-        tot_tok += st.events
-        tot_fwd += st.rounds
-        tot_acc += st.accepted
-        tot_drafted += st.drafted
-        print(f"request {r}: {st.events} tokens, {st.rounds} target "
-              f"forwards")
-    dt = time.time() - t0
-    print(f"served {tot_tok} tokens in {dt:.1f}s | alpha="
-          f"{tot_acc / max(tot_drafted, 1):.2f} | tokens/target-forward="
-          f"{tot_tok / max(tot_fwd, 1):.2f} (AR = 1.0)")
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(10 + r), (args.prompt_len,), 0,
+            cfg_t.vocab_size).astype(jnp.int32)
+        engine.submit(ServeRequest(prompt=prompt,
+                                   max_new_tokens=args.new_tokens,
+                                   rng=100 + r))
+    while engine.scheduler.has_work():
+        for res in engine.step():
+            print(f"request {res.request_id}: {res.n} tokens, "
+                  f"{res.rounds} rounds, alpha={res.acceptance_rate:.2f}")
+    st = engine.stats()
+    print(f"served {st.tokens} tokens in {st.wall_s:.1f}s | "
+          f"alpha={st.acceptance_rate:.2f} | "
+          f"tokens/target-forward={st.tokens_per_forward:.2f} "
+          f"(AR = ~{args.max_batch}.0 at this batch) | "
+          f"tokens/sec={st.tokens_per_sec:.1f}")
 
 
 if __name__ == "__main__":

@@ -8,11 +8,12 @@ Public API:
     ENGINE         — process-wide engine (shared compilation cache)
     build_sampler / sample — conveniences over ENGINE
 
-Strategies ("ar" | "sd" | "thinning" + token-domain "llm_*") and draft
-policies ("fixed") are decorator-registered; see ``registry.py``.
+Strategies ("ar" | "sd" | "thinning") and draft policies ("fixed" |
+"adaptive") are decorator-registered; see ``registry.py``. Token-domain
+specs are served by the ``repro.serving`` continuous-batching engine.
 """
 from .engine import ENGINE, SamplingEngine, build_sampler, sample
-from .policies import DraftPolicy, FixedGamma
+from .policies import AdaptiveGamma, DraftPolicy, FixedGamma
 from .registry import (draft_policy_names, get_draft_policy, get_strategy,
                        register_draft_policy, register_strategy,
                        strategy_names)
@@ -22,7 +23,7 @@ from .spec import SamplerSpec, SpecError
 __all__ = [
     "ENGINE", "SamplingEngine", "build_sampler", "sample",
     "SamplerSpec", "SpecError", "SampleBatch", "SampleStats", "SeqResult",
-    "DraftPolicy", "FixedGamma",
+    "DraftPolicy", "FixedGamma", "AdaptiveGamma",
     "register_strategy", "get_strategy", "strategy_names",
     "register_draft_policy", "get_draft_policy", "draft_policy_names",
 ]

@@ -33,7 +33,7 @@ from .registry import get_strategy
 from .result import (SampleBatch, batch_from_mapped, batch_from_seq,
                      stack_seqs)
 from .spec import SamplerSpec, SpecError
-from .strategies import ModelBundle, TokenBundle
+from .strategies import ModelBundle
 
 
 def _data_mesh():
@@ -103,6 +103,14 @@ class SamplingEngine:
         strat = get_strategy(spec.method)
         bundle = ModelBundle(cfg_t, params_t, cfg_d, params_d)
 
+        if spec.requires_draft and spec.execution != "host":
+            from .policies import resolve_policy
+            if not resolve_policy(spec).is_static:
+                raise SpecError(
+                    f"draft_policy={spec.draft_policy!r} adapts gamma "
+                    "between rounds; the device executors need a static "
+                    "window — use execution='host'")
+
         if spec.execution == "host":
             single = strat.build_host(spec, bundle)
 
@@ -136,14 +144,12 @@ class SamplingEngine:
 
     # -- token domain ------------------------------------------------------
     def _build_token(self, spec, cfg_t, params_t, cfg_d, params_d):
-        from ..models import registry as model_registry
-        model_t = model_registry.get_model(cfg_t)
-        model_d = (model_registry.get_model(cfg_d)
-                   if cfg_d is not None else None)
-        strat = get_strategy(f"llm_{spec.method}")
-        bundle = TokenBundle(cfg_t, params_t, model_t, cfg_d, params_d,
-                             model_d)
-        single = strat.build_host(spec, bundle)
+        """Route token serving through the continuous-batching
+        ``repro.serving`` engine: ``spec.batch`` KV-cache slots serve
+        however many prompts the call provides (a [N, P] prompt array
+        with N > batch streams through the scheduler's queue)."""
+        from ..serving import ServeRequest, ServingEngine
+        from .result import SeqResult
 
         def token_fn(rng, prompt):
             prompt = jnp.asarray(prompt, jnp.int32)
@@ -153,14 +159,33 @@ class SamplingEngine:
                 raise SpecError(
                     f"prompt length {prompt.shape[-1]} + max_events "
                     f"{spec.max_events} exceeds max_len {spec.max_len}")
-            if spec.batch == 1 and prompt.ndim == 1:
-                return stack_seqs([single(rng, prompt)])
-            prompts = (prompt if prompt.ndim == 2
-                       else jnp.broadcast_to(prompt, (spec.batch,)
-                                             + prompt.shape))
-            rngs = jax.random.split(rng, prompts.shape[0])
-            return stack_seqs([single(r, p)
-                               for r, p in zip(rngs, prompts)])
+            prompts = (prompt[None] if prompt.ndim == 1 else prompt)
+            if prompt.ndim == 1 and spec.batch > 1:
+                prompts = jnp.broadcast_to(
+                    prompts, (spec.batch,) + prompts.shape[1:])
+            n_req = prompts.shape[0]
+            engine = ServingEngine(
+                cfg_t, params_t, cfg_d, params_d, method=spec.method,
+                max_batch=spec.batch, max_len=spec.max_len,
+                gamma=spec.gamma, draft_policy=spec.draft_policy)
+            rngs = (jax.random.split(rng, n_req) if n_req > 1 else [rng])
+            order = [engine.submit(ServeRequest(
+                prompt=p, max_new_tokens=spec.max_events,
+                temperature=spec.temperature, rng=r))
+                for r, p in zip(rngs, prompts)]
+            by_id = {res.request_id: res for res in engine.run()}
+
+            def to_seq(res) -> SeqResult:
+                types = jnp.zeros((spec.max_events,), jnp.int32)
+                n = min(res.n, spec.max_events)
+                if n:
+                    types = types.at[:n].set(
+                        jnp.asarray(res.tokens[:n], jnp.int32))
+                return SeqResult(jnp.zeros((spec.max_events,), jnp.float32),
+                                 types, jnp.int32(n), jnp.int32(res.drafted),
+                                 jnp.int32(res.accepted),
+                                 jnp.int32(res.rounds))
+            return stack_seqs([to_seq(by_id[rid]) for rid in order])
         return token_fn
 
 

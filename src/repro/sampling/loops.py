@@ -267,6 +267,29 @@ def run_sd_host(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
                         s.drafted, s.accepted, s.rounds)
 
 
+def run_sd_host_schedule(cfg_t, cfg_d, params_t, params_d, rng, t_end: float,
+                         policy, max_events: int, round_fn_for) -> SeqResult:
+    """Host SD loop following a draft policy's per-round gamma schedule
+    (adaptive window — Leviathan et al. 2023 acceptance feedback).
+
+    Buffers and caches are sized by ``policy.max_gamma`` so every
+    compiled round (one per distinct gamma, via ``round_fn_for``) shares
+    the same state shapes. Adapting gamma between rounds cannot bias the
+    output: round t's window depends only on rounds < t and verification
+    is exact for every window length.
+    """
+    s = init_sd_state(cfg_t, cfg_d, rng, policy.max_gamma, max_events)
+    state = policy.init_state()
+    while float(s.t_pend) < t_end and int(s.n) < max_events:
+        gamma = policy.gamma(state)
+        drafted0, accepted0 = int(s.drafted), int(s.accepted)
+        s = round_fn_for(gamma)(s)
+        state = policy.update(state, int(s.drafted) - drafted0,
+                              int(s.accepted) - accepted0)
+    return finalize_seq(s.times, s.types, s.n, t_end, max_events,
+                        s.drafted, s.accepted, s.rounds)
+
+
 # ---------------------------------------------------------------------------
 # neural CIF thinning (App. D.1 baseline)
 # ---------------------------------------------------------------------------

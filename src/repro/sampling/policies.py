@@ -1,22 +1,46 @@
-"""Draft policies: how many events the draft model proposes per round.
+"""Draft policies: how many events/tokens the draft model proposes per
+propose-verify round.
 
-The jitted SD loop needs a *static* window length per compiled round, so a
-policy exposes ``round_gamma(round_idx)``; FixedGamma returns a constant
-(the paper's setting). An adaptive-gamma policy (Leviathan et al. 2023's
-lenience analysis, or acceptance-rate feedback) plugs in here by returning
-a schedule — the engine compiles one round per distinct gamma and the host
-executor can follow the schedule exactly.
+A policy is a small pure-functional state machine driven by the HOST
+executor (the jitted round body needs a *static* window length, so the
+executor compiles one round per distinct gamma and follows the policy's
+schedule between device calls):
+
+    state = policy.init_state()
+    g = policy.gamma(state)           # window for the next round
+    ... run one round with window g ...
+    state = policy.update(state, drafted=g, accepted=A)
+
+``FixedGamma`` (the paper's setting) is static — every round uses the
+same window, so the device executors (jit/vmap/sharded) can close over
+it. ``AdaptiveGamma`` applies Leviathan et al. (2023)'s acceptance
+feedback — grow the window after a fully-accepted round, shrink it
+after an early rejection — and is therefore host-only.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 from .registry import register_draft_policy
 
 
 class DraftPolicy:
-    """Interface: per-round draft window length."""
+    """Interface: per-round draft window length (host-driven schedule)."""
 
+    # -- stateful schedule (what executors drive) -------------------------
+    def init_state(self) -> Any:
+        return None
+
+    def gamma(self, state) -> int:
+        """Window length for the next round given the policy state."""
+        return self.round_gamma(0)
+
+    def update(self, state, drafted: int, accepted: int) -> Any:
+        """Fold one round's acceptance outcome into the state."""
+        return state
+
+    # -- static views ------------------------------------------------------
     def round_gamma(self, round_idx: int) -> int:
         raise NotImplementedError
 
@@ -35,22 +59,68 @@ class DraftPolicy:
 @dataclass(frozen=True)
 class FixedGamma(DraftPolicy):
     """The paper's policy: a constant draft window."""
-    gamma: int
+    gamma_value: int
 
     def round_gamma(self, round_idx: int) -> int:
-        return self.gamma
+        return self.gamma_value
+
+    def gamma(self, state) -> int:
+        return self.gamma_value
 
     @property
     def max_gamma(self) -> int:
-        return self.gamma
+        return self.gamma_value
 
     @property
     def is_static(self) -> bool:
         return True
 
 
-def resolve_policy(spec) -> DraftPolicy:
-    """Instantiate the spec's draft policy (today: name -> cls(gamma))."""
+@register_draft_policy("adaptive")
+@dataclass(frozen=True)
+class AdaptiveGamma(DraftPolicy):
+    """Acceptance-feedback window (Leviathan et al. 2023, App. on
+    choosing gamma): after a round where every draft was accepted the
+    window grows by one; after a round with a rejection it shrinks by
+    one. ``gamma_value`` caps the window (and sizes the fixed buffers);
+    the schedule starts halfway up.
+
+    Adapting gamma never biases the output: the window length of round t
+    depends only on rounds < t, and speculative verification is exact
+    for every window length, so the sampled distribution stays equal to
+    target AR sampling for any schedule.
+    """
+    gamma_value: int
+
+    def init_state(self) -> int:
+        return max(1, (self.gamma_value + 1) // 2)
+
+    def gamma(self, state) -> int:
+        return int(min(max(1, state), self.gamma_value))
+
+    def update(self, state, drafted: int, accepted: int) -> int:
+        if drafted and accepted >= drafted:
+            return min(self.gamma_value, state + 1)
+        return max(1, state - 1)
+
+    def round_gamma(self, round_idx: int) -> int:
+        return self.init_state()
+
+    @property
+    def max_gamma(self) -> int:
+        return self.gamma_value
+
+    @property
+    def is_static(self) -> bool:
+        return self.gamma_value == 1
+
+
+def resolve_policy_by_name(name: str, gamma: int) -> DraftPolicy:
+    """Registry lookup + instantiation (name -> cls(gamma))."""
     from .registry import get_draft_policy
-    cls = get_draft_policy(spec.draft_policy)
-    return cls(spec.gamma)
+    return get_draft_policy(name)(gamma)
+
+
+def resolve_policy(spec) -> DraftPolicy:
+    """Instantiate the spec's draft policy."""
+    return resolve_policy_by_name(spec.draft_policy, spec.gamma)

@@ -30,13 +30,18 @@ class SamplerSpec:
                  "sharded" — vmap with the seed batch sharded over the
                              device mesh (multi-device fan-out)
     batch      : number of sequences (ignored for execution="jit": 1).
-    gamma      : draft window length for method="sd".
-    draft_policy: name in the draft-policy registry ("fixed" today; the
-                 hook for adaptive-gamma policies later).
+                 For domain="token" this is the serving engine's
+                 ``max_batch`` — the number of KV-cache slots the
+                 continuous-batching scheduler fills.
+    gamma      : draft window length for method="sd" (the max window for
+                 adaptive policies).
+    draft_policy: name in the draft-policy registry — "fixed" (the
+                 paper's constant window) or "adaptive" (acceptance-rate
+                 feedback, host execution only).
     domain     : "tpp" (continuous-time event sequences) or "token" (the
-                 discrete LLM special case served from the model zoo);
-                 for "token", max_events is the max-new-tokens budget and
-                 t_end is ignored.
+                 discrete LLM special case served through
+                 ``repro.serving``); for "token", max_events is the
+                 max-new-tokens budget and t_end is ignored.
     """
 
     method: str = "sd"

@@ -1,10 +1,9 @@
 """Registered sampling strategies.
 
 A strategy binds a (spec, model bundle) pair to single-sequence sampler
-callables; the engine's executors then lift those over batches, devices,
-and meshes. TPP strategies return ``SeqResult``; token strategies (the
-discrete LLM special case served by ``launch/serve.py``) additionally
-take the prompt.
+callables returning ``SeqResult``; the engine's executors then lift
+those over batches, devices, and meshes. The discrete token domain is
+served by ``repro.serving`` instead (see the note at the bottom).
 """
 from __future__ import annotations
 
@@ -12,12 +11,10 @@ import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import loops
 from .policies import resolve_policy
 from .registry import register_strategy
-from .result import SeqResult
 
 
 class ModelBundle(NamedTuple):
@@ -51,19 +48,33 @@ class SDStrategy:
     forward, commit the accepted prefix + one replacement/bonus event."""
 
     def build_device(self, spec, b: ModelBundle):
-        gamma = resolve_policy(spec).round_gamma(0)
+        policy = resolve_policy(spec)
+        gamma = policy.gamma(policy.init_state())
         return lambda rng: loops.run_sd_device(
             b.cfg_t, b.cfg_d, b.params_t, b.params_d, rng, spec.t_end,
             gamma, spec.max_events)
 
     def build_host(self, spec, b: ModelBundle):
-        gamma = resolve_policy(spec).round_gamma(0)
-        round_fn = jax.jit(functools.partial(
-            loops.sd_round, b.cfg_t, b.cfg_d, b.params_t, b.params_d,
-            gamma))
-        return lambda rng: loops.run_sd_host(
+        policy = resolve_policy(spec)
+        # one jitted round per distinct window length; the host executor
+        # follows the policy's schedule between device calls
+        round_fns = {}
+
+        def round_fn_for(gamma: int):
+            if gamma not in round_fns:
+                round_fns[gamma] = jax.jit(functools.partial(
+                    loops.sd_round, b.cfg_t, b.cfg_d, b.params_t,
+                    b.params_d, gamma))
+            return round_fns[gamma]
+
+        if policy.is_static:
+            gamma = policy.gamma(policy.init_state())
+            return lambda rng: loops.run_sd_host(
+                b.cfg_t, b.cfg_d, b.params_t, b.params_d, rng, spec.t_end,
+                gamma, spec.max_events, round_fn=round_fn_for(gamma))
+        return lambda rng: loops.run_sd_host_schedule(
             b.cfg_t, b.cfg_d, b.params_t, b.params_d, rng, spec.t_end,
-            gamma, spec.max_events, round_fn=round_fn)
+            policy, spec.max_events, round_fn_for)
 
 
 @register_strategy("thinning")
@@ -81,62 +92,6 @@ class ThinningStrategy:
             horizon=spec.thinning_horizon)
 
 
-# ---------------------------------------------------------------------------
-# token domain: the discrete LLM special case (Leviathan et al.)
-# ---------------------------------------------------------------------------
-
-def _token_result(st, max_events: int) -> SeqResult:
-    """Pad ServeStats tokens into the unified fixed-shape result."""
-    types = jnp.zeros((max_events,), jnp.int32)
-    n = min(int(st.n), max_events)
-    if n:
-        types = types.at[:n].set(st.tokens[:n])
-    return SeqResult(jnp.zeros((max_events,), jnp.float32), types,
-                     jnp.int32(n), jnp.int32(st.drafted),
-                     jnp.int32(st.accepted), jnp.int32(st.rounds))
-
-
-class TokenBundle(NamedTuple):
-    """Model-zoo bundle: configs + params + registry ModelApi pair."""
-    cfg_t: Any
-    params_t: Any
-    model_t: Any
-    cfg_d: Optional[Any] = None
-    params_d: Optional[Any] = None
-    model_d: Optional[Any] = None
-
-
-@register_strategy("llm_ar")
-class TokenARStrategy:
-    def build_device(self, spec, b: TokenBundle):
-        return None
-
-    def build_host(self, spec, b: TokenBundle):
-        from ..core import llm_sd
-
-        def fn(rng, prompt):
-            st = llm_sd.serve_autoregressive(
-                b.cfg_t, b.params_t, b.model_t, prompt, rng,
-                max_new_tokens=spec.max_events, max_len=spec.max_len,
-                temperature=spec.temperature)
-            return _token_result(st, spec.max_events)
-        return fn
-
-
-@register_strategy("llm_sd")
-class TokenSDStrategy:
-    def build_device(self, spec, b: TokenBundle):
-        return None
-
-    def build_host(self, spec, b: TokenBundle):
-        from ..core import llm_sd
-        gamma = resolve_policy(spec).round_gamma(0)
-
-        def fn(rng, prompt):
-            st = llm_sd.serve_speculative(
-                b.cfg_t, b.cfg_d, b.params_t, b.params_d, b.model_t,
-                b.model_d, prompt, rng, max_new_tokens=spec.max_events,
-                gamma=gamma, max_len=spec.max_len,
-                temperature=spec.temperature)
-            return _token_result(st, spec.max_events)
-        return fn
+# The token domain ("llm" special case) is not a registered strategy:
+# ``SamplerSpec(domain="token")`` routes through the ``repro.serving``
+# continuous-batching engine (see ``SamplingEngine._build_token``).

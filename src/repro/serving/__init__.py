@@ -1,0 +1,16 @@
+"""Continuous-batching speculative serving (request/scheduler API).
+
+The serving layer turns the paper's single-sequence propose-verify loop
+into a system that takes traffic: requests enter a FIFO queue, a
+scheduler slots them into a pooled per-slot KV cache, and every engine
+step runs ONE batched draft+verify round for all active slots — so a
+single target forward verifies gamma drafted tokens for every request
+in flight.
+"""
+from .engine import ServingEngine
+from .kv_pool import KVCachePool, rollback_kind
+from .request import EngineStats, ServeRequest, ServeResult
+from .scheduler import Scheduler, SlotState
+
+__all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
+           "Scheduler", "SlotState", "KVCachePool", "rollback_kind"]

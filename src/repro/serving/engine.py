@@ -1,0 +1,407 @@
+"""``ServingEngine``: continuous-batching speculative serving.
+
+    engine = ServingEngine(cfg_t, params_t, cfg_d, params_d,
+                           max_batch=4, max_len=256, gamma=4)
+    engine.submit(ServeRequest(prompt, max_new_tokens=32, rng=7))
+    ...
+    results = engine.run()          # [ServeResult], acceptance per request
+    print(engine.stats().describe())  # tokens/fwd, tokens/sec
+
+Each ``step()`` is one scheduler round:
+
+  1. admit queued requests into free KV-cache slots (prefill target +
+     draft at batch 1, sample the first new token from the prefill
+     logits, write the caches into the pool);
+  2. run ONE batched propose-verify round for every active slot — the
+     draft drafts gamma tokens (gamma+1 batched c=1 forwards), the
+     target verifies pending+drafts in a single c=gamma+1 forward, and
+     acceptance/rollback is computed per slot inside the same jitted
+     call (mask families; replay families re-extend on the host);
+  3. commit accepted prefixes + the bonus/adjusted token, retire
+     requests whose budget is spent (their slots refill at the next
+     step's admission).
+
+All randomness a request consumes comes from ``fold_in(request.rng,
+round_idx)``, so the output distribution is independent of the batch a
+request happens to share — the batch-1 engine IS the single-request
+serving path (``core.llm_sd`` and ``SamplerSpec(domain="token")`` both
+route here).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import speculative as sdp
+from ..models import registry
+from .kv_pool import KVCachePool, rollback_kind, rollback_one, select_slots
+from .request import EngineStats, ServeRequest, ServeResult, _as_key
+from .scheduler import Scheduler, SlotState
+
+# Jitted closures cached per (role, cfg..., static dims). Configs are
+# frozen dataclasses (hashable), so the cache survives across engine
+# instances — a fresh ServingEngine per call reuses all compilations.
+_FN_CACHE: Dict[Any, Any] = {}
+_MODELS: Dict[Any, Any] = {}
+
+
+def _model_for(cfg):
+    if cfg not in _MODELS:
+        _MODELS[cfg] = registry.get_model(cfg)
+    return _MODELS[cfg]
+
+
+def _prefill_fn(cfg, max_len: int):
+    key = ("prefill", cfg, max_len)
+    if key not in _FN_CACHE:
+        model = _model_for(cfg)
+        _FN_CACHE[key] = jax.jit(
+            lambda params, batch: model.prefill(params, batch, max_len))
+    return _FN_CACHE[key]
+
+
+def _single_extend_fn(cfg):
+    """Batch-1 extend (replay-family rollback re-extends through this)."""
+    key = ("extend1", cfg)
+    if key not in _FN_CACHE:
+        model = _model_for(cfg)
+        _FN_CACHE[key] = jax.jit(
+            lambda params, cache, toks: model.extend(params, cache, toks))
+    return _FN_CACHE[key]
+
+
+def _pool_extend(model, params, pool_tree, toks):
+    """One batched forward: extend every slot's batch-1 cache by
+    ``toks[slot]`` in a single vmapped call. toks: [S, c]."""
+    def one(cache, t):
+        logits, cache2 = model.extend(params, cache, t[None, :])
+        return logits[0], cache2
+    return jax.vmap(one)(pool_tree, toks)
+
+
+def _ar_round_fn(cfg_t):
+    """Batched decode: ingest each slot's pending token, sample the next."""
+    key = ("ar_round", cfg_t)
+    if key not in _FN_CACHE:
+        model_t = _model_for(cfg_t)
+
+        def fn(params_t, pt_tree, pending, keys, ridx, temps, active):
+            logits, pt2 = _pool_extend(model_t, params_t, pt_tree,
+                                       pending[:, None])
+            lp = jax.nn.log_softmax(logits[:, -1] / temps[:, None], axis=-1)
+            rks = jax.vmap(jax.random.fold_in)(keys, ridx)
+            tok = jax.vmap(jax.random.categorical)(rks, lp).astype(jnp.int32)
+            return select_slots(active, pt2, pt_tree), tok
+
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+def _sd_round_fn(cfg_t, cfg_d, gamma: int):
+    """One batched propose-verify round (static draft window ``gamma``).
+
+    Returns (pool_t', pool_d', d_toks [S,g], A [S], extra [S]). For mask
+    families the returned pools are already rolled back to the committed
+    prefix (and idle slots restored); replay families get the
+    post-forward pools back and the engine re-extends on the host.
+    """
+    key = ("sd_round", cfg_t, cfg_d, gamma)
+    if key not in _FN_CACHE:
+        model_t, model_d = _model_for(cfg_t), _model_for(cfg_d)
+        kind_t, kind_d = rollback_kind(cfg_t), rollback_kind(cfg_d)
+
+        def fn(params_t, params_d, pt_tree, pd_tree, pending, keys, ridx,
+               temps, active):
+            ks = jax.vmap(lambda k, r: jax.random.split(
+                jax.random.fold_in(k, r), 4))(keys, ridx)
+            r_d, r_v, r_a, r_b = ks[:, 0], ks[:, 1], ks[:, 2], ks[:, 3]
+            len0_t, len0_d = pt_tree["len"], pd_tree["len"]
+
+            # ---- draft gamma tokens (pending ingested first)
+            logits, pd2 = _pool_extend(model_d, params_d, pd_tree,
+                                       pending[:, None])
+            lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
+            d_toks, d_logps = [], []
+            for i in range(gamma):
+                ki = jax.vmap(lambda k: jax.random.fold_in(k, i))(r_d)
+                tok = jax.vmap(jax.random.categorical)(ki, lp_d)
+                d_toks.append(tok.astype(jnp.int32))
+                d_logps.append(lp_d)
+                logits, pd2 = _pool_extend(model_d, params_d, pd2,
+                                           tok[:, None].astype(jnp.int32))
+                lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
+            d_toks = jnp.stack(d_toks, axis=1)          # [S, g]
+            d_logps = jnp.stack(d_logps, axis=1)        # [S, g, V]
+
+            # ---- verify pending + drafts in ONE target forward (c=g+1)
+            ver = jnp.concatenate([pending[:, None], d_toks], axis=1)
+            lg_t, pt2 = _pool_extend(model_t, params_t, pt_tree, ver)
+            lp_t_all = jax.nn.log_softmax(
+                lg_t / temps[:, None, None], axis=-1)   # [S, g+1, V]
+
+            # ---- acceptance tests (same streams as the batch-1 path)
+            u = jax.vmap(lambda k: jax.vmap(
+                lambda i: jax.random.uniform(jax.random.fold_in(k, i)))(
+                    jnp.arange(gamma)))(r_v)            # [S, g]
+            lp_t_tok = jnp.take_along_axis(
+                lp_t_all[:, :gamma], d_toks[..., None], -1)[..., 0]
+            lp_d_tok = jnp.take_along_axis(
+                d_logps, d_toks[..., None], -1)[..., 0]
+            acc = jnp.log(u) < (lp_t_tok - lp_d_tok)
+            A = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+            all_acc = A == gamma
+
+            # ---- bonus (all accepted) or adjusted (first rejection)
+            bonus = jax.vmap(jax.random.categorical)(r_b, lp_t_all[:, gamma])
+            Ac = jnp.minimum(A, gamma - 1)
+            lp_t_A = jax.vmap(lambda l, a: l[a])(lp_t_all, A)
+            lp_d_A = jax.vmap(lambda l, a: l[a])(d_logps, Ac)
+            adj = jax.vmap(sdp.adjusted_discrete)(r_a, lp_t_A, lp_d_A)
+            extra = jnp.where(all_acc, bonus, adj).astype(jnp.int32)
+
+            # ---- rollback to committed prefix (mask families, in-jit)
+            if kind_t == "replay":
+                pt_out = pt2
+            else:
+                rolled = jax.vmap(lambda c, n: rollback_one(cfg_t, c, n))(
+                    pt2, len0_t + 1 + A)
+                pt_out = select_slots(active, rolled, pt_tree)
+            if kind_d == "replay":
+                pd_out = pd2
+            else:
+                rolled = jax.vmap(lambda c, n: rollback_one(cfg_d, c, n))(
+                    pd2, len0_d + 1 + A)
+                pd_out = select_slots(active, rolled, pd_tree)
+            return pt_out, pd_out, d_toks, A, extra
+
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+class ServingEngine:
+    """Request-queue serving over the model zoo (method "sd" or "ar")."""
+
+    def __init__(self, cfg_t, params_t, cfg_d=None, params_d=None, *,
+                 method: str = "sd", max_batch: int = 4, max_len: int = 256,
+                 gamma: int = 4, draft_policy: str = "fixed"):
+        if method not in ("ar", "sd"):
+            raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
+        if method == "sd" and (cfg_d is None or params_d is None):
+            raise ValueError("method='sd' needs a draft model "
+                             "(cfg_d, params_d)")
+        self.cfg_t, self.params_t = cfg_t, params_t
+        self.cfg_d, self.params_d = cfg_d, params_d
+        self.method = method
+        self.max_batch, self.max_len = max_batch, max_len
+        self.scheduler = Scheduler(max_batch, max_len)
+        self.pool_t = KVCachePool(max_batch)
+        self.pool_d = KVCachePool(max_batch) if method == "sd" else None
+        if method == "sd":
+            from ..sampling.policies import resolve_policy_by_name
+            self.policy = resolve_policy_by_name(draft_policy, gamma)
+            self._policy_state = self.policy.init_state()
+        else:
+            self.policy = None
+        self._stats = EngineStats()
+        self._results: List[ServeResult] = []
+
+    # -- public API --------------------------------------------------------
+    def submit(self, req: ServeRequest = None, *, prompt=None,
+               max_new_tokens: int = 32, temperature: float = 1.0,
+               rng=0, extra=None) -> int:
+        """Queue a request (either a ``ServeRequest`` or its fields)."""
+        if req is None:
+            req = ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
+                               temperature=temperature, rng=rng, extra=extra)
+        return self.scheduler.submit(req)
+
+    def step(self) -> List[ServeResult]:
+        """One scheduler round; returns requests completed this round."""
+        t0 = time.perf_counter()
+        done: List[ServeResult] = []
+        for slot, state in self.scheduler.admit():
+            self._admit(slot, state)
+        # requests whose whole budget was the prefill token
+        alive: List[Tuple[int, SlotState]] = []
+        for slot, state in self.scheduler.active():
+            if state.done:
+                done.append(self._retire(slot))
+            else:
+                alive.append((slot, state))
+        if alive:
+            if self.method == "sd":
+                self._sd_step(alive)
+            else:
+                self._ar_step(alive)
+            for slot, state in alive:
+                if state.done:
+                    done.append(self._retire(slot))
+        self._stats.wall_s += time.perf_counter() - t0
+        self._results.extend(done)
+        return done
+
+    def run(self, max_steps: Optional[int] = None) -> List[ServeResult]:
+        """Step until the queue and every slot are drained."""
+        out: List[ServeResult] = []
+        steps = 0
+        while self.scheduler.has_work():
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
+    def stats(self) -> EngineStats:
+        return self._stats
+
+    # -- internals ---------------------------------------------------------
+    def _admit(self, slot: int, state: SlotState) -> None:
+        req = state.request
+        batch = {"tokens": req.prompt[None, :]}
+        if req.extra:
+            batch.update(req.extra)
+        logits, cache_t = _prefill_fn(self.cfg_t, self.max_len)(
+            self.params_t, batch)
+        self.pool_t.ensure(cache_t)
+        self.pool_t.write(slot, cache_t)
+        if self.method == "sd":
+            _, cache_d = _prefill_fn(self.cfg_d, self.max_len)(
+                self.params_d, batch)
+            self.pool_d.ensure(cache_d)
+            self.pool_d.write(slot, cache_d)
+        lp = jax.nn.log_softmax(logits[0, -1] / req.temperature)
+        tok0 = int(jax.random.categorical(
+            jax.random.fold_in(req.rng, 0), lp))
+        state.out.append(tok0)
+        state.pending = tok0
+        self._stats.prefills += 1
+        self._stats.tokens += 1
+
+    def _round_inputs(self, alive):
+        S = self.max_batch
+        pending = np.zeros((S,), np.int32)
+        ridx = np.zeros((S,), np.int32)
+        temps = np.ones((S,), np.float32)
+        active = np.zeros((S,), bool)
+        keys = [jax.random.PRNGKey(0)] * S
+        for slot, st in alive:
+            pending[slot] = st.pending
+            ridx[slot] = st.round_idx
+            temps[slot] = st.request.temperature
+            active[slot] = True
+            keys[slot] = _as_key(st.request.rng)
+        return (jnp.asarray(pending), jnp.stack(keys), jnp.asarray(ridx),
+                jnp.asarray(temps), jnp.asarray(active))
+
+    def _clamped_gamma(self, alive) -> int:
+        """The policy's window, clamped so the round never drafts past
+        (a) the largest remaining budget among alive slots — a round
+        delivers at most gamma+1 tokens, so drafting more is pure waste
+        — and (b) a non-ring KV buffer's capacity: the models' slot
+        indexing wraps modulo the buffer, so writing beyond it would
+        silently overwrite the prompt's entries."""
+        gamma = self.policy.gamma(self._policy_state)
+        max_remaining = max(st.request.max_new_tokens - len(st.out)
+                            for _, st in alive)
+        gamma = min(gamma, max(1, max_remaining - 1))
+        for cfg, pool in ((self.cfg_t, self.pool_t),
+                          (self.cfg_d, self.pool_d)):
+            if (rollback_kind(cfg) != "replay"
+                    and cfg.sliding_window == 0 and "pos" in pool.tree):
+                smax = pool.tree["pos"].shape[-1]
+                lens = np.asarray(pool.lens)
+                head = smax - 1 - max(int(lens[s]) for s, _ in alive)
+                gamma = min(gamma, max(1, head))
+        return gamma
+
+    def _sd_step(self, alive) -> None:
+        gamma = self._clamped_gamma(alive)
+        pending, keys, ridx, temps, active = self._round_inputs(alive)
+        fn = _sd_round_fn(self.cfg_t, self.cfg_d, gamma)
+        pt_ckpt, pd_ckpt = self.pool_t.tree, self.pool_d.tree
+        pt_out, pd_out, d_toks, A, extra = fn(
+            self.params_t, self.params_d, pt_ckpt, pd_ckpt, pending, keys,
+            ridx, temps, active)
+        d_toks, A, extra = (np.asarray(d_toks), np.asarray(A),
+                            np.asarray(extra))
+        commits = {}
+        delivered = 0
+        for slot, st in alive:
+            a = int(A[slot])
+            toks = [int(st.pending)] + [int(t) for t in d_toks[slot, :a]]
+            commits[slot] = (toks, a == gamma)
+            before = len(st.out)
+            st.out.extend(toks[1:] + [int(extra[slot])])
+            st.pending = int(extra[slot])
+            st.round_idx += 1
+            st.drafted += gamma
+            st.accepted += a
+            st.rounds += 1
+            if len(st.out) > st.request.max_new_tokens:
+                del st.out[st.request.max_new_tokens:]
+            delivered += len(st.out) - before
+        self.pool_t.tree = self._rolled_pool(
+            self.cfg_t, self.params_t, pt_ckpt, pt_out, commits)
+        self.pool_d.tree = self._rolled_pool(
+            self.cfg_d, self.params_d, pd_ckpt, pd_out, commits)
+        n_active = len(alive)
+        acc_sum = int(sum(int(A[s]) for s, _ in alive))
+        # one policy update per request, as in single-request serving —
+        # a batch-aggregate (gamma*n, sum A) would only ever grow the
+        # window when EVERY slot fully accepts, collapsing gamma under
+        # real mixed traffic
+        for slot, _ in alive:
+            self._policy_state = self.policy.update(
+                self._policy_state, gamma, int(A[slot]))
+        self._stats.tokens += delivered
+        self._stats.drafted += gamma * n_active
+        self._stats.accepted += acc_sum
+        self._stats.target_forwards += 1
+        self._stats.draft_forwards += gamma + 1
+
+    def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
+        """Final pool for this round. Mask families were rolled back
+        inside the jitted round; replay families re-extend each active
+        slot's committed tokens from the round-entry checkpoint (the
+        fully-accepted case reuses the post-forward state directly)."""
+        if rollback_kind(cfg) != "replay":
+            return out_tree
+        ext1 = _single_extend_fn(cfg)
+        tree = ckpt_tree
+        for slot, (toks, fully_accepted) in commits.items():
+            if fully_accepted:
+                cache = jax.tree.map(lambda p: p[slot], out_tree)
+            else:
+                cache = jax.tree.map(lambda p: p[slot], ckpt_tree)
+                _, cache = ext1(params, cache,
+                                jnp.asarray(toks, jnp.int32)[None, :])
+            tree = jax.tree.map(lambda p, c: p.at[slot].set(c), tree, cache)
+        return tree
+
+    def _ar_step(self, alive) -> None:
+        pending, keys, ridx, temps, active = self._round_inputs(alive)
+        fn = _ar_round_fn(self.cfg_t)
+        pt_out, tok = fn(self.params_t, self.pool_t.tree, pending, keys,
+                         ridx, temps, active)
+        tok = np.asarray(tok)
+        self.pool_t.tree = pt_out
+        for slot, st in alive:
+            st.out.append(int(tok[slot]))
+            st.pending = int(tok[slot])
+            st.round_idx += 1
+            st.rounds += 1
+        self._stats.tokens += len(alive)
+        self._stats.target_forwards += 1
+
+    def _retire(self, slot: int) -> ServeResult:
+        st = self.scheduler.retire(slot)
+        self._stats.requests_completed += 1
+        return ServeResult(
+            request_id=st.request.request_id,
+            tokens=np.asarray(st.out[:st.request.max_new_tokens], np.int32),
+            prompt_len=st.request.prompt_len,
+            drafted=st.drafted, accepted=st.accepted, rounds=st.rounds)

@@ -1,0 +1,105 @@
+"""Pooled per-slot KV caches for continuous batching.
+
+Every model family in ``repro.models.registry`` serves single requests
+through ``prefill``/``extend`` on a batch-1 cache. The pool stacks
+``max_batch`` such caches on a new leading slot axis, so one
+``jax.vmap``-ped ``extend`` runs a target forward for every active slot
+simultaneously — each slot keeping its own length counter (``len``
+becomes a per-slot array under the stack), which is what lets requests
+of different ages share one device call.
+
+Rollback after a speculative round is family-dependent, mirroring
+``core.llm_sd``:
+
+  - ``mask`` (dense / moe / vlm) and ``encdec``: O(1) per slot — stale
+    entries are invalidated through the position buffer, vmapped over
+    the pool with per-slot new lengths.
+  - ``replay`` (ssm / hybrid): recurrent states cannot be length-masked;
+    the engine re-extends the committed prefix from the round-entry
+    checkpoint (the immutable pool tree itself) per slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as tfm
+
+_MASK_FAMILIES = {"dense", "moe", "vlm"}
+
+
+def rollback_kind(cfg) -> str:
+    """"mask" | "encdec" | "replay" — how this family rolls back."""
+    if cfg.family in _MASK_FAMILIES:
+        return "mask"
+    if cfg.family == "encdec":
+        return "encdec"
+    return "replay"
+
+
+def rollback_one(cfg, cache, new_len):
+    """Mask-style rollback of ONE slot's cache to ``new_len`` entries.
+
+    Only valid for mask/encdec kinds; vmap over (cache, new_len) to roll
+    back a whole pool. Replay kinds re-extend instead (see engine).
+    """
+    kind = rollback_kind(cfg)
+    if kind == "mask":
+        return tfm.rollback(cache, new_len)
+    if kind == "encdec":
+        out = dict(cache)
+        out["pos"] = jnp.where(cache["pos"] < new_len, cache["pos"],
+                               jnp.iinfo(jnp.int32).max)
+        out["len"] = jnp.asarray(new_len, jnp.int32)
+        return out
+    raise ValueError(f"family {cfg.family!r} rolls back by replay")
+
+
+def select_slots(mask, new_tree, old_tree):
+    """Per-slot where(): keep ``new`` rows where ``mask`` is True.
+
+    Used to discard the garbage a batched forward writes into idle
+    slots (padding lanes run the model on stale data).
+    """
+    def pick(new, old):
+        m = mask.reshape(mask.shape + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+    return jax.tree.map(pick, new_tree, old_tree)
+
+
+class KVCachePool:
+    """``max_batch`` stacked batch-1 caches with slot read/write.
+
+    The pool tree is allocated lazily from the first prefilled cache (so
+    one pool class covers every family's cache pytree, including the
+    encoder-decoder cross caches). Leaves are ``[slot, ...]``; reads and
+    writes are functional index ops on the immutable tree.
+    """
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.tree: Optional[Any] = None
+
+    def ensure(self, template_cache) -> None:
+        """Allocate the pool from a batch-1 cache's shapes/dtypes."""
+        if self.tree is not None:
+            return
+        self.tree = jax.tree.map(
+            lambda a: jnp.zeros((self.n_slots,) + jnp.shape(a),
+                                jnp.asarray(a).dtype),
+            template_cache)
+
+    def write(self, slot: int, cache) -> None:
+        self.tree = jax.tree.map(
+            lambda pool, c: pool.at[slot].set(jnp.asarray(
+                c, pool.dtype)), self.tree, cache)
+
+    def read(self, slot: int):
+        return jax.tree.map(lambda pool: pool[slot], self.tree)
+
+    @property
+    def lens(self) -> jnp.ndarray:
+        """Per-slot valid lengths ([n_slots] int32)."""
+        return self.tree["len"]

@@ -1,0 +1,122 @@
+"""Request/result types of the serving API.
+
+A ``ServeRequest`` is everything the engine needs to generate one
+sequence: the prompt, a token budget, a temperature, and a per-request
+rng key. The rng contract is the serving analogue of the sampling
+engine's seed handling: every random draw a request consumes is derived
+from ``fold_in(request.rng, round_idx)`` only — never from the slot the
+scheduler happened to place it in or from the other requests sharing the
+batch — so a request's output distribution is independent of batch
+composition (the property the batched-vs-single equivalence test pins).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_REQUEST_IDS = itertools.count()
+
+
+def _as_key(rng) -> jax.Array:
+    """Accept a PRNGKey or a plain int seed."""
+    if isinstance(rng, (int, np.integer)):
+        return jax.random.PRNGKey(int(rng))
+    return rng
+
+
+@dataclass
+class ServeRequest:
+    """One generation request.
+
+    prompt          : [P] int32 token ids.
+    max_new_tokens  : generation budget (>= 1; the first new token is
+                      sampled from the prefill logits, the rest via the
+                      engine's draft/verify rounds).
+    temperature     : per-request softmax temperature.
+    rng             : PRNGKey or int seed; the request's private stream.
+    extra           : optional extra prefill-batch fields (e.g.
+                      ``enc_frames`` for encoder-decoder families).
+    """
+
+    prompt: Any
+    max_new_tokens: int
+    temperature: float = 1.0
+    rng: Any = 0
+    extra: Optional[Dict[str, Any]] = None
+    request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
+
+    def __post_init__(self):
+        self.prompt = jnp.asarray(self.prompt, jnp.int32)
+        if self.prompt.ndim != 1:
+            raise ValueError("ServeRequest.prompt must be 1-D [P]")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.rng = _as_key(self.rng)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass(frozen=True)
+class ServeResult:
+    """Per-request outcome with acceptance accounting."""
+
+    request_id: int
+    tokens: np.ndarray      # [n] int32 generated tokens
+    prompt_len: int
+    drafted: int            # draft tokens proposed for this request
+    accepted: int           # draft tokens accepted by verification
+    rounds: int             # propose-verify rounds this request rode in
+
+    @property
+    def n(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(1, self.drafted)
+
+
+@dataclass
+class EngineStats:
+    """Engine-level throughput counters, accumulated across ``step()``s.
+
+    ``target_forwards`` counts the batched verify/decode rounds — the
+    quantity the paper's speedup divides by (prefills are tracked
+    separately, as in the single-request accounting).
+    """
+
+    requests_completed: int = 0
+    tokens: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    target_forwards: int = 0     # batched verify/decode rounds
+    draft_forwards: int = 0      # batched draft steps
+    prefills: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(1, self.drafted)
+
+    @property
+    def tokens_per_forward(self) -> float:
+        """Committed tokens per batched target forward (AR == ~1)."""
+        return self.tokens / max(1, self.target_forwards)
+
+    @property
+    def tokens_per_sec(self) -> float:
+        return self.tokens / max(1e-9, self.wall_s)
+
+    def describe(self) -> str:
+        return (f"requests={self.requests_completed} tokens={self.tokens} "
+                f"target_fwds={self.target_forwards} "
+                f"alpha={self.acceptance_rate:.2f} "
+                f"tok/fwd={self.tokens_per_forward:.2f} "
+                f"tok/s={self.tokens_per_sec:.1f}")

@@ -1,0 +1,97 @@
+"""Continuous-batching scheduler: a FIFO queue feeding ``max_batch``
+KV-cache slots.
+
+The scheduler is pure bookkeeping — it never touches models or device
+arrays, so its policies (admission order, slot reuse, per-slot budgets)
+are unit-testable without JAX. The engine drives it:
+
+    admit() -> [(slot, request)]   at the top of every step
+    active() -> [(slot, SlotState)]
+    retire(slot) -> SlotState      when a request's budget is spent
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+from .request import ServeRequest
+
+
+@dataclass
+class SlotState:
+    """Host-side generation state of one occupied slot."""
+
+    request: ServeRequest
+    slot: int
+    out: List[int] = field(default_factory=list)  # committed new tokens
+    pending: int = 0      # last committed token, not yet in the caches
+    round_idx: int = 1    # next fold_in index of the request's rng stream
+    drafted: int = 0
+    accepted: int = 0
+    rounds: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.request.max_new_tokens
+
+
+class Scheduler:
+    """FIFO admission into a fixed pool of ``max_batch`` slots.
+
+    A request is admitted the moment a slot is free (continuous
+    batching): slots freed by a completed request are refilled at the
+    next ``admit()`` call, so the batch stays as full as the queue
+    allows instead of draining between "generations".
+    """
+
+    def __init__(self, max_batch: int, max_len: int):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: Deque[ServeRequest] = deque()
+        self.slots: List[Optional[SlotState]] = [None] * max_batch
+
+    # -- queue side --------------------------------------------------------
+    def submit(self, req: ServeRequest) -> int:
+        """Validate and enqueue; returns the request id."""
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({req.prompt_len}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the "
+                f"engine's max_len ({self.max_len})")
+        self.queue.append(req)
+        return req.request_id
+
+    @property
+    def pending_count(self) -> int:
+        return len(self.queue)
+
+    # -- slot side ---------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self) -> List[Tuple[int, SlotState]]:
+        """Fill free slots from the queue head (strict FIFO)."""
+        placed = []
+        for i in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.slots[i] = SlotState(request=req, slot=i)
+            placed.append((i, self.slots[i]))
+        return placed
+
+    def active(self) -> List[Tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def retire(self, slot: int) -> SlotState:
+        state = self.slots[slot]
+        if state is None:
+            raise ValueError(f"slot {slot} is not occupied")
+        self.slots[slot] = None
+        return state
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)

@@ -71,7 +71,7 @@ def test_engine_requires_draft_for_sd(tiny_pair):
 # ---------------------------------------------------------------------------
 
 def test_registry_roundtrip():
-    for name in ("ar", "sd", "thinning", "llm_ar", "llm_sd"):
+    for name in ("ar", "sd", "thinning"):
         assert name in strategy_names()
         assert get_strategy(name) is get_strategy(name)
     with pytest.raises(KeyError, match="no sampling strategy"):
@@ -105,9 +105,31 @@ def test_registry_accepts_new_strategy(tiny_pair):
 def test_draft_policy_registry():
     from repro.sampling import draft_policy_names, get_draft_policy
     assert "fixed" in draft_policy_names()
+    assert "adaptive" in draft_policy_names()
     pol = get_draft_policy("fixed")(5)
     assert isinstance(pol, FixedGamma)
     assert pol.round_gamma(0) == 5 and pol.max_gamma == 5 and pol.is_static
+
+
+def test_adaptive_policy_schedule():
+    """Acceptance feedback: grow on fully-accepted rounds, shrink on a
+    rejection, clamp to [1, gamma]."""
+    from repro.sampling import get_draft_policy
+    pol = get_draft_policy("adaptive")(6)
+    assert not pol.is_static and pol.max_gamma == 6
+    s = pol.init_state()
+    g0 = pol.gamma(s)
+    assert 1 <= g0 <= 6
+    s = pol.update(s, drafted=g0, accepted=g0)       # full accept
+    assert pol.gamma(s) == min(6, g0 + 1)
+    s = pol.update(s, drafted=pol.gamma(s), accepted=0)  # early rejection
+    assert pol.gamma(s) == min(6, g0 + 1) - 1
+    for _ in range(20):                               # clamps at 1
+        s = pol.update(s, drafted=3, accepted=0)
+    assert pol.gamma(s) == 1
+    for _ in range(20):                               # clamps at max
+        s = pol.update(s, drafted=pol.gamma(s), accepted=pol.gamma(s))
+    assert pol.gamma(s) == 6
 
 
 # ---------------------------------------------------------------------------
@@ -197,27 +219,40 @@ def test_ar_and_sd_specs_agree_in_distribution(tiny_pair):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# adaptive draft policy through the engine
 # ---------------------------------------------------------------------------
 
-def test_shim_sample_sd_jit_rng_default_no_crash(tiny_pair):
-    """The old rng=None default crashed at trace time; the shim must now
-    default it safely."""
-    from repro.core import sampler
+def test_adaptive_policy_requires_host_execution(tiny_pair):
     cfg_t, cfg_d, pt, pd = tiny_pair
-    with pytest.deprecated_call():
-        res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 1.0, 2, 8)
-    assert int(res.n) >= 0
+    with pytest.raises(SpecError, match="adapts gamma"):
+        ENGINE.build(SamplerSpec(method="sd", execution="jit", t_end=1.0,
+                                 gamma=4, max_events=8,
+                                 draft_policy="adaptive"),
+                     cfg_t, pt, cfg_d, pd)
 
 
-def test_shims_match_engine_results(tiny_pair):
-    from repro.core import sampler
+def test_adaptive_policy_tpp_host_sampling(tiny_pair):
+    """The host SD executor follows the adaptive schedule (one compiled
+    round per distinct gamma) and still produces a valid sequence with
+    meaningful acceptance accounting."""
     cfg_t, cfg_d, pt, pd = tiny_pair
-    rng = jax.random.PRNGKey(9)
-    old = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 2.0, 3, 16, rng=rng)
-    new = build_sampler(SamplerSpec(method="sd", execution="jit", t_end=2.0,
-                                    gamma=3, max_events=16),
-                        cfg_t, pt, cfg_d, pd)(rng)
-    assert int(old.n) == int(new.lengths[0])
-    np.testing.assert_allclose(np.array(old.times), np.array(new.times[0]),
-                               rtol=1e-6)
+    fn = build_sampler(SamplerSpec(method="sd", execution="host", t_end=2.0,
+                                   gamma=4, max_events=32,
+                                   draft_policy="adaptive"),
+                       cfg_t, pt, cfg_d, pd)
+    b = fn(jax.random.PRNGKey(11))
+    assert isinstance(b, SampleBatch)
+    n = int(b.lengths[0])
+    t = np.array(b.times[0, :n])
+    assert np.all(np.diff(t) > 0) or n < 2
+    assert np.all(t <= 2.0)
+    st = b.stats()
+    assert st.drafted >= st.accepted >= 0
+    assert st.rounds >= 1
+
+
+def test_core_sampler_shims_are_gone():
+    """ROADMAP cleanup: the deprecated ``core.sampler`` module was
+    deleted once nothing imported it."""
+    with pytest.raises(ImportError):
+        from repro.core import sampler  # noqa: F401

@@ -1,0 +1,280 @@
+"""The ``repro.serving`` continuous-batching engine: scheduler policy
+units, end-to-end serving over the model zoo, and the central invariant
+— batched serving samples the SAME per-request distribution as
+single-request serving (which both equal target AR sampling)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _stats import chisq as _chisq
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import (ServeRequest, ServingEngine, Scheduler)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t"):
+    return ModelConfig(name=name, family="dense", num_layers=num_layers,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=vocab, dtype="float32",
+                       param_dtype="float32", remat=False)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+def _req(i, n=8, plen=5):
+    return ServeRequest(prompt=jnp.arange(plen, dtype=jnp.int32),
+                        max_new_tokens=n, rng=100 + i)
+
+
+# ---------------------------------------------------------------------------
+# scheduler units (pure bookkeeping, no models)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_fifo_admission_order():
+    s = Scheduler(max_batch=2, max_len=64)
+    reqs = [_req(i) for i in range(5)]
+    for r in reqs:
+        s.submit(r)
+    placed = s.admit()
+    assert [st.request.request_id for _, st in placed] \
+        == [reqs[0].request_id, reqs[1].request_id]
+    assert s.pending_count == 3
+    # nothing more fits until a slot frees
+    assert s.admit() == []
+
+
+def test_scheduler_slot_reuse_on_completion():
+    s = Scheduler(max_batch=2, max_len=64)
+    for i in range(4):
+        s.submit(_req(i))
+    first = s.admit()
+    freed_slot = first[0][0]
+    done = s.retire(freed_slot)
+    assert done.request.request_id == first[0][1].request.request_id
+    nxt = s.admit()
+    # exactly one free slot -> exactly one admission, into the freed slot
+    assert len(nxt) == 1 and nxt[0][0] == freed_slot
+    assert {i for i, _ in s.active()} == {0, 1}
+
+
+def test_scheduler_mixed_lengths_and_validation():
+    s = Scheduler(max_batch=4, max_len=32)
+    s.submit(_req(0, n=4, plen=8))
+    s.submit(_req(1, n=24, plen=8))
+    with pytest.raises(ValueError, match="max_len"):
+        s.submit(_req(2, n=25, plen=8))
+    placed = s.admit()
+    assert len(placed) == 2
+    assert s.has_work()
+    for i, _ in list(s.active()):
+        s.retire(i)
+    assert not s.has_work()
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_continuous_batching_serves_more_requests_than_slots(dense_pair):
+    """The acceptance bar: max_batch=4 serving 8 concurrent requests with
+    continuous batching at tokens/target-forward > 1.5."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=4, max_len=64,
+                        gamma=4)
+    budgets = {}
+    for i in range(8):
+        rid = eng.submit(_req(i, n=6 + i))
+        budgets[rid] = 6 + i
+    results = eng.run()
+    assert len(results) == 8
+    for r in results:
+        assert r.n == budgets[r.request_id]
+    st = eng.stats()
+    assert st.requests_completed == 8 and st.prefills == 8
+    assert st.tokens == sum(budgets.values())
+    assert st.tokens_per_forward > 1.5
+    # more requests than slots => slots were reused across the run
+    assert st.target_forwards < sum(budgets.values())
+
+
+def test_mixed_budgets_admit_midstream(dense_pair):
+    """A short request retiring mid-run must hand its slot to the queue
+    without draining the batch."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=64,
+                        gamma=3)
+    rid_short = eng.submit(_req(0, n=2))
+    rid_long = eng.submit(_req(1, n=20))
+    rid_queued = eng.submit(_req(2, n=4))  # admitted when the short retires
+    seen = []
+    while eng.scheduler.has_work():
+        seen.extend(r.request_id for r in eng.step())
+    assert seen[0] == rid_short
+    assert seen[-1] == rid_long
+    assert set(seen) == {rid_short, rid_long, rid_queued}
+    st = eng.stats()
+    assert st.tokens == 2 + 20 + 4
+
+
+def test_tight_max_len_budget_stays_in_bounds(dense_pair):
+    """prompt + max_new_tokens == max_len with a wide draft window: the
+    engine must clamp the window near the end instead of letting the
+    cache's modulo slot indexing wrap over the prompt's KV entries."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=32,
+                        gamma=4)
+    for i in range(3):
+        eng.submit(ServeRequest(prompt=jnp.arange(4, dtype=jnp.int32),
+                                max_new_tokens=28, rng=40 + i))
+    results = eng.run()
+    assert len(results) == 3
+    for r in results:
+        assert r.n == 28
+        assert np.all(np.asarray(r.tokens) < cfg_t.vocab_size)
+    # every slot's cache length stayed within the buffer
+    assert int(np.max(np.asarray(eng.pool_t.lens))) <= 32
+
+
+def test_identical_models_accept_everything_batched(dense_pair):
+    cfg_t, _, pt, _ = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_t, pt, max_batch=3, max_len=64,
+                        gamma=4)
+    for i in range(5):
+        eng.submit(_req(i, n=12))
+    for r in eng.run():
+        assert r.accepted == r.drafted
+    assert eng.stats().acceptance_rate == 1.0
+
+
+@pytest.mark.parametrize("family,extra", [
+    ("ssm", dict(num_heads=0, num_kv_heads=0, d_ff=0, ssm_state=8)),
+    ("hybrid", dict(block_pattern=("rec", "rec", "attn"), lru_width=24,
+                    sliding_window=16, num_kv_heads=1, num_layers=4)),
+])
+def test_replay_families_batched_serving(family, extra):
+    """Recurrent-state families roll back by replay; the pool must stay
+    correct across slots (identical models => zero rejections)."""
+    kw = dict(name="x", family=family, num_layers=2, d_model=32, num_heads=4,
+              num_kv_heads=2, d_ff=64, vocab_size=31, dtype="float32",
+              param_dtype="float32", remat=False)
+    kw.update(extra)
+    cfg = ModelConfig(**kw)
+    p = registry.get_model(cfg).init_params(RNG)
+    eng = ServingEngine(cfg, p, cfg, p, max_batch=2, max_len=64, gamma=3)
+    for i in range(3):
+        eng.submit(_req(i, n=8))
+    for r in eng.run():
+        assert r.n == 8 and r.accepted == r.drafted
+
+
+# ---------------------------------------------------------------------------
+# distribution equivalence: batched == single-request == target AR
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_pair_with_marginals():
+    """Small-vocab pair + the analytic first/second-token marginals of
+    TARGET AR sampling after the fixed prompt."""
+    V = 13
+    cfg_t = _dense(2, vocab=V)
+    cfg_d = _dense(1, vocab=V, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    pt = mt.init_params(RNG)
+    pd = md.init_params(jax.random.PRNGKey(9))
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    lt, cache = mt.prefill(pt, {"tokens": prompt[None]}, 32)
+    p0 = np.array(jax.nn.softmax(lt[0, -1]))
+    p1 = np.zeros(V)
+    for k in range(V):
+        lg, _ = mt.extend(pt, cache, jnp.array([[k]], jnp.int32))
+        p1 += p0[k] * np.array(jax.nn.softmax(lg[0, -1]))
+    return cfg_t, cfg_d, pt, pd, prompt, p0, p1
+
+
+def _first_two_tokens(cfg_t, cfg_d, pt, pd, prompt, seeds, *, max_batch,
+                      draft_policy="fixed"):
+    # budget 4 so the first round runs a full gamma=2 window (the engine
+    # clamps the draft window to the remaining budget)
+    if max_batch == 1:
+        out = []
+        for s in seeds:
+            eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=1,
+                                max_len=32, gamma=2,
+                                draft_policy=draft_policy)
+            eng.submit(ServeRequest(prompt=prompt, max_new_tokens=4, rng=s))
+            out.append(eng.run()[0])
+        return np.array([[r.tokens[0], r.tokens[1]] for r in out])
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
+                        max_len=32, gamma=2, draft_policy=draft_policy)
+    ids = [eng.submit(ServeRequest(prompt=prompt, max_new_tokens=4, rng=s))
+           for s in seeds]
+    res = {r.request_id: r for r in eng.run()}
+    return np.array([[res[i].tokens[0], res[i].tokens[1]] for i in ids])
+
+
+def test_batched_matches_single_request_distribution(
+        tiny_pair_with_marginals):
+    """Fixed per-request rngs: the batched engine must sample the same
+    distribution as single-request serving — both are chi-squared
+    against the ANALYTIC target-AR marginals for the first two
+    generated tokens (the second token exercises the full
+    draft/verify/bonus path)."""
+    cfg_t, cfg_d, pt, pd, prompt, p0, p1 = tiny_pair_with_marginals
+    V = len(p0)
+    N = 300
+    seeds = [1000 + i for i in range(N)]
+    single = _first_two_tokens(cfg_t, cfg_d, pt, pd, prompt, seeds,
+                               max_batch=1)
+    batched = _first_two_tokens(cfg_t, cfg_d, pt, pd, prompt, seeds,
+                                max_batch=4)
+    for toks, probs in [(single[:, 0], p0), (batched[:, 0], p0),
+                        (single[:, 1], p1), (batched[:, 1], p1)]:
+        cnt = np.bincount(toks.astype(int), minlength=V)
+        assert _chisq(cnt, probs).pvalue > 1e-3, (cnt / N, probs)
+    # per-request rng streams are independent of batch composition, so
+    # the two paths agree far beyond distribution (allow a small slack
+    # for platform-dependent batched-matmul numerics)
+    assert np.mean(single == batched) > 0.95
+
+
+def test_adaptive_policy_preserves_distribution(tiny_pair_with_marginals):
+    """draft_policy='adaptive' changes only the window schedule, never
+    the sampled distribution."""
+    cfg_t, cfg_d, pt, pd, prompt, p0, p1 = tiny_pair_with_marginals
+    V = len(p0)
+    N = 250
+    toks = _first_two_tokens(cfg_t, cfg_d, pt, pd, prompt,
+                             [5000 + i for i in range(N)], max_batch=4,
+                             draft_policy="adaptive")
+    cnt1 = np.bincount(toks[:, 1].astype(int), minlength=V)
+    assert _chisq(cnt1, p1).pvalue > 1e-3, (cnt1 / N, p1)
+
+
+def test_temperature_is_per_request(dense_pair):
+    """Temperature ~0 must make a request greedy even when it shares a
+    batch with temperature-1 requests."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    greedy = []
+    for trial in range(3):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, max_len=64,
+                            gamma=2)
+        eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                max_new_tokens=4, temperature=1e-4,
+                                rng=70 + trial))
+        for i in range(2):
+            eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                    max_new_tokens=4, temperature=1.0,
+                                    rng=80 + 10 * trial + i))
+        res = sorted(eng.run(), key=lambda r: r.request_id)
+        greedy.append(tuple(int(t) for t in res[0].tokens))
+    assert greedy[0] == greedy[1] == greedy[2]

@@ -11,8 +11,9 @@ from scipy import stats
 from _stats import chisq as _chisq
 
 from repro.configs.base import TPPConfig
-from repro.core import sampler, speculative as spec
+from repro.core import speculative as spec
 from repro.models import tpp
+from repro.sampling import SamplerSpec, build_sampler
 
 RNG = jax.random.PRNGKey(0)
 
@@ -92,13 +93,11 @@ def test_sd_first_event_matches_analytic_target(gamma):
     mix = tpp.interval_params(cfg_t, pt, h[0])
 
     B = 15_000
-    def sd_one(r):
-        res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 1e9, gamma, 3,
-                                    rng=r)
-        return res.times[0], res.types[0]
-
-    ts, ks = jax.vmap(sd_one)(jax.random.split(jax.random.PRNGKey(7), B))
-    ts, ks = np.array(ts), np.array(ks)
+    fn = build_sampler(SamplerSpec(method="sd", execution="vmap", t_end=1e9,
+                                   gamma=gamma, max_events=3, batch=B),
+                       cfg_t, pt, cfg_d, pd)
+    rs = fn(jax.random.PRNGKey(7))
+    ts, ks = np.array(rs.times[:, 0]), np.array(rs.types[:, 0])
     cnt = np.bincount(ks, minlength=K)
     chi = _chisq(cnt, target_pk)
     assert chi.pvalue > 1e-3, (cnt / B, target_pk)
@@ -113,19 +112,23 @@ def test_sd_first_event_matches_analytic_target(gamma):
 
 def test_sd_same_model_accepts_everything():
     cfg_t, _, pt, _ = _tiny_pair()
-    res = sampler.sample_sd_jit(cfg_t, cfg_t, pt, pt, 3.0, 4, 64,
-                                rng=jax.random.PRNGKey(3))
-    assert int(res.accepted) == int(res.drafted)
+    res = build_sampler(SamplerSpec(method="sd", execution="jit", t_end=3.0,
+                                    gamma=4, max_events=64),
+                        cfg_t, pt, cfg_t, pt)(jax.random.PRNGKey(3))
+    st = res.stats()
+    assert st.accepted == st.drafted
 
 
 def test_sd_sequence_dist_matches_ar():
     """Whole-sequence statistics AR vs SD (two-sample tests)."""
     cfg_t, cfg_d, pt, pd = _tiny_pair()
     B, T_END, EMAX = 400, 2.0, 64
-    ra = sampler.sample_ar_batch(cfg_t, pt, jax.random.PRNGKey(4), T_END,
-                                 EMAX, B)
-    rs = sampler.sample_sd_batch(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(5),
-                                 T_END, 4, EMAX, B)
+    base = SamplerSpec(execution="vmap", t_end=T_END, max_events=EMAX,
+                       batch=B)
+    ra = build_sampler(base.replace(method="ar"),
+                       cfg_t, pt)(jax.random.PRNGKey(4))
+    rs = build_sampler(base.replace(method="sd", gamma=4),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(5))
     na, ns = np.array(ra.n), np.array(rs.n)
     assert stats.ks_2samp(na, ns).pvalue > 1e-3
     fa = np.array(ra.times[:, 0])[na > 0]
@@ -135,33 +138,39 @@ def test_sd_sequence_dist_matches_ar():
 
 def test_sd_host_and_jit_agree_in_distribution():
     cfg_t, cfg_d, pt, pd = _tiny_pair()
-    rj = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 2.0, 3, 32,
-                               rng=jax.random.PRNGKey(6))
-    rh = sampler.sample_sd_host(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(6),
-                                2.0, 3, 32)
+    base = SamplerSpec(method="sd", t_end=2.0, gamma=3, max_events=32)
+    rj = build_sampler(base.replace(execution="jit"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
+    rh = build_sampler(base.replace(execution="host"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
     # identical rng stream + identical round function => identical output
-    assert int(rj.n) == int(rh.n)
-    np.testing.assert_allclose(np.array(rj.times[:int(rj.n)]),
-                               np.array(rh.times[:int(rh.n)]), rtol=1e-6)
+    nj = int(rj.lengths[0])
+    assert nj == int(rh.lengths[0])
+    np.testing.assert_allclose(np.array(rj.times[0, :nj]),
+                               np.array(rh.times[0, :nj]), rtol=1e-6)
+
+
+def _sd_jit(cfg_t, cfg_d, pt, pd, t_end, gamma, emax, rng):
+    return build_sampler(SamplerSpec(method="sd", execution="jit",
+                                     t_end=t_end, gamma=gamma,
+                                     max_events=emax),
+                         cfg_t, pt, cfg_d, pd)(rng)
 
 
 def test_sd_gamma_one_and_tiny_budget_edges():
     """gamma=1 and max_events smaller than one window must stay correct."""
     cfg_t, cfg_d, pt, pd = _tiny_pair()
-    r1 = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 5.0, 1, 2,
-                               rng=jax.random.PRNGKey(0))
-    assert 0 <= int(r1.n) <= 2
-    assert bool(jnp.all(jnp.diff(r1.times[:int(r1.n)]) > 0)) or int(r1.n) < 2
+    r1 = _sd_jit(cfg_t, cfg_d, pt, pd, 5.0, 1, 2, jax.random.PRNGKey(0))
+    n1 = int(r1.lengths[0])
+    assert 0 <= n1 <= 2
+    assert bool(jnp.all(jnp.diff(r1.times[0, :n1]) > 0)) or n1 < 2
     # large gamma vs small horizon: overshooting events are truncated
-    r2 = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 0.05, 8, 32,
-                               rng=jax.random.PRNGKey(1))
-    assert bool(jnp.all(r2.times[:int(r2.n)] <= 0.05))
+    r2 = _sd_jit(cfg_t, cfg_d, pt, pd, 0.05, 8, 32, jax.random.PRNGKey(1))
+    assert bool(jnp.all(r2.times[0, :int(r2.lengths[0])] <= 0.05))
 
 
 def test_sd_times_strictly_increasing():
     cfg_t, cfg_d, pt, pd = _tiny_pair()
-    res = sampler.sample_sd_jit(cfg_t, cfg_d, pt, pd, 4.0, 5, 128,
-                                rng=jax.random.PRNGKey(2))
-    n = int(res.n)
-    t = np.array(res.times[:n])
+    res = _sd_jit(cfg_t, cfg_d, pt, pd, 4.0, 5, 128, jax.random.PRNGKey(2))
+    t = np.array(res.times[0, :int(res.lengths[0])])
     assert np.all(np.diff(t) > 0), "event times must be strictly increasing"

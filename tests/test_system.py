@@ -12,9 +12,10 @@ import pytest
 from scipy import stats
 
 from repro.configs.base import TPPConfig
-from repro.core import sampler, thinning as thin
+from repro.core import thinning as thin
 from repro.data import synthetic as ds
 from repro.metrics import ks_confidence_band, ks_for_samples
+from repro.sampling import SamplerSpec, build_sampler
 from repro.train import trainer
 
 
@@ -44,10 +45,12 @@ def _to_seqs(result):
 def test_end_to_end_sampling_quality_and_speed(trained_pair):
     data, cfg_t, cfg_d, pt, pd = trained_pair
     B, EMAX, GAMMA = 48, 128, 8
-    ra = sampler.sample_ar_batch(cfg_t, pt, jax.random.PRNGKey(1),
-                                 data.t_end, EMAX, B)
-    rs = sampler.sample_sd_batch(cfg_t, cfg_d, pt, pd, jax.random.PRNGKey(2),
-                                 data.t_end, GAMMA, EMAX, B)
+    base = SamplerSpec(execution="vmap", t_end=data.t_end, max_events=EMAX,
+                       batch=B)
+    ra = build_sampler(base.replace(method="ar"),
+                       cfg_t, pt)(jax.random.PRNGKey(1))
+    rs = build_sampler(base.replace(method="sd", gamma=GAMMA),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(2))
     seqs_ar, seqs_sd = _to_seqs(ra), _to_seqs(rs)
     n_ar = sum(len(t) for t, _ in seqs_ar)
     n_sd = sum(len(t) for t, _ in seqs_sd)
@@ -89,7 +92,7 @@ def test_cif_thinning_neural_baseline_matches_ar():
     import jax
     import jax.numpy as jnp
     from repro.configs.base import TPPConfig
-    from repro.core import cif_thinning, sampler
+    from repro.core import cif_thinning
 
     cfg = TPPConfig(encoder="thp", num_layers=1, num_heads=1, d_model=16,
                     d_ff=32, num_marks=2, num_mix=4)
@@ -105,8 +108,9 @@ def test_cif_thinning_neural_baseline_matches_ar():
         if int(r.n):
             firsts.append(float(r.times[0]))
     assert forwards / max(events, 1) > 1.0, "thinning must cost >1 fwd/event"
-    ra = sampler.sample_ar_batch(cfg, params, jax.random.PRNGKey(7), 3.0,
-                                 32, 200)
+    ra = build_sampler(SamplerSpec(method="ar", execution="vmap", t_end=3.0,
+                                   max_events=32, batch=200),
+                       cfg, params)(jax.random.PRNGKey(7))
     na = np.array(ra.n)
     fa = np.array(ra.times[:, 0])[na > 0]
     assert stats.ks_2samp(np.array(firsts), fa).pvalue > 1e-3
