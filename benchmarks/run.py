@@ -383,6 +383,111 @@ def serving_throughput(args):
          f"gamma={gamma};requests=8;max_batch=4")
 
 
+# ---------------------------------------------------------------------------
+# Sharded fan-out: sequences/sec and tokens/sec vs device count
+# ---------------------------------------------------------------------------
+
+_SHARDED_WORKER = """
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={n}")
+import json, time
+import jax, jax.numpy as jnp
+from repro.configs.base import TPPConfig, ModelConfig
+from repro.launch.mesh import make_debug_mesh
+from repro.models import tpp, registry
+from repro.sampling import SamplerSpec, build_sampler
+from repro.serving import ServeRequest, ServingEngine
+
+mesh = make_debug_mesh(data={n}, model=1)
+out = {{"devices": {n}}}
+
+# TPP sharded sampling: whole-sequence fan-out
+cfg_t = TPPConfig(name="bt", encoder="thp", num_layers=4, num_heads=2,
+                  d_model=32, d_ff=64, num_marks=5, num_mix=16)
+cfg_d = cfg_t.replace(name="bd", num_layers=1, num_heads=1)
+pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+fn = build_sampler(SamplerSpec(method="sd", execution="sharded",
+                               t_end={t_end}, gamma={gamma},
+                               max_events={emax}, batch={batch}),
+                   cfg_t, pt, cfg_d, pd, mesh=mesh)
+b = fn(jax.random.PRNGKey(0))                       # compile
+jax.block_until_ready(jax.tree.leaves(b))
+t0 = time.perf_counter()
+b = fn(jax.random.PRNGKey(1))
+jax.block_until_ready(jax.tree.leaves(b))
+dt = time.perf_counter() - t0
+out["seq_per_sec"] = {batch} / dt
+out["events_per_sec"] = int(b.stats().events) / dt
+
+# serving: slot pool sharded over data
+scfg_t = ModelConfig(name="st", family="dense", num_layers=4, d_model=64,
+                     num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                     dtype="float32", param_dtype="float32", remat=False)
+scfg_d = scfg_t.replace(name="sd", num_layers=1)
+spt = registry.get_model(scfg_t).init_params(jax.random.PRNGKey(0))
+spd = registry.get_model(scfg_d).init_params(jax.random.PRNGKey(1))
+prompt = jnp.arange(8, dtype=jnp.int32)
+
+def serve():
+    eng = ServingEngine(scfg_t, spt, scfg_d, spd, max_batch={batch},
+                        max_len=128, gamma={gamma}, mesh=mesh)
+    for i in range({batch} * 2):
+        eng.submit(ServeRequest(prompt=prompt, max_new_tokens={new_tokens},
+                                rng=100 + i))
+    eng.run()
+    return eng.stats()
+
+serve()                                             # compile
+st = serve()
+out["tok_per_sec"] = st.tokens_per_sec
+out["tok_per_fwd"] = st.tokens_per_forward
+print(json.dumps(out))
+"""
+
+
+def sharded_scaling(args):
+    """Sharded fan-out vs forced host device count: `--only sharded`
+    emits one row per device count with sequences/sec (TPP sharded
+    sampling, batch over the data axis) and tokens/sec (serving with the
+    slot pool sharded over data). Run on real accelerators by dropping
+    the XLA host-device forcing."""
+    import json as _json
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+    counts = [1, 4] if args.quick else [1, 2, 4]
+    src = _os.path.join(_os.path.dirname(_os.path.dirname(
+        _os.path.abspath(__file__))), "src")
+    gamma = min(args.gamma, 4)
+    for n in counts:
+        script = _SHARDED_WORKER.format(
+            n=n, t_end=args.t_end, gamma=gamma, emax=args.emax,
+            batch=max(args.batch, 8), new_tokens=16)
+        env = dict(_os.environ,
+                   PYTHONPATH=src + _os.pathsep
+                   + _os.environ.get("PYTHONPATH", ""))
+        try:
+            r = _sp.run([_sys.executable, "-c", script],
+                        capture_output=True, text=True, env=env,
+                        timeout=900)
+        except _sp.TimeoutExpired:
+            emit(f"sharded/devices{n}", 0.0, "error=timeout(900s)")
+            continue
+        if r.returncode != 0:
+            err = (r.stderr.strip().splitlines() or ["<no stderr>"])[-1]
+            emit(f"sharded/devices{n}", 0.0, f"error={err[:120]}")
+            continue
+        o = _json.loads(r.stdout.strip().splitlines()[-1])
+        emit(f"sharded/devices{n}", 1e6 / max(o["seq_per_sec"], 1e-9),
+             f"seq_per_sec={o['seq_per_sec']:.2f};"
+             f"events_per_sec={o['events_per_sec']:.0f};"
+             f"tok_per_sec={o['tok_per_sec']:.1f};"
+             f"tok_per_fwd={o['tok_per_fwd']:.2f};"
+             f"batch={max(args.batch, 8)};gamma={gamma}")
+
+
 TABLES = {
     "table1": table1_synthetic,
     "table2": table2_real_like,
@@ -390,6 +495,7 @@ TABLES = {
     "fig3": fig3_gamma_sweep,
     "appendix_d1": appendix_d1_thinning,
     "serving": serving_throughput,
+    "sharded": sharded_scaling,
 }
 
 

@@ -67,6 +67,11 @@ class Rules:
     def _axis_size(self, names: Tuple[str, ...]) -> int:
         return int(np.prod([self.mesh.shape[a] for a in names])) if names else 1
 
+    def rule_axis_size(self, name: str) -> int:
+        """Product of mesh-axis sizes a logical axis maps to (1 if
+        unmapped) — the divisor a dim must satisfy to actually shard."""
+        return self._axis_size(self.rules.get(name, ()))
+
     def spec(self, logical: Sequence[Optional[str]],
              dims: Optional[Sequence[int]] = None) -> P:
         """Map logical axis names (+ optional concrete dims) to a PartitionSpec.

@@ -50,3 +50,49 @@ def make_debug_mesh(data: int = 2, model: int = 2):
     n = data * model
     devices = np.asarray(jax.devices()[:n]).reshape(data, model)
     return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def resolve_sample_mesh():
+    """The mesh ``execution="sharded"`` sampling uses when none is given.
+
+    Whole-sequence fan-out wants the data axis as large as the visible
+    device set allows:
+
+      >= 256 devices : the production pod mesh (16 data x 16 model)
+      >= 4, even     : ``make_debug_mesh(data=n//2, model=2)`` — the
+                       forced-host-device shape the sharding tests use
+      otherwise      : every device on a (n, 1) (data, model) mesh, so
+                       the same logical-axis rules apply degenerately
+                       (model-sharded params stay whole on 1 device)
+    """
+    n = jax.device_count()
+    if n >= 256:
+        return make_production_mesh()
+    if n >= 4 and n % 2 == 0:
+        return make_debug_mesh(data=n // 2, model=2)
+    devices = np.asarray(jax.devices()).reshape(n, 1)
+    return jax.sharding.Mesh(devices, ("data", "model"))
+
+
+def resolve_serving_mesh():
+    """The mesh sharded serving uses when none is given: the kv-axis
+    serving mesh when a full pod is visible, else the same fallback as
+    sampling (``resolve_sample_mesh``)."""
+    if jax.device_count() >= 256:
+        return make_serving_mesh()
+    return resolve_sample_mesh()
+
+
+def serving_rules_for(mesh):
+    """Logical-axis rules for serving on ``mesh``.
+
+    On a serving mesh (a "kv" axis is present) the ``SERVING_RULES``
+    re-axing applies — KV-cache head axes shard over the kv axis so GQA
+    decode never regathers the cache. On data/model meshes the default
+    rules apply with FSDP off (params are read-only at serve time; the
+    slot axis maps to "data" through the "batch" rule either way).
+    """
+    from ..distributed.sharding import Rules
+    if "kv" in mesh.axis_names:
+        return Rules(mesh, rules=SERVING_RULES, fsdp=False)
+    return Rules(mesh, fsdp=False)

@@ -28,10 +28,15 @@ def build_engine(args):
     if args.method == "sd":
         cfg_d = cfg_t.replace(num_layers=args.draft_layers)
         pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    mesh = None
+    if args.sharded:
+        from .mesh import resolve_serving_mesh
+        mesh = resolve_serving_mesh()
+        print(f"sharded serving on mesh {dict(mesh.shape)}")
     return cfg_t, ServingEngine(
         cfg_t, pt, cfg_d, pd, method=args.method, max_batch=args.max_batch,
         max_len=args.max_len, gamma=args.gamma,
-        draft_policy=args.draft_policy)
+        draft_policy=args.draft_policy, mesh=mesh)
 
 
 def main():
@@ -48,6 +53,12 @@ def main():
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--sharded", action="store_true",
+                    help="place the slot pool + params on a device mesh "
+                         "(the serving mesh when 256+ devices are "
+                         "visible; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N to "
+                         "try it on CPU)")
     args = ap.parse_args()
 
     cfg_t, engine = build_engine(args)

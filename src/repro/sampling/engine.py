@@ -12,16 +12,27 @@ Execution lowering:
             batch handled by splitting the seed on the host.
   jit     — the strategy's single-sequence lax.while_loop sampler; B=1.
   vmap    — jax.vmap of the jitted sampler over a split seed batch.
-  sharded — vmap + the seed batch placed over the device mesh via the
-            logical-axis rules in ``distributed/sharding.py`` ("batch"
-            maps to the data axis, divisible-or-replicate fallback), so
-            the same spec fans whole sequences out across devices.
+  sharded — vmap placed on a real device mesh: params are laid out with
+            the model's logical axes through ``distributed/sharding.py``
+            rules, the seed batch is sharded over the mesh's data axis,
+            and the whole loop is jitted with explicit in/out shardings
+            so GSPMD fans whole sequences out across devices. The mesh
+            defaults to ``launch.mesh.resolve_sample_mesh()`` (the
+            production mesh when 256+ devices are visible, the debug
+            mesh on forced host devices); pass ``mesh=`` to
+            ``build``/``build_sampler`` to override.
 
-Built callables are cached per (spec, model-bundle identity) so repeated
-calls reuse compilations.
+RNG contract: every executor derives lane keys as
+``jax.random.split(rng, spec.batch)`` — so host, jit (batch=1), vmap and
+sharded execution of the same spec consume identical per-lane streams
+and produce identical sequences.
+
+Built callables are cached per (spec, model-bundle identity, mesh) so
+repeated calls reuse compilations.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -34,21 +45,6 @@ from .result import (SampleBatch, batch_from_mapped, batch_from_seq,
                      stack_seqs)
 from .spec import SamplerSpec, SpecError
 from .strategies import ModelBundle
-
-
-def _data_mesh():
-    """1-D mesh over every visible device: whole-sequence fan-out."""
-    from jax.sharding import Mesh
-    return Mesh(np.asarray(jax.devices()), ("data",))
-
-
-def _shard_rngs(rngs, mesh):
-    """Place the seed batch over the mesh's data axis (replicate fallback
-    when the batch does not divide the device count)."""
-    from ..distributed.sharding import Rules
-    rules = Rules(mesh)
-    sh = rules.sharding(("batch", None), dims=tuple(rngs.shape))
-    return jax.device_put(rngs, sh)
 
 
 class SamplingEngine:
@@ -67,19 +63,30 @@ class SamplingEngine:
 
     # -- TPP domain --------------------------------------------------------
     def build(self, spec: SamplerSpec, cfg_t, params_t, cfg_d=None,
-              params_d=None) -> Callable[..., SampleBatch]:
+              params_d=None, mesh=None) -> Callable[..., SampleBatch]:
         """Return ``fn(rng) -> SampleBatch`` for domain="tpp" specs, or
-        ``fn(rng, prompt) -> SampleBatch`` for domain="token" specs."""
+        ``fn(rng, prompt) -> SampleBatch`` for domain="token" specs.
+
+        ``mesh`` only matters for execution="sharded" (and token-domain
+        serving on a mesh); ``None`` resolves a default from the visible
+        devices at build time."""
         spec.validate()
         if spec.requires_draft and (cfg_d is None or params_d is None):
             raise SpecError(f"method={spec.method!r} needs a draft model "
                             "(cfg_d, params_d)")
-        key = (spec, id(cfg_t), id(params_t), id(cfg_d), id(params_d))
+        # mesh only affects sharded / token builds; normalizing it out of
+        # the key elsewhere keeps one cache entry per (spec, bundle)
+        mesh_key = (mesh if spec.execution == "sharded"
+                    or spec.domain == "token" else None)
+        key = (spec, id(cfg_t), id(params_t), id(cfg_d), id(params_d),
+               mesh_key)
         if key not in self._cache:
             if spec.domain == "token":
-                fn = self._build_token(spec, cfg_t, params_t, cfg_d, params_d)
+                fn = self._build_token(spec, cfg_t, params_t, cfg_d,
+                                       params_d, mesh)
             else:
-                fn = self._build_tpp(spec, cfg_t, params_t, cfg_d, params_d)
+                fn = self._build_tpp(spec, cfg_t, params_t, cfg_d, params_d,
+                                     mesh)
             # keep the params alive alongside the closure (id keys are
             # only unique while the objects live)
             self._cache[key] = (fn, (cfg_t, params_t, cfg_d, params_d))
@@ -90,18 +97,17 @@ class SamplingEngine:
         return self._cache[key][0]
 
     def sample(self, spec: SamplerSpec, cfg_t, params_t, rng, cfg_d=None,
-               params_d=None, prompt=None) -> SampleBatch:
+               params_d=None, prompt=None, mesh=None) -> SampleBatch:
         """One-shot convenience: build (cached) and call."""
-        fn = self.build(spec, cfg_t, params_t, cfg_d, params_d)
+        fn = self.build(spec, cfg_t, params_t, cfg_d, params_d, mesh=mesh)
         if spec.domain == "token":
             if prompt is None:
                 raise SpecError("domain='token' sampling needs a prompt")
             return fn(rng, prompt)
         return fn(rng)
 
-    def _build_tpp(self, spec, cfg_t, params_t, cfg_d, params_d):
+    def _build_tpp(self, spec, cfg_t, params_t, cfg_d, params_d, mesh=None):
         strat = get_strategy(spec.method)
-        bundle = ModelBundle(cfg_t, params_t, cfg_d, params_d)
 
         if spec.requires_draft and spec.execution != "host":
             from .policies import resolve_policy
@@ -111,12 +117,37 @@ class SamplingEngine:
                     "between rounds; the device executors need a static "
                     "window — use execution='host'")
 
+        rules = None
+        if spec.execution == "sharded":
+            # Place the params on the mesh BEFORE the strategy closes over
+            # them: every leaf is laid out by the model's logical axes
+            # through the shared rule set (heads/mlp over "model", with
+            # the divisible-or-replicate fallback), so the jitted loop
+            # below consumes already-sharded weights.
+            from ..distributed.sharding import Rules
+            from ..launch.mesh import resolve_sample_mesh
+            from ..models.tpp import logical_axes as tpp_logical_axes
+            mesh = mesh if mesh is not None else resolve_sample_mesh()
+            rules = Rules(mesh, fsdp=False)
+
+            def place(cfg, params):
+                return jax.device_put(
+                    params, rules.tree_shardings(tpp_logical_axes(cfg),
+                                                 params))
+            params_t = place(cfg_t, params_t)
+            if params_d is not None:
+                params_d = place(cfg_d, params_d)
+
+        bundle = ModelBundle(cfg_t, params_t, cfg_d, params_d)
+
         if spec.execution == "host":
             single = strat.build_host(spec, bundle)
 
             def host_fn(rng):
-                rngs = (jax.random.split(rng, spec.batch)
-                        if spec.batch > 1 else [rng])
+                # ALWAYS split (even at batch=1): host lane i and vmap
+                # lane i consume the same key, so the two executors agree
+                # exactly at every batch size.
+                rngs = jax.random.split(rng, spec.batch)
                 return stack_seqs([single(r) for r in rngs])
             return host_fn
 
@@ -125,31 +156,77 @@ class SamplingEngine:
             raise SpecError(f"method={spec.method!r} has no device "
                             "execution; use execution='host'")
         if spec.execution == "jit":
-            return lambda rng: batch_from_seq(single(rng))
+            # same split-derived stream as lane 0 of the other executors
+            return lambda rng: batch_from_seq(
+                single(jax.random.split(rng, 1)[0]))
 
         mapped = jax.vmap(single)
         if spec.execution == "vmap":
             return lambda rng: batch_from_mapped(
                 mapped(jax.random.split(rng, spec.batch)))
 
-        # sharded: vmap + seed batch placed over the device mesh; GSPMD
-        # propagates the batch partitioning through the whole loop.
-        mesh = _data_mesh()
-        jit_mapped = jax.jit(mapped)
+        # sharded: the vmapped loop jitted with explicit in/out shardings
+        # — the seed batch (and therefore every per-lane buffer) is
+        # partitioned over the mesh's data axis; params keep the logical
+        # placement applied above.
+        rng_struct = jax.eval_shape(
+            lambda k: jax.random.split(k, spec.batch), jax.random.PRNGKey(0))
+        in_sh = rules.sharding(
+            ("batch",) + (None,) * (len(rng_struct.shape) - 1),
+            dims=tuple(rng_struct.shape))
+        n_data = rules.rule_axis_size("batch")
+        if spec.batch % n_data != 0:
+            # report what the fallback actually did: the rules shorten
+            # the axis list before giving up, so on a multi-axis batch
+            # rule (e.g. ("pod", "data")) the batch may still be
+            # partially sharded rather than replicated
+            got = in_sh.spec[0]
+            actual = ("replicating the seed batch instead of sharding it"
+                      if got is None else
+                      f"sharding it only over {got!r} instead of the "
+                      "full data extent")
+            warnings.warn(
+                f"sharded execution: batch={spec.batch} does not divide "
+                f"the mesh's data extent ({n_data}); {actual} — pad the "
+                f"batch to a multiple of {n_data} for full fan-out",
+                UserWarning, stacklevel=3)
+        out_struct = jax.eval_shape(mapped, rng_struct)
+        out_sh = jax.tree.map(
+            lambda s: rules.sharding(
+                ("batch",) + (None,) * (len(s.shape) - 1),
+                dims=tuple(s.shape)), out_struct)
+        jit_mapped = jax.jit(mapped, in_shardings=(in_sh,),
+                             out_shardings=out_sh)
 
         def sharded_fn(rng):
-            rngs = _shard_rngs(jax.random.split(rng, spec.batch), mesh)
+            rngs = jax.device_put(jax.random.split(rng, spec.batch), in_sh)
             return batch_from_mapped(jit_mapped(rngs))
+        # introspection hooks (tests / benchmarks read these)
+        sharded_fn.mesh = mesh
+        sharded_fn.rules = rules
+        sharded_fn.in_sharding = in_sh
         return sharded_fn
 
     # -- token domain ------------------------------------------------------
-    def _build_token(self, spec, cfg_t, params_t, cfg_d, params_d):
+    def _build_token(self, spec, cfg_t, params_t, cfg_d, params_d,
+                     mesh=None):
         """Route token serving through the continuous-batching
         ``repro.serving`` engine: ``spec.batch`` KV-cache slots serve
         however many prompts the call provides (a [N, P] prompt array
-        with N > batch streams through the scheduler's queue)."""
+        with N > batch streams through the scheduler's queue).
+
+        ONE ``ServingEngine`` lives for the whole life of the built
+        sampler — repeated calls reset its scheduler/stats but reuse the
+        allocated KV pools and every jitted round (the build-cache
+        contract); a fresh engine per call would reallocate pools and
+        re-dispatch compilations."""
         from ..serving import ServeRequest, ServingEngine
         from .result import SeqResult
+
+        engine = ServingEngine(
+            cfg_t, params_t, cfg_d, params_d, method=spec.method,
+            max_batch=spec.batch, max_len=spec.max_len,
+            gamma=spec.gamma, draft_policy=spec.draft_policy, mesh=mesh)
 
         def token_fn(rng, prompt):
             prompt = jnp.asarray(prompt, jnp.int32)
@@ -164,11 +241,11 @@ class SamplingEngine:
                 prompts = jnp.broadcast_to(
                     prompts, (spec.batch,) + prompts.shape[1:])
             n_req = prompts.shape[0]
-            engine = ServingEngine(
-                cfg_t, params_t, cfg_d, params_d, method=spec.method,
-                max_batch=spec.batch, max_len=spec.max_len,
-                gamma=spec.gamma, draft_policy=spec.draft_policy)
-            rngs = (jax.random.split(rng, n_req) if n_req > 1 else [rng])
+            # force: a previous call that died mid-run must not brick
+            # the sampler — its leftover requests belong to no caller
+            engine.reset(force=True)
+            # ALWAYS split (same contract as the TPP executors)
+            rngs = jax.random.split(rng, n_req)
             order = [engine.submit(ServeRequest(
                 prompt=p, max_new_tokens=spec.max_events,
                 temperature=spec.temperature, rng=r))
@@ -186,6 +263,7 @@ class SamplingEngine:
                                  jnp.int32(res.accepted),
                                  jnp.int32(res.rounds))
             return stack_seqs([to_seq(by_id[rid]) for rid in order])
+        token_fn.engine = engine   # introspection hook (tests assert reuse)
         return token_fn
 
 
@@ -194,11 +272,11 @@ ENGINE = SamplingEngine()
 
 
 def build_sampler(spec: SamplerSpec, cfg_t, params_t, cfg_d=None,
-                  params_d=None) -> Callable[..., SampleBatch]:
-    return ENGINE.build(spec, cfg_t, params_t, cfg_d, params_d)
+                  params_d=None, mesh=None) -> Callable[..., SampleBatch]:
+    return ENGINE.build(spec, cfg_t, params_t, cfg_d, params_d, mesh=mesh)
 
 
 def sample(spec: SamplerSpec, cfg_t, params_t, rng, cfg_d=None,
-           params_d=None, prompt=None) -> SampleBatch:
+           params_d=None, prompt=None, mesh=None) -> SampleBatch:
     return ENGINE.sample(spec, cfg_t, params_t, rng, cfg_d, params_d,
-                         prompt=prompt)
+                         prompt=prompt, mesh=mesh)

@@ -27,8 +27,14 @@ class SamplerSpec:
     execution  : "host"    — python loop, one device sync per step/round
                  "jit"     — whole loop in one lax.while_loop device call
                  "vmap"    — jit + jax.vmap over a batch of seeds
-                 "sharded" — vmap with the seed batch sharded over the
-                             device mesh (multi-device fan-out)
+                 "sharded" — vmap on a real device mesh: params placed by
+                             the model's logical axes (launch/mesh.py
+                             meshes + distributed/sharding.py rules), the
+                             seed batch sharded over the data axis, and
+                             the loop jitted with explicit in/out
+                             shardings (multi-device fan-out; pass
+                             ``mesh=`` to ``build_sampler`` to override
+                             the resolved default)
     batch      : number of sequences (ignored for execution="jit": 1).
                  For domain="token" this is the serving engine's
                  ``max_batch`` — the number of KV-cache slots the

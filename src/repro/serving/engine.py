@@ -183,11 +183,21 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
 
 
 class ServingEngine:
-    """Request-queue serving over the model zoo (method "sd" or "ar")."""
+    """Request-queue serving over the model zoo (method "sd" or "ar").
+
+    Pass ``mesh`` (e.g. ``launch.mesh.make_serving_mesh()`` or a debug
+    mesh) to run the pooled round sharded: params are placed by their
+    logical axes (``SERVING_RULES`` when the mesh has a kv axis), the
+    KV-cache pools are allocated with the SLOT axis sharded over "data"
+    (cache head axes over kv where divisible), and the per-round slot
+    vectors are placed over data too — so the batched draft+verify round
+    is one GSPMD program partitioned across devices. All host-side
+    bookkeeping (scheduler, commits, replay re-extend) is mesh-agnostic.
+    """
 
     def __init__(self, cfg_t, params_t, cfg_d=None, params_d=None, *,
                  method: str = "sd", max_batch: int = 4, max_len: int = 256,
-                 gamma: int = 4, draft_policy: str = "fixed"):
+                 gamma: int = 4, draft_policy: str = "fixed", mesh=None):
         if method not in ("ar", "sd"):
             raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
         if method == "sd" and (cfg_d is None or params_d is None):
@@ -197,9 +207,20 @@ class ServingEngine:
         self.cfg_d, self.params_d = cfg_d, params_d
         self.method = method
         self.max_batch, self.max_len = max_batch, max_len
+        self.mesh, self.rules = mesh, None
+        if mesh is not None:
+            from ..launch.mesh import serving_rules_for
+            self.rules = serving_rules_for(mesh)
+            self.params_t = jax.device_put(
+                params_t, self.rules.tree_shardings(
+                    _model_for(cfg_t).logical_axes(), params_t))
+            if method == "sd":
+                self.params_d = jax.device_put(
+                    params_d, self.rules.tree_shardings(
+                        _model_for(cfg_d).logical_axes(), params_d))
         self.scheduler = Scheduler(max_batch, max_len)
-        self.pool_t = KVCachePool(max_batch)
-        self.pool_d = KVCachePool(max_batch) if method == "sd" else None
+        self.pool_t = self._make_pool(cfg_t)
+        self.pool_d = self._make_pool(cfg_d) if method == "sd" else None
         if method == "sd":
             from ..sampling.policies import resolve_policy_by_name
             self.policy = resolve_policy_by_name(draft_policy, gamma)
@@ -208,6 +229,31 @@ class ServingEngine:
             self.policy = None
         self._stats = EngineStats()
         self._results: List[ServeResult] = []
+
+    def _make_pool(self, cfg) -> KVCachePool:
+        if self.rules is None:
+            return KVCachePool(self.max_batch)
+        return KVCachePool(self.max_batch, rules=self.rules,
+                           cache_axes=_model_for(cfg).cache_axes())
+
+    def reset(self, force: bool = False) -> None:
+        """Drop all request state but KEEP the allocated KV pools and
+        (via the process-wide ``_FN_CACHE``) every compilation — the
+        build-cache contract for callers that reuse one engine across
+        independent serving runs. Slot contents are stale after a reset;
+        admission overwrites a slot's cache before it is ever read.
+
+        Refuses to discard queued/active requests unless ``force=True``
+        (callers that own the whole run — e.g. the token-domain sampler
+        recovering from an interrupted previous call — pass it)."""
+        if self.scheduler.has_work() and not force:
+            raise RuntimeError("reset() with requests still queued/active; "
+                               "pass force=True to discard them")
+        self.scheduler = Scheduler(self.max_batch, self.max_len)
+        if self.policy is not None:
+            self._policy_state = self.policy.init_state()
+        self._stats = EngineStats()
+        self._results = []
 
     # -- public API --------------------------------------------------------
     def submit(self, req: ServeRequest = None, *, prompt=None,
@@ -294,8 +340,16 @@ class ServingEngine:
             temps[slot] = st.request.temperature
             active[slot] = True
             keys[slot] = _as_key(st.request.rng)
-        return (jnp.asarray(pending), jnp.stack(keys), jnp.asarray(ridx),
-                jnp.asarray(temps), jnp.asarray(active))
+        out = (jnp.asarray(pending), jnp.stack(keys), jnp.asarray(ridx),
+               jnp.asarray(temps), jnp.asarray(active))
+        if self.rules is None:
+            return out
+        # place the per-slot vectors over the data axis so the jitted
+        # round sees every operand pre-sharded (no host-side broadcast)
+        return tuple(
+            jax.device_put(a, self.rules.sharding(
+                ("batch",) + (None,) * (a.ndim - 1), dims=tuple(a.shape)))
+            for a in out)
 
     def _clamped_gamma(self, alive) -> int:
         """The policy's window, clamped so the round never drafts past
@@ -361,7 +415,12 @@ class ServingEngine:
         self._stats.drafted += gamma * n_active
         self._stats.accepted += acc_sum
         self._stats.target_forwards += 1
-        self._stats.draft_forwards += gamma + 1
+        # gamma batched draft forwards produce the round's gamma draft
+        # distributions; the trailing extend only maintains the draft
+        # cache and is not a drafting forward (same convention as the
+        # host loops' `drafted` counter in sampling/loops.py, so for a
+        # single-slot engine draft_forwards == drafted exactly)
+        self._stats.draft_forwards += gamma
 
     def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
         """Final pool for this round. Mask families were rolled back

@@ -69,6 +69,11 @@ def select_slots(mask, new_tree, old_tree):
     return jax.tree.map(pick, new_tree, old_tree)
 
 
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
 class KVCachePool:
     """``max_batch`` stacked batch-1 caches with slot read/write.
 
@@ -76,20 +81,46 @@ class KVCachePool:
     one pool class covers every family's cache pytree, including the
     encoder-decoder cross caches). Leaves are ``[slot, ...]``; reads and
     writes are functional index ops on the immutable tree.
+
+    Pass ``rules`` (``distributed.sharding.Rules``) plus the family's
+    ``cache_axes`` tree to allocate the pool SHARDED on the rules' mesh:
+    the slot axis is placed through the "batch" rule (the data axis) and
+    each cache dim through its own logical axis (e.g. kv_heads over the
+    serving mesh's kv axis), so the engine's batched round runs as one
+    GSPMD program partitioned over slots. Host-side slot reads/writes
+    stay functional index ops — GSPMD gathers what they touch.
     """
 
-    def __init__(self, n_slots: int):
+    def __init__(self, n_slots: int, rules=None, cache_axes=None):
         self.n_slots = n_slots
         self.tree: Optional[Any] = None
+        self._rules = rules
+        self._axes = cache_axes
+        self.shardings: Optional[Any] = None
 
     def ensure(self, template_cache) -> None:
         """Allocate the pool from a batch-1 cache's shapes/dtypes."""
         if self.tree is not None:
             return
-        self.tree = jax.tree.map(
-            lambda a: jnp.zeros((self.n_slots,) + jnp.shape(a),
-                                jnp.asarray(a).dtype),
-            template_cache)
+        if self._rules is None:
+            self.tree = jax.tree.map(
+                lambda a: jnp.zeros((self.n_slots,) + jnp.shape(a),
+                                    jnp.asarray(a).dtype),
+                template_cache)
+            return
+
+        def alloc(axes, a):
+            shape = (self.n_slots,) + tuple(jnp.shape(a))
+            # leading slot dim maps through "batch" -> data; the cache's
+            # own batch-1 dim (also logical "batch") is dropped by the
+            # rules' no-axis-reuse guard and stays whole
+            sh = self._rules.sharding(("batch",) + tuple(axes), dims=shape)
+            return jax.device_put(
+                jnp.zeros(shape, jnp.asarray(a).dtype), sh)
+
+        self.tree = jax.tree.map(alloc, self._axes, template_cache,
+                                 is_leaf=_is_axes_leaf)
+        self.shardings = jax.tree.map(lambda a: a.sharding, self.tree)
 
     def write(self, slot: int, cache) -> None:
         self.tree = jax.tree.map(

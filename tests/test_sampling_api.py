@@ -170,6 +170,32 @@ def test_sharded_matches_vmap(tiny_pair):
                                rtol=1e-6)
 
 
+@pytest.mark.parametrize("method", ["ar", "sd"])
+def test_host_matches_vmap_exactly_at_batch1(tiny_pair, method):
+    """RNG-parity bugfix: the host executor ALWAYS splits the seed, so
+    batch=1 host execution consumes the same lane key as the vmap (and
+    jit) executors. Stream equivalence is exact — identical lengths and
+    event types; times agree to kernel tolerance only, because XLA
+    lowers batched and unbatched matmuls differently (the valid prefix
+    is compared: buffer entries past t_end are never committed)."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    kw = (cfg_d, pd) if method == "sd" else ()
+    base = SamplerSpec(method=method, t_end=2.0, gamma=3, max_events=16,
+                       batch=1)
+    for seed in (0, 7):
+        bh = build_sampler(base.replace(execution="host"),
+                           cfg_t, pt, *kw)(jax.random.PRNGKey(seed))
+        bv = build_sampler(base.replace(execution="vmap"),
+                           cfg_t, pt, *kw)(jax.random.PRNGKey(seed))
+        n = int(bh.lengths[0])
+        assert n == int(bv.lengths[0])
+        np.testing.assert_array_equal(np.array(bh.types[0, :n]),
+                                      np.array(bv.types[0, :n]))
+        np.testing.assert_allclose(np.array(bh.times[0, :n]),
+                                   np.array(bv.times[0, :n]),
+                                   rtol=2e-5, atol=1e-5)
+
+
 def test_host_and_jit_agree_through_engine(tiny_pair):
     cfg_t, cfg_d, pt, pd = tiny_pair
     base = SamplerSpec(method="sd", t_end=2.0, gamma=3, max_events=32)
@@ -249,6 +275,35 @@ def test_adaptive_policy_tpp_host_sampling(tiny_pair):
     st = b.stats()
     assert st.drafted >= st.accepted >= 0
     assert st.rounds >= 1
+
+
+def test_token_sampler_reuses_engine_and_pool():
+    """Build-cache bugfix: a domain='token' sampler keeps ONE
+    ServingEngine for its lifetime — repeated calls reset request state
+    but reuse the allocated KV pools (and therefore every compilation)
+    instead of constructing a fresh engine per call."""
+    from repro.configs.base import ModelConfig
+    from repro.models import registry as zoo
+    cfg_t = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                        num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=31,
+                        dtype="float32", param_dtype="float32", remat=False)
+    cfg_d = cfg_t.replace(name="d", num_layers=1)
+    pt = zoo.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = zoo.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    fn = build_sampler(SamplerSpec(domain="token", method="sd",
+                                   execution="host", batch=2, max_events=6,
+                                   max_len=32, gamma=2),
+                       cfg_t, pt, cfg_d, pd)
+    prompt = jnp.arange(4, dtype=jnp.int32)
+    b1 = fn(jax.random.PRNGKey(0), prompt)
+    engine, pool_t, pool_d = fn.engine, fn.engine.pool_t, fn.engine.pool_d
+    assert pool_t.tree is not None   # allocated by the first call
+    b2 = fn(jax.random.PRNGKey(0), prompt)
+    assert fn.engine is engine
+    assert fn.engine.pool_t is pool_t and fn.engine.pool_d is pool_d
+    # reset correctness: same seed => identical output across calls
+    np.testing.assert_array_equal(np.array(b1.types), np.array(b2.types))
+    np.testing.assert_array_equal(np.array(b1.lengths), np.array(b2.lengths))
 
 
 def test_core_sampler_shims_are_gone():

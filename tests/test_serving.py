@@ -145,6 +145,48 @@ def test_tight_max_len_budget_stays_in_bounds(dense_pair):
     assert int(np.max(np.asarray(eng.pool_t.lens))) <= 32
 
 
+def test_draft_forward_counter_matches_host_loop_convention(dense_pair):
+    """EngineStats bugfix: a round drafts gamma tokens, so it counts
+    gamma draft forwards (the trailing cache-maintenance extend is not a
+    drafting forward) — the same convention as the host loops' `drafted`
+    counter in sampling/loops.py. For a single-slot engine the two
+    counters must therefore be EQUAL, and in general draft_forwards is
+    the per-round sum of the (shared) batched window."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=1, max_len=64,
+                        gamma=3)
+    eng.submit(_req(0, n=10))
+    eng.run()
+    st = eng.stats()
+    assert st.draft_forwards == st.drafted > 0
+    # batched: per-request drafted splits the shared window across slots
+    engb = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=64,
+                         gamma=3)
+    for i in range(2):
+        engb.submit(_req(i, n=10))
+    results = engb.run()
+    stb = engb.stats()
+    assert stb.drafted == sum(r.drafted for r in results)
+    assert stb.draft_forwards <= stb.drafted   # == gamma * rounds, not
+    assert stb.draft_forwards > 0              # gamma+1 per round
+
+
+def test_engine_reset_reuses_pool_and_replays_identically(dense_pair):
+    """reset() drops request state but keeps the allocated pools; the
+    same submissions then produce the same tokens."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=64,
+                        gamma=3)
+    eng.submit(_req(0, n=8))
+    first = [int(t) for t in eng.run()[0].tokens]
+    pool_t = eng.pool_t
+    eng.reset()
+    assert eng.pool_t is pool_t and eng.pool_t.tree is not None
+    assert eng.stats().tokens == 0
+    eng.submit(_req(0, n=8))
+    assert [int(t) for t in eng.run()[0].tokens] == first
+
+
 def test_identical_models_accept_everything_batched(dense_pair):
     cfg_t, _, pt, _ = dense_pair
     eng = ServingEngine(cfg_t, pt, cfg_t, pt, max_batch=3, max_len=64,

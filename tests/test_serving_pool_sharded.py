@@ -1,0 +1,111 @@
+"""Serving slot-pool sharding: the ``ServingEngine`` pooled round on a
+real mesh (subprocess — the forced host-device count must be set before
+JAX initializes).
+
+On a forced 4-device mesh with the KV-cache pools' slot axis sharded
+over "data", batched serving must produce exactly the tokens the
+unsharded engine produces (the per-request rng contract makes this
+bitwise), while the pool leaves actually carry the data-axis placement.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.launch.mesh import make_debug_mesh, serving_rules_for
+    from repro.models import registry
+    from repro.serving import ServeRequest, ServingEngine
+
+    assert jax.device_count() == 4
+
+    def dense(num_layers, name):
+        return ModelConfig(name=name, family="dense", num_layers=num_layers,
+                           d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                           vocab_size=31, dtype="float32",
+                           param_dtype="float32", remat=False)
+
+    cfg_t, cfg_d = dense(2, "t"), dense(1, "d")
+    pt = registry.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+
+    def serve(mesh, n_req=6):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=4, max_len=64,
+                            gamma=3, mesh=mesh)
+        ids = [eng.submit(ServeRequest(
+                   prompt=jnp.arange(5, dtype=jnp.int32),
+                   max_new_tokens=6 + i, rng=100 + i))
+               for i in range(n_req)]
+        res = {r.request_id: r for r in eng.run()}
+        toks = [[int(t) for t in res[i].tokens] for i in ids]
+        return eng, toks
+
+    out = {}
+    mesh = make_debug_mesh(data=4, model=1)
+    e_ref, t_ref = serve(None)
+    e_sh, t_sh = serve(mesh)
+    out["tokens_equal"] = t_ref == t_sh
+    spec = e_sh.pool_t.tree["k"].sharding.spec
+    out["pool_slot_axis"] = None if len(spec) == 0 else str(spec[0])
+    out["stats_equal"] = (
+        e_ref.stats().tokens == e_sh.stats().tokens
+        and e_ref.stats().target_forwards == e_sh.stats().target_forwards
+        and e_ref.stats().accepted == e_sh.stats().accepted)
+
+    # serving-rules mesh with a kv axis: cache kv_heads dim sharded too
+    kv_mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()).reshape(2, 2, 1), ("data", "kv", "tp"))
+    rules = serving_rules_for(kv_mesh)
+    kspec = rules.spec(("batch", "layers", None, "cache_seq", "kv_heads",
+                        "qkv"), dims=(4, 2, 1, 64, 2, 8))
+    out["kv_rule"] = [None if a is None else str(a) for a in kspec]
+    e_kv, t_kv = serve(kv_mesh)
+    out["kv_tokens_equal"] = t_ref == t_kv
+    kv_pool_spec = [None if a is None else str(a)
+                    for a in e_kv.pool_t.shardings["k"].spec]
+    out["kv_pool_spec"] = kv_pool_spec
+    print(json.dumps(out))
+""")
+
+
+pytestmark = pytest.mark.slow  # subprocess + 4-device GSPMD compiles
+
+
+@pytest.fixture(scope="module")
+def sharded_serving_out():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def test_sharded_pool_serving_matches_unsharded(sharded_serving_out):
+    assert sharded_serving_out["tokens_equal"] is True
+    assert sharded_serving_out["stats_equal"] is True
+
+
+def test_pool_slot_axis_sharded_over_data(sharded_serving_out):
+    assert sharded_serving_out["pool_slot_axis"] == "data"
+
+
+def test_serving_rules_shard_kv_heads_on_kv_mesh(sharded_serving_out):
+    """SERVING_RULES on a (data, kv, tp) mesh: the pool's slot axis maps
+    to data and the kv_heads cache dim to the kv axis."""
+    assert sharded_serving_out["kv_rule"][0] == "data"
+    assert sharded_serving_out["kv_rule"][4] == "kv"
+    assert sharded_serving_out["kv_pool_spec"][0] == "data"
+    assert sharded_serving_out["kv_tokens_equal"] is True
