@@ -342,13 +342,114 @@ def appendix_d1_thinning(args):
 
 
 # ---------------------------------------------------------------------------
+# Kernel microbenchmarks: pallas vs ref, paged vs dense -> BENCH_kernels.json
+# ---------------------------------------------------------------------------
+
+def kernels_microbench(args):
+    """``--only kernels``: per-kernel wall times — spec-verify attention
+    (Pallas-paged vs ref-paged-gather vs the dense naive baseline) for
+    gamma in {2, 4, 8}, flash attention, and the fused log-normal-mixture
+    logpdf/logsf — written to ``BENCH_kernels.json`` so the perf
+    trajectory has per-kernel data points. Off-TPU the Pallas numbers
+    are ``interpret=True`` (correctness-path cost, not hardware speed);
+    the JSON records the backend so rows stay comparable."""
+    import json
+
+    from repro.kernels import ref as kref
+    from repro.kernels.lognorm_mix import (lognorm_mix_logpdf_pallas,
+                                           lognorm_mix_logsf_pallas)
+    from repro.kernels.policy import on_tpu
+    from repro.kernels.spec_verify_attention import (
+        spec_verify_attention_pallas, spec_verify_attention_ref)
+
+    rng = jax.random.PRNGKey(0)
+    interp = not on_tpu()
+    rows = {"backend": jax.default_backend(), "interpret": interp}
+
+    # --- spec-verify attention over a paged cache (the serving hot path)
+    S, H, KV, Dh, page = 4, 8, 2, 64, 16
+    NB = 16                                        # 256-token cache
+    P = S * NB + 1
+    ks = jax.random.split(rng, 3)
+    k_pages = jax.random.normal(ks[1], (P, page, KV, Dh))
+    v_pages = jax.random.normal(ks[2], (P, page, KV, Dh))
+    bt = jnp.arange(1, S * NB + 1, dtype=jnp.int32).reshape(S, NB)
+    lens = jnp.full((S,), NB * page - 12, jnp.int32)
+    k_dense = k_pages[bt].reshape(S, NB * page, KV, Dh)
+    v_dense = v_pages[bt].reshape(S, NB * page, KV, Dh)
+    kv_pos = jnp.broadcast_to(jnp.arange(NB * page), (S, NB * page))
+    for gamma in (2, 4, 8):
+        C = gamma + 1
+        q = jax.random.normal(ks[0], (S, C, H, Dh))
+        q_pos = lens[:, None] + jnp.arange(C)
+        _, t_pal = timed(spec_verify_attention_pallas, q, k_pages, v_pages,
+                         bt, lens, interpret=interp)
+        _, t_ref = timed(jax.jit(spec_verify_attention_ref), q, k_pages,
+                         v_pages, bt, lens)
+        _, t_dense = timed(jax.jit(kref.naive_attention), q, k_dense,
+                           v_dense, q_pos, kv_pos)
+        rows[f"spec_verify/gamma{gamma}"] = {
+            "us_pallas": t_pal * 1e6, "us_ref_paged": t_ref * 1e6,
+            "us_dense_naive": t_dense * 1e6,
+            "S": S, "H": H, "KV": KV, "Dh": Dh, "page": page,
+            "cache": NB * page}
+        emit(f"kernels/spec_verify/gamma{gamma}", t_pal * 1e6,
+             f"us_pallas={t_pal * 1e6:.0f};us_ref_paged={t_ref * 1e6:.0f};"
+             f"us_dense_naive={t_dense * 1e6:.0f};"
+             f"cache={NB * page};S={S}")
+
+    # --- flash attention (prefill path)
+    Sq = 512 if args.quick else 1024
+    q = jax.random.normal(ks[0], (1, Sq, H, Dh))
+    k = jax.random.normal(ks[1], (1, Sq, KV, Dh))
+    v = jax.random.normal(ks[2], (1, Sq, KV, Dh))
+    pos = jnp.arange(Sq)[None]
+    from repro.kernels.flash_attention import flash_attention_pallas
+    _, t_pal = timed(flash_attention_pallas, q, k, v, pos, pos,
+                     bq=128, bk=128, interpret=interp)
+    _, t_ref = timed(jax.jit(
+        lambda *a: kref.flash_attention_ref(*a, 0, 0.0, 128, 128)),
+        q, k, v, pos, pos)
+    rows["flash/S%d" % Sq] = {"us_pallas": t_pal * 1e6,
+                              "us_ref": t_ref * 1e6}
+    emit(f"kernels/flash/S{Sq}", t_pal * 1e6,
+         f"us_pallas={t_pal * 1e6:.0f};us_ref={t_ref * 1e6:.0f}")
+
+    # --- fused log-normal mixture (verify densities / thinning bound)
+    N, M = 4096, 64
+    ks = jax.random.split(rng, 4)
+    tau = jax.random.uniform(ks[0], (N,), jnp.float32, 1e-3, 10.0)
+    log_w = jax.nn.log_softmax(jax.random.normal(ks[1], (N, M)))
+    mu = jax.random.normal(ks[2], (N, M))
+    sigma = jnp.exp(jax.random.normal(ks[3], (N, M)) * 0.4)
+    for name, pal, rf in (
+            ("logpdf", lognorm_mix_logpdf_pallas,
+             kref.lognorm_mix_logpdf_ref),
+            ("logsf", lognorm_mix_logsf_pallas,
+             kref.lognorm_mix_logsf_ref)):
+        _, t_pal = timed(pal, tau, log_w, mu, sigma, interpret=interp)
+        _, t_ref = timed(jax.jit(rf), tau, log_w, mu, sigma)
+        rows[f"lognorm_{name}/N{N}xM{M}"] = {
+            "us_pallas": t_pal * 1e6, "us_ref": t_ref * 1e6}
+        emit(f"kernels/lognorm_{name}", t_pal * 1e6,
+             f"us_pallas={t_pal * 1e6:.0f};us_ref={t_ref * 1e6:.0f};"
+             f"N={N};M={M}")
+
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(rows, f, indent=2, sort_keys=True)
+    print("# wrote BENCH_kernels.json")
+
+
+# ---------------------------------------------------------------------------
 # Serving throughput: continuous-batching LLM speculative serving
 # ---------------------------------------------------------------------------
 
 def serving_throughput(args):
     """tokens/sec + tokens/target-forward of ``repro.serving`` on the
     smoke LLM config, single-request vs continuous batching — the line
-    that makes BENCH_*.json track serving throughput over time."""
+    that makes BENCH_*.json track serving throughput over time. Runs the
+    legacy dense+ref layout (the historical row) AND the production
+    paged+Pallas layout."""
     from repro.configs import get_arch, smoke_variant
     from repro.models import registry as zoo
     from repro.serving import ServeRequest, ServingEngine
@@ -361,26 +462,28 @@ def serving_throughput(args):
     new_tokens = 16 if args.quick else 32
     gamma = 4   # fixed smoke setting so BENCH rows stay comparable
 
-    def run(max_batch, n_req):
+    def run(max_batch, n_req, **kw):
         eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
-                            max_len=256, gamma=gamma)
+                            max_len=256, gamma=gamma, **kw)
         for i in range(n_req):
             eng.submit(ServeRequest(prompt=prompt,
                                     max_new_tokens=new_tokens, rng=100 + i))
         eng.run()
         return eng.stats()
 
-    run(1, 1)          # compile
-    s1 = run(1, 2)
-    run(4, 1)          # compile the batched round
-    sb = run(4, 8)
-    emit("serving/llm_sd", 1e6 / max(sb.tokens_per_sec, 1e-9),
-         f"tok_per_sec_b1={s1.tokens_per_sec:.1f};"
-         f"tok_per_sec_b4={sb.tokens_per_sec:.1f};"
-         f"tok_per_fwd_b1={s1.tokens_per_forward:.2f};"
-         f"tok_per_fwd_b4={sb.tokens_per_forward:.2f};"
-         f"alpha={sb.acceptance_rate:.2f};"
-         f"gamma={gamma};requests=8;max_batch=4")
+    for tag, kw in (("", dict(kv_layout="dense", kernel="ref")),
+                    ("_paged", dict(kv_layout="paged"))):
+        run(1, 1, **kw)          # compile
+        s1 = run(1, 2, **kw)
+        run(4, 1, **kw)          # compile the batched round
+        sb = run(4, 8, **kw)
+        emit(f"serving/llm_sd{tag}", 1e6 / max(sb.tokens_per_sec, 1e-9),
+             f"tok_per_sec_b1={s1.tokens_per_sec:.1f};"
+             f"tok_per_sec_b4={sb.tokens_per_sec:.1f};"
+             f"tok_per_fwd_b1={s1.tokens_per_forward:.2f};"
+             f"tok_per_fwd_b4={sb.tokens_per_forward:.2f};"
+             f"alpha={sb.acceptance_rate:.2f};"
+             f"gamma={gamma};requests=8;max_batch=4")
 
 
 # ---------------------------------------------------------------------------
@@ -494,6 +597,7 @@ TABLES = {
     "table3": table3_draft_size,
     "fig3": fig3_gamma_sweep,
     "appendix_d1": appendix_d1_thinning,
+    "kernels": kernels_microbench,
     "serving": serving_throughput,
     "sharded": sharded_scaling,
 }

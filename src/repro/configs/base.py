@@ -9,6 +9,8 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
+from ..kernels.policy import KernelPolicy
+
 
 @dataclass(frozen=True)
 class ModelConfig:
@@ -69,7 +71,10 @@ class ModelConfig:
     remat: bool = True               # checkpoint each scanned layer in training
     remat_policy: str = "full"       # full | dots (save matmul outputs)
     scan_layers: bool = True
-    use_pallas: bool = False         # Pallas kernels (TPU target); CPU path uses jnp
+    use_pallas: bool = False         # legacy switch for the TRAINING forward
+    # inference-path kernel policy (extend / paged decode / spec-verify):
+    # "auto" resolves to Pallas (compiled on TPU, interpret elsewhere)
+    kernel_policy: KernelPolicy = KernelPolicy()
     tie_embeddings: bool = False
 
     # --- provenance ---
@@ -155,6 +160,12 @@ class TPPConfig:
     dtype: str = "float32"
     sigma_min: float = 1e-3          # numerical floor for mixture scales
     sigma_max: float = 10.0
+    # inference-path kernel policy. TPP resolves "auto" to the reference
+    # off-TPU (the whole-sequence vmap executors fan thousands of lanes
+    # through extend; a vmapped interpret-mode kernel would serialize
+    # them) and to compiled Pallas on TPU; ``KernelPolicy(backend=
+    # "pallas")`` opts in anywhere (the kernel-parity tests do).
+    kernel_policy: KernelPolicy = KernelPolicy()
 
     @property
     def head_dim(self) -> int:

@@ -36,10 +36,16 @@ class ThinningResult(NamedTuple):
 
 
 def _hazard(cfg, params, h, tau):
-    """log lambda*(tau | h) = log g - log(1 - G)."""
+    """log lambda*(tau | h) = log g - log(1 - G).
+
+    The adaptive upper bound evaluates this grid x M wide per accepted
+    event; both densities route through the fused Pallas kernels when
+    the config's kernel policy allows (``log_sf`` gained one alongside
+    ``log_pdf`` precisely for this call)."""
+    pol = tpp.resolve_policy(cfg)
     mix = tpp.interval_params(cfg, params, h)
-    return (tpp.interval_logpdf(mix, tau)
-            - tpp.interval_logsf(mix, tau))
+    return (tpp.interval_logpdf(mix, tau, policy=pol)
+            - tpp.interval_logsf(mix, tau, policy=pol))
 
 
 def sample_thinning_host(cfg, params, rng, t_end: float, max_events: int,

@@ -80,17 +80,19 @@ class VerifyResult(NamedTuple):
 
 
 def verify_events(rng, d_tau, d_k, logq_tau, logq_k_full, mix_t: MixParams,
-                  logp_k_full) -> VerifyResult:
+                  logp_k_full, policy=None) -> VerifyResult:
     """Vector accept/reject over a drafted window (Alg. 1 lines 8-10).
 
     d_tau: [g] drafted intervals; d_k: [g] drafted marks.
     logq_tau: [g] draft interval log-densities at d_tau.
     logq_k_full / logp_k_full: [g, K] full log-pmfs (draft / target).
     mix_t: target MixParams at the g history positions.
+    policy: resolved ``KernelPolicy`` for the gamma x M accept-ratio
+    density (the round's widest pointwise evaluation); None = reference.
     """
     g = d_tau.shape[0]
     r_tau, r_k = jax.random.split(rng)
-    logp_tau = tpp.interval_logpdf(mix_t, d_tau)
+    logp_tau = tpp.interval_logpdf(mix_t, d_tau, policy=policy)
     logp_k = jnp.take_along_axis(logp_k_full, d_k[:, None], -1)[:, 0]
     logq_k = jnp.take_along_axis(logq_k_full, d_k[:, None], -1)[:, 0]
     acc_tau = accept_logratio(r_tau, logp_tau, logq_tau)

@@ -1,3 +1,5 @@
-"""Pallas TPU kernels (flash_attention, decode_attention, lognorm_mix,
-selective_scan) + jnp oracles. Import via ``ops`` for dispatch."""
-from . import ops, ref
+"""Pallas TPU kernels (flash_attention, decode_attention,
+spec_verify_attention, lognorm_mix, selective_scan) + jnp oracles.
+Import via ``ops`` for dispatch; ``policy.KernelPolicy`` picks
+pallas-vs-ref / compiled-vs-interpret / block sizes per call site."""
+from . import ops, policy, ref

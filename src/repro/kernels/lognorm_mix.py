@@ -35,17 +35,35 @@ def _kernel(tau_ref, log_w_ref, mu_ref, sigma_ref, out_ref):
     out_ref[...] = out
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
-def lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
-                              interpret: bool = True):
-    """tau: [N]; log_w/mu/sigma: [N, M] -> logpdf [N]."""
+def _logsf_kernel(tau_ref, log_w_ref, mu_ref, sigma_ref, out_ref):
+    """log(1 - G(tau)): mixture survival via log_ndtr (stable tails),
+    fused log / normalize / logsumexp in one VMEM pass — the thinning
+    upper-bound check evaluates this grid x M wide per proposal."""
+    tau = tau_ref[...].astype(jnp.float32)              # [bn]
+    lw = log_w_ref[...].astype(jnp.float32)             # [bn, M]
+    mu = mu_ref[...].astype(jnp.float32)
+    sigma = sigma_ref[...].astype(jnp.float32)
+    lt = jnp.log(jnp.maximum(tau, 1e-30))[:, None]
+    z = (lt - mu) / sigma
+    comp = lw + jax.scipy.special.log_ndtr(-z)
+    m = jnp.max(comp, axis=-1, keepdims=True)
+    m_safe = jnp.where(m <= -1e30 / 2, 0.0, m)
+    out = jnp.log(jnp.maximum(
+        jnp.sum(jnp.exp(comp - m_safe), axis=-1), 1e-30)) + m_safe[:, 0]
+    out_ref[...] = out
+
+
+def _rowwise_call(kernel, tau, log_w, mu, sigma, bn, interpret):
+    """Shared tiling: flatten to [N] rows, pad to the block size, grid
+    over row blocks with the whole [bn, M] tile resident in VMEM."""
     orig_shape = tau.shape
     tau = tau.reshape(-1)
     N = tau.shape[0]
     M = log_w.shape[-1]
-    log_w = log_w.reshape(N, M)
-    mu = mu.reshape(N, M)
-    sigma = sigma.reshape(N, M)
+    # mix params may be broadcast against tau (one mixture, many taus)
+    log_w = jnp.broadcast_to(log_w, orig_shape + (M,)).reshape(N, M)
+    mu = jnp.broadcast_to(mu, orig_shape + (M,)).reshape(N, M)
+    sigma = jnp.broadcast_to(sigma, orig_shape + (M,)).reshape(N, M)
     bn = min(bn, max(8, N))
     pad = (-N) % bn
     if pad:
@@ -56,7 +74,7 @@ def lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
     Np = tau.shape[0]
     grid = (Np // bn,)
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bn,), lambda i: (i,)),
@@ -69,3 +87,17 @@ def lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
         interpret=interpret,
     )(tau, log_w, mu, sigma)
     return out[:N].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
+                              interpret: bool = True):
+    """tau: [N]; log_w/mu/sigma: [N, M] -> logpdf [N]."""
+    return _rowwise_call(_kernel, tau, log_w, mu, sigma, bn, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def lognorm_mix_logsf_pallas(tau, log_w, mu, sigma, *, bn: int = 256,
+                             interpret: bool = True):
+    """tau: [N]; log_w/mu/sigma: [N, M] -> log(1 - G(tau)) [N]."""
+    return _rowwise_call(_logsf_kernel, tau, log_w, mu, sigma, bn, interpret)

@@ -1,10 +1,20 @@
 """Public kernel entry points.
 
 Each op dispatches between the Pallas TPU kernel and the pure-jnp
-reference. On this CPU container the Pallas kernels execute in
-``interpret=True`` mode inside the tests; the model code defaults to the
-jnp path (``use_pallas=False``) so that dry-run lowering produces plain
-XLA HLO.
+reference, governed by a ``KernelPolicy`` (``kernels.policy``): pass
+``policy=`` to choose pallas-vs-ref / compiled-vs-interpret / block
+sizes in one object — the model configs carry one
+(``cfg.kernel_policy``) so a whole compiled program agrees. The legacy
+``use_pallas``/``interpret`` kwargs remain for direct callers and mean
+exactly what they did.
+
+Block sizes are validated and auto-rounded to the hardware alignment
+(warning once per call site) instead of failing deep inside
+``pallas_call`` lowering.
+
+Autodiff note: the Pallas kernels are forward-only. Training paths
+(``forward``/``loss_fn``/``loglik``) must stay on the references, which
+carry custom VJPs where needed.
 """
 from __future__ import annotations
 
@@ -14,13 +24,30 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .policy import PALLAS, REF, KernelPolicy, validate_block_size
+
+
+def _dispatch(policy, use_pallas, interpret, default_backend="pallas"):
+    """(use_pallas, interpret, resolved_policy|None) for an op call."""
+    if policy is None:
+        return use_pallas, interpret, None
+    pol = policy.resolve(default_backend=default_backend)
+    return pol.use_pallas, pol.interpret, pol
 
 
 def flash_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
                     softcap: float = 0.0, bq: int = 512, bk: int = 512,
-                    use_pallas: bool = False, interpret: bool = True):
-    """Blocked causal attention (prefill / verify path)."""
+                    use_pallas: bool = False, interpret: bool = True,
+                    policy: KernelPolicy | None = None):
+    """Blocked causal attention (prefill / long-chunk path)."""
+    use_pallas, interpret, pol = _dispatch(policy, use_pallas, interpret)
     if use_pallas:
+        if pol is not None:
+            bq, bk = pol.bq, pol.bk
+        bq = validate_block_size("flash_attention", "bq", bq,
+                                 total=q.shape[1])
+        bk = validate_block_size("flash_attention", "bk", bk,
+                                 total=k.shape[1])
         from .flash_attention import flash_attention_pallas
         return flash_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
                                       softcap=softcap, bq=bq, bk=bk,
@@ -31,9 +58,15 @@ def flash_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
 
 def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
                      softcap: float = 0.0, bk: int = 512,
-                     use_pallas: bool = False, interpret: bool = True):
+                     use_pallas: bool = False, interpret: bool = True,
+                     policy: KernelPolicy | None = None):
     """Single-token GQA decode attention over a KV cache. q: [B, H, Dh]."""
+    use_pallas, interpret, pol = _dispatch(policy, use_pallas, interpret)
     if use_pallas:
+        if pol is not None:
+            bk = pol.bk
+        bk = validate_block_size("decode_attention", "bk", bk,
+                                 total=k.shape[1])
         from .decode_attention import decode_attention_pallas
         return decode_attention_pallas(q, k, v, q_pos, kv_pos, window=window,
                                        softcap=softcap, bk=bk,
@@ -42,17 +75,75 @@ def decode_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
                                     softcap=softcap)
 
 
-def lognorm_mix_logpdf(tau, log_w, mu, sigma, *, use_pallas: bool = False,
-                       interpret: bool = True):
-    """Fused log-normal-mixture log-density (paper Sec. 4.2 decoder)."""
+def spec_verify_attention(q, k_pages, v_pages, block_tables, lens, *,
+                          window: int = 0, softcap: float = 0.0,
+                          max_kv: int = 0,
+                          policy: KernelPolicy | None = None):
+    """Speculative-verify attention over a paged KV cache.
+
+    q: [S, C, H, Dh] (C = gamma+1 chunk queries at positions
+    lens[s]..lens[s]+C-1, K/V already written into the pages);
+    k/v_pages: [P, page, KV, Dh]; block_tables: [S, NB]; lens: [S].
+
+    ``max_kv`` only affects the reference path: it slices the gathered
+    cache to that length so the result is bitwise what the same dense
+    cache produces (the paged==dense equivalence contract).
+    """
+    use_pallas, interpret, _ = _dispatch(policy, False, True)
     if use_pallas:
+        from .spec_verify_attention import spec_verify_attention_pallas
+        return spec_verify_attention_pallas(q, k_pages, v_pages,
+                                            block_tables, lens,
+                                            window=window, softcap=softcap,
+                                            interpret=interpret)
+    from .spec_verify_attention import spec_verify_attention_ref
+    return spec_verify_attention_ref(q, k_pages, v_pages, block_tables,
+                                     lens, window=window, softcap=softcap,
+                                     max_kv=max_kv)
+
+
+def spec_verify_attention_seq(q, k, v, start, *, window: int = 0,
+                              softcap: float = 0.0,
+                              policy: KernelPolicy | None = None):
+    """Dense single-sequence spec-verify (the TPP multi-query verify /
+    decode path; vmap-safe). q: [C, H, Dh]; k/v: [N, H, Dh] with slot ==
+    position; start: scalar int32. Pallas-only entry — ref callers keep
+    their einsum attention."""
+    pol = (policy if policy is not None else PALLAS).resolve()
+    bk = validate_block_size("spec_verify_attention_seq", "bk", pol.bk,
+                             total=k.shape[0])
+    from .spec_verify_attention import spec_verify_attention_seq_pallas
+    return spec_verify_attention_seq_pallas(q, k, v, start, window=window,
+                                            softcap=softcap, bk=bk,
+                                            interpret=pol.interpret)
+
+
+def lognorm_mix_logpdf(tau, log_w, mu, sigma, *, use_pallas: bool = False,
+                       interpret: bool = True,
+                       policy: KernelPolicy | None = None):
+    """Fused log-normal-mixture log-density (paper Sec. 4.2 decoder)."""
+    use_pallas, interpret, pol = _dispatch(policy, use_pallas, interpret)
+    if use_pallas:
+        bn = validate_block_size("lognorm_mix_logpdf", "bn",
+                                 pol.bn if pol is not None else 256)
         from .lognorm_mix import lognorm_mix_logpdf_pallas
-        return lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma,
+        return lognorm_mix_logpdf_pallas(tau, log_w, mu, sigma, bn=bn,
                                          interpret=interpret)
     return ref.lognorm_mix_logpdf_ref(tau, log_w, mu, sigma)
 
 
-def lognorm_mix_logsf(tau, log_w, mu, sigma):
+def lognorm_mix_logsf(tau, log_w, mu, sigma, *, use_pallas: bool = False,
+                      interpret: bool = True,
+                      policy: KernelPolicy | None = None):
+    """Fused log-survival log(1 - G(tau)) of the mixture (Eq. 2 tail /
+    thinning upper bound)."""
+    use_pallas, interpret, pol = _dispatch(policy, use_pallas, interpret)
+    if use_pallas:
+        bn = validate_block_size("lognorm_mix_logsf", "bn",
+                                 pol.bn if pol is not None else 256)
+        from .lognorm_mix import lognorm_mix_logsf_pallas
+        return lognorm_mix_logsf_pallas(tau, log_w, mu, sigma, bn=bn,
+                                        interpret=interpret)
     return ref.lognorm_mix_logsf_ref(tau, log_w, mu, sigma)
 
 
@@ -63,8 +154,10 @@ def naive_attention(q, k, v, q_pos, kv_pos, *, window: int = 0,
 
 
 def selective_scan(dt, Bc, Cc, u, A, D, h0, *, use_pallas: bool = False,
-                   interpret: bool = True):
+                   interpret: bool = True,
+                   policy: KernelPolicy | None = None):
     """Fused Mamba selective scan over one chunk (states stay in VMEM)."""
+    use_pallas, interpret, _ = _dispatch(policy, use_pallas, interpret)
     if use_pallas:
         from .selective_scan import selective_scan_pallas
         return selective_scan_pallas(dt, Bc, Cc, u, A, D, h0,

@@ -1,0 +1,143 @@
+"""``KernelPolicy``: one frozen knob deciding HOW every kernel entry
+point in ``kernels.ops`` executes — Pallas vs the jnp reference, compiled
+vs ``interpret=True``, and the block/tile sizes.
+
+The policy is threaded from the user-facing configs (``SamplerSpec``,
+``ServingEngine``) through the model configs (``ModelConfig.kernel_policy``
+/ ``TPPConfig.kernel_policy``) down to ``kernels.ops``, so callers choose
+once and every kernel call in the compiled program agrees. It is a frozen
+dataclass — hashable, so configs carrying it stay valid static jit args.
+
+Resolution rules (``resolve()``):
+
+  - ``backend="auto"`` picks **pallas** on a compiled TPU backend and for
+    the serving/token hot path on CPU (small slot-count grids run fine in
+    ``interpret=True``); the TPP whole-sequence vmap executors resolve
+    "auto" to **ref** on CPU — a vmapped interpret-mode kernel serializes
+    the batch into the grid loop, so fanning 10k+ lanes through it would
+    undo the vmap. Callers wanting Pallas there opt in explicitly
+    (``backend="pallas"``), as the parity tests do.
+  - ``interpret=None`` means compiled on TPU, interpret elsewhere.
+
+Block sizes are *requests*: ``validate_block_size`` rounds them to the
+hardware sublane alignment (and clamps into range) with a once-per-site
+warning instead of letting ``pallas_call`` fail on a misaligned
+BlockSpec deep inside lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+BACKENDS = ("auto", "pallas", "ref")
+
+#: TPU sublane alignment for the second-to-last block dim (f32).
+SUBLANE = 8
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclass(frozen=True)
+class KernelPolicy:
+    """How kernel entry points execute.
+
+    backend   : "pallas" | "ref" | "auto" (see module docstring).
+    interpret : None = auto (compiled on TPU, interpret elsewhere).
+    bq, bk    : query/key block sizes for the attention kernels.
+    bn        : row tile for the log-normal-mixture kernels.
+    page_size : KV block ("page") size of the paged serving pool.
+    """
+
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+    bq: int = 128
+    bk: int = 128
+    bn: int = 256
+    page_size: int = 16
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        for name in ("bq", "bk", "bn", "page_size"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1")
+
+    def replace(self, **kw) -> "KernelPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def resolve(self, default_backend: str = "pallas") -> "KernelPolicy":
+        """Concrete policy: no "auto" backend, no None interpret.
+
+        ``default_backend`` is what "auto" means at this call site when
+        not on TPU (on TPU "auto" is always pallas-compiled).
+        """
+        backend = self.backend
+        if backend == "auto":
+            backend = "pallas" if on_tpu() else default_backend
+        interpret = self.interpret
+        if interpret is None:
+            interpret = not on_tpu()
+        return self.replace(backend=backend, interpret=interpret)
+
+    # -- conveniences consumed by ops.py -----------------------------------
+    @property
+    def use_pallas(self) -> bool:
+        if self.backend == "auto":
+            raise ValueError("resolve() the policy before dispatching")
+        return self.backend == "pallas"
+
+
+#: Always the jnp reference path (training / autodiff callers).
+REF = KernelPolicy(backend="ref")
+#: Always Pallas (interpret off-TPU unless overridden).
+PALLAS = KernelPolicy(backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# block-size validation (satellite: fail loudly + auto-round, not deep
+# inside pallas_call lowering)
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def _warn_once(key, msg):
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, UserWarning, stacklevel=3)
+
+
+def validate_block_size(op: str, name: str, value: int, *,
+                        total: Optional[int] = None,
+                        align: int = SUBLANE) -> int:
+    """Round a requested block size to a usable one, warning once.
+
+    - rounds UP to a multiple of ``align`` (the TPU sublane quantum; a
+      misaligned second-minor block dim fails inside Mosaic otherwise);
+    - clamps to ``total`` rounded up to ``align`` (callers pad the array
+      to the returned block size, so a block larger than the padded
+      extent is just the whole array).
+    """
+    if value < 1:
+        raise ValueError(f"{op}: block size {name}={value} must be >= 1")
+    rounded = ((value + align - 1) // align) * align
+    if rounded != value:
+        _warn_once((op, name, value),
+                   f"{op}: block size {name}={value} is not "
+                   f"hardware-aligned; auto-rounded up to the sublane "
+                   f"multiple {rounded} (use multiples of {align} to "
+                   "silence)")
+    if total is not None:
+        # capping to the (aligned) array extent is the normal small-input
+        # case — silent, like the kernels' own min(b, S) clamp
+        cap = ((max(total, 1) + align - 1) // align) * align
+        rounded = min(rounded, cap)
+    return rounded

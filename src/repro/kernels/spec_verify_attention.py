@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: speculative-verify attention over a PAGED KV cache.
+
+One propose-verify round scores gamma+1 query positions per sequence
+(the pending token + gamma drafts) against that sequence's whole KV
+history. Expressing this as a vmapped single-token extend wastes the
+MXU (one [1, bk] logits row per step) and re-reads the cache gamma+1
+times; this kernel processes all C = gamma+1 queries x all G query
+heads of one KV head together — a [C*G, page] logits tile per KV block
+— with online-softmax state in VMEM scratch, so the whole verify is ONE
+pass over the cache.
+
+The KV cache is paged: physical pages ``k_pages/v_pages [P, page, KV,
+Dh]`` shared by every sequence, with a per-sequence block table mapping
+logical block b to its physical page. The block table is a
+scalar-prefetch operand, so the page indirection happens in the
+BlockSpec index map (the DMA fetches exactly the pages the sequence
+owns — classic paged attention). Logical KV positions are implicit:
+entry p of logical block b sits at position b*page + p, which is what
+makes rollback a block-table truncation (stale entries beyond the
+committed length are causally masked, never rewritten).
+
+Grid: (S, KV, nb) — nb innermost/sequential, scratch re-initialized at
+b == 0 and flushed at b == nb - 1. Blocks past a sequence's visible
+horizon are skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, out_ref,
+            m_scr, l_scr, acc_scr, *, scale, window, softcap, page, nb,
+            C, G):
+    s = pl.program_id(0)
+    b = pl.program_id(2)
+    Dh = q_ref.shape[-1]
+
+    @pl.when(b == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    l0 = lens_ref[s]
+
+    # A block contributes iff its first logical position can be visible
+    # to the last query (position l0 + C - 1).
+    @pl.when(b * page <= l0 + C - 1)
+    def _accumulate():
+        q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(C * G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+        s_blk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap > 0:
+            s_blk = jnp.tanh(s_blk / softcap) * softcap
+        row = jax.lax.broadcasted_iota(jnp.int32, (C * G, page), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (C * G, page), 1)
+        qp = l0 + row // G                 # logical query positions
+        kp = b * page + col                # logical key positions
+        mask = kp <= qp
+        if window > 0:
+            mask &= kp > qp - window
+        s_blk = jnp.where(mask, s_blk, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s_blk, axis=-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.where(mask, jnp.exp(s_blk - m_safe[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_scr[...] = m_new
+
+    @pl.when(b == nb - 1)
+    def _flush():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        out = acc_scr[...] / safe[:, None]
+        out = jnp.where((l > 0)[:, None], out, 0.0)
+        out_ref[0, :, 0, :, :] = out.reshape(C, G, Dh).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap",
+                                             "interpret"))
+def spec_verify_attention_pallas(q, k_pages, v_pages, block_tables, lens, *,
+                                 window: int = 0, softcap: float = 0.0,
+                                 interpret: bool = True):
+    """q: [S, C, H, Dh]; k/v_pages: [P, page, KV, Dh];
+    block_tables: [S, NB] int32 physical page per logical block;
+    lens: [S] int32 committed KV length BEFORE the chunk (queries sit at
+    positions lens[s] .. lens[s]+C-1, and their K/V are already written
+    into the pages). Returns [S, C, H, Dh]."""
+    S, C, H, Dh = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    NB = block_tables.shape[1]
+    qg = q.reshape(S, C, KV, G, Dh)
+    lens = lens.astype(jnp.int32)
+    kern = functools.partial(_kernel, scale=1.0 / math.sqrt(Dh),
+                             window=window, softcap=softcap, page=page,
+                             nb=NB, C=C, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, NB),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, G, Dh),
+                         lambda s, h, b, bt, ln: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, Dh),
+                         lambda s, h, b, bt, ln: (bt[s, b], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, Dh),
+                         lambda s, h, b, bt, ln: (bt[s, b], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, G, Dh),
+                               lambda s, h, b, bt, ln: (s, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G,), jnp.float32),
+            pltpu.VMEM((C * G, Dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, C, KV, G, Dh), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lens, qg, k_pages, v_pages)
+    return out.reshape(S, C, H, Dh)
+
+
+def spec_verify_attention_ref(q, k_pages, v_pages, block_tables, lens, *,
+                              window: int = 0, softcap: float = 0.0,
+                              max_kv: int = 0):
+    """jnp oracle: gather the pages into a dense cache, run naive
+    attention on logical positions.
+
+    ``max_kv`` > 0 slices the gathered cache to exactly that length —
+    with it, the result is BITWISE what a dense [S, max_kv] cache of the
+    same contents produces (same shapes => same XLA reduction), which is
+    what the paged==dense equivalence tests pin.
+    """
+    S, C, H, Dh = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    NB = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(S, NB * page, KV, Dh)
+    v = v_pages[block_tables].reshape(S, NB * page, KV, Dh)
+    if max_kv:
+        k, v = k[:, :max_kv], v[:, :max_kv]
+    Sk = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (S, Sk))
+    q_pos = lens.astype(jnp.int32)[:, None] + jnp.arange(C, dtype=jnp.int32)
+    return _ref.naive_attention(q, k, v, q_pos, kv_pos, window=window,
+                                softcap=softcap)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "bk",
+                                             "interpret"))
+def spec_verify_attention_seq_pallas(q, k, v, start, *, window: int = 0,
+                                     softcap: float = 0.0, bk: int = 128,
+                                     interpret: bool = True):
+    """Dense single-sequence form (the TPP sd verify / decode path).
+
+    q: [C, H, Dh] chunk queries at positions start..start+C-1;
+    k/v: [N, H, Dh] dense cache with slot == position (the chunk's K/V
+    already written); start: scalar int32. vmap-safe: the cache is
+    viewed as an identity-block-table paged pool, so the same kernel
+    serves both layouts.
+    """
+    C, H, Dh = q.shape
+    N = k.shape[0]
+    bk = min(bk, N)
+    pad = (-N) % bk
+    if pad:
+        k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+    nb = k.shape[0] // bk
+    pages_k = k.reshape(nb, bk, H, Dh)
+    pages_v = v.reshape(nb, bk, H, Dh)
+    bt = jnp.arange(nb, dtype=jnp.int32)[None]
+    lens = jnp.asarray(start, jnp.int32).reshape(1)
+    out = spec_verify_attention_pallas(q[None], pages_k, pages_v, bt, lens,
+                                       window=window, softcap=softcap,
+                                       interpret=interpret)
+    return out[0]

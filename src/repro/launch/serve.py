@@ -36,7 +36,9 @@ def build_engine(args):
     return cfg_t, ServingEngine(
         cfg_t, pt, cfg_d, pd, method=args.method, max_batch=args.max_batch,
         max_len=args.max_len, gamma=args.gamma,
-        draft_policy=args.draft_policy, mesh=mesh)
+        draft_policy=args.draft_policy, mesh=mesh,
+        kv_layout=args.kv_layout, kernel=args.kernel,
+        page_size=args.page_size)
 
 
 def main():
@@ -53,6 +55,17 @@ def main():
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kv-layout", dest="kv_layout", default="auto",
+                    choices=["auto", "paged", "dense"],
+                    help="KV pool: paged block tables + Pallas "
+                         "spec-verify attention (default where "
+                         "supported) or dense per-slot caches")
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "pallas", "ref"],
+                    help="kernel backend (auto = Pallas; compiled on "
+                         "TPU, interpret elsewhere)")
+    ap.add_argument("--page-size", dest="page_size", type=int, default=None,
+                    help="KV block size of the paged pool")
     ap.add_argument("--sharded", action="store_true",
                     help="place the slot pool + params on a device mesh "
                          "(the serving mesh when 256+ devices are "

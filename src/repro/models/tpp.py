@@ -32,10 +32,19 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..kernels import ops
+from ..kernels.policy import KernelPolicy
 from ..kernels.ref import INVALID_POS
 from . import common as cm
 
 NEG_INF = -1e30
+
+
+def resolve_policy(cfg) -> KernelPolicy:
+    """The TPP inference kernel policy. "auto" resolves to the reference
+    off-TPU (vmapped interpret-mode kernels serialize the lane batch —
+    see ``kernels.policy``) and to compiled Pallas on TPU; an explicit
+    backend ("pallas"/"ref") wins either way."""
+    return cfg.kernel_policy.resolve(default_backend="ref")
 
 
 # ---------------------------------------------------------------------------
@@ -211,8 +220,16 @@ def init_cache(cfg, max_events: int):
 def extend(cfg, params, cache, times, types):
     """Append c events; return (h [c, D], new cache).
 
-    Correct under rollback: entries with recorded ordinal >= len are
-    masked via the idx buffer.
+    This one entry point is decode (c=1) and the speculative verify
+    (c = gamma+1, Algorithm 1's parallel target forward). With a Pallas
+    policy the multi-query attention against the cache runs through the
+    ``spec_verify_attention`` kernel (all c queries in one pass over the
+    KV blocks); the reference path keeps the einsum attention. The
+    AttNHP encoder's +1-denominator kernel form stays on the reference.
+
+    Correct under rollback either way: slot == ordinal in this cache, so
+    a stale entry's position always exceeds any live query position and
+    causal masking hides it (the idx buffer encodes the same fact).
     """
     z = temporal_encoding(cfg, params, times)
     x = params["embed"][types].astype(z.dtype) + z
@@ -221,13 +238,23 @@ def extend(cfg, params, cache, times, types):
     start = cache["len"]
     slots = start + jnp.arange(c, dtype=jnp.int32)
     idx_new = cache["idx"].at[slots].set(slots)
+    pol = resolve_policy(cfg)
+    use_kernel = pol.use_pallas and cfg.encoder != "attnhp"
+
+    def attend(lp, q, kc, vc):
+        if use_kernel:
+            o = ops.spec_verify_attention_seq(q, kc, vc, start, policy=pol)
+            out = jnp.einsum("chd,hdo->co", o.astype(jnp.float32),
+                             lp["wo"].astype(jnp.float32))
+            return out.astype(q.dtype)
+        return _attend(cfg, lp, q, kc, vc, slots, idx_new)
 
     def body(x, layer_in):
         lp, kc, vc = layer_in
         q, k, v = _layer_kv(cfg, lp, x, z)
         kc = kc.at[slots].set(k.astype(kc.dtype))
         vc = vc.at[slots].set(v.astype(vc.dtype))
-        x = x + _attend(cfg, lp, q, kc, vc, slots, idx_new)
+        x = x + attend(lp, q, kc, vc)
         xn = cm.rms_norm(x, lp["ln2"])
         x = x + jnp.einsum("sf,fd->sd", jax.nn.gelu(
             jnp.einsum("sd,df->sf", xn, lp["w1"])), lp["w2"])
@@ -287,12 +314,18 @@ def sample_interval(rng, mix: MixParams):
     return jnp.exp(mu + sigma * eps)
 
 
-def interval_logpdf(mix: MixParams, tau):
-    return ops.lognorm_mix_logpdf(tau, mix.log_w, mix.mu, mix.sigma)
+def interval_logpdf(mix: MixParams, tau, policy: KernelPolicy = None):
+    """log g(tau). ``policy=None`` keeps the differentiable reference
+    (training); inference callers pass ``resolve_policy(cfg)`` to run
+    the fused Pallas kernel."""
+    return ops.lognorm_mix_logpdf(tau, mix.log_w, mix.mu, mix.sigma,
+                                  policy=policy)
 
 
-def interval_logsf(mix: MixParams, tau):
-    return ops.lognorm_mix_logsf(tau, mix.log_w, mix.mu, mix.sigma)
+def interval_logsf(mix: MixParams, tau, policy: KernelPolicy = None):
+    """log(1 - G(tau)). Same policy contract as ``interval_logpdf``."""
+    return ops.lognorm_mix_logsf(tau, mix.log_w, mix.mu, mix.sigma,
+                                 policy=policy)
 
 
 # ---------------------------------------------------------------------------

@@ -284,6 +284,91 @@ def extend(cfg, params, cache, tokens, vision_embeds=None):
     return logits, new_cache
 
 
+def init_kv_pages(cfg, n_pages: int, page_size: int):
+    """Physical page pool shared by every sequence: [L, P, page, KV, Dh].
+
+    No position buffer: entry p of a sequence's logical block b sits at
+    position b*page + p, so causal masking on logical positions replaces
+    both the rollback pos-rewrite and the unwritten-slot sentinel."""
+    dtype = cm.get_dtype(cfg.dtype)
+    L, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((L, n_pages, page_size, KV, Dh), dtype),
+            "v": jnp.zeros((L, n_pages, page_size, KV, Dh), dtype)}
+
+
+def extend_paged(cfg, params, pages, block_tables, lens, tokens, *,
+                 policy=None, max_kv: int = 0):
+    """Batched extend over a PAGED KV pool: append ``tokens[s]`` at
+    positions ``lens[s]..lens[s]+c-1`` for every sequence in one native
+    batch (this replaces the serving engine's vmapped per-slot extend).
+
+    pages        : {"k","v"} [L, P, page, KV, Dh] physical page pool.
+    block_tables : [S, NB] int32 physical page of each logical block —
+                   rows must already cover lens[s]+c entries.
+    lens         : [S] int32 committed lengths before the chunk.
+    tokens       : [S, c] int32.
+
+    Returns (logits [S, c, V], new pages). Lengths/allocation/rollback
+    are the caller's (host) bookkeeping: commit = advance lens, rollback
+    = truncate lens — the stale K/V beyond a truncated length is
+    causally invisible and overwritten by the next chunk.
+
+    ``max_kv`` is forwarded to the reference spec-verify path so its
+    gathered cache matches a dense [S, max_kv] cache bitwise.
+    """
+    dtype = cm.get_dtype(cfg.dtype)
+    S, c = tokens.shape
+    P, page = pages["k"].shape[1], pages["k"].shape[2]
+    x = params["embed"][tokens].astype(dtype)
+    lens = lens.astype(jnp.int32)
+    positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)   # [S, c]
+    blk = jnp.take_along_axis(block_tables.astype(jnp.int32),
+                              positions // page, axis=1)
+    flat = (blk * page + positions % page).reshape(-1)           # [S*c]
+
+    def scan_body(x, layer_in):
+        lp, kp, vp = layer_in
+        xn = cm.rms_norm(x, lp["ln1"])
+        q, k, v = cm.attn_qkv(lp["attn"], xn, cfg, positions)
+        KV, Dh = kp.shape[-2], kp.shape[-1]
+        kp = kp.reshape(P * page, KV, Dh).at[flat].set(
+            k.reshape(S * c, KV, Dh).astype(kp.dtype)).reshape(
+                P, page, KV, Dh)
+        vp = vp.reshape(P * page, KV, Dh).at[flat].set(
+            v.reshape(S * c, KV, Dh).astype(vp.dtype)).reshape(
+                P, page, KV, Dh)
+        o = ops.spec_verify_attention(q, kp, vp, block_tables, lens,
+                                      window=_window(cfg),
+                                      softcap=cfg.logit_softcap,
+                                      max_kv=max_kv, policy=policy)
+        x = x + cm.attn_out(lp["attn"], o)
+        xn = cm.rms_norm(x, lp["ln2"])
+        if cfg.is_moe:
+            # per-sequence dispatch groups: the same capacity/drop
+            # decisions as the dense pool's vmapped batch-1 extends
+            h = jax.vmap(
+                lambda xs: cm.moe_ffn(cfg, lp["moe"], xs[None])[0][0])(xn)
+        else:
+            h = cm.swiglu(lp["mlp"], xn)
+        return x + h, (kp, vp)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new) = lax.scan(
+            scan_body, x, (params["layers"], pages["k"], pages["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (kp, vp) = scan_body(x, (lp, pages["k"][i], pages["v"][i]))
+            ks.append(kp)
+            vs.append(vp)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = cm.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return logits, {"k": k_new, "v": v_new}
+
+
 def rollback(cache, new_len):
     """Roll the cache back to ``new_len`` valid entries (O(1): mask stale
     slots through the position buffer rather than copying k/v)."""

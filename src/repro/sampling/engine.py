@@ -109,6 +109,16 @@ class SamplingEngine:
     def _build_tpp(self, spec, cfg_t, params_t, cfg_d, params_d, mesh=None):
         strat = get_strategy(spec.method)
 
+        if spec.kernel != "auto":
+            # force a kernel backend for EVERY execution of this spec —
+            # the configs carry the policy, so host/jit/vmap stay
+            # stream-identical under whichever backend is chosen
+            from ..kernels.policy import KernelPolicy
+            pol = KernelPolicy(backend=spec.kernel)
+            cfg_t = cfg_t.replace(kernel_policy=pol)
+            if cfg_d is not None:
+                cfg_d = cfg_d.replace(kernel_policy=pol)
+
         if spec.requires_draft and spec.execution != "host":
             from .policies import resolve_policy
             if not resolve_policy(spec).is_static:
@@ -226,7 +236,8 @@ class SamplingEngine:
         engine = ServingEngine(
             cfg_t, params_t, cfg_d, params_d, method=spec.method,
             max_batch=spec.batch, max_len=spec.max_len,
-            gamma=spec.gamma, draft_policy=spec.draft_policy, mesh=mesh)
+            gamma=spec.gamma, draft_policy=spec.draft_policy, mesh=mesh,
+            kernel=spec.kernel, kv_layout=spec.kv_layout)
 
         def token_fn(rng, prompt):
             prompt = jnp.asarray(prompt, jnp.int32)

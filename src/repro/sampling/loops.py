@@ -182,7 +182,14 @@ def draft_window(cfg_d, params_d, rng, cache_d, t_pend, k_pend, gamma):
 
 
 def sd_round(cfg_t, cfg_d, params_t, params_d, gamma, s: SDState) -> SDState:
-    """One propose-verify round of Algorithm 1."""
+    """One propose-verify round of Algorithm 1.
+
+    The target's verify forward (``tpp.extend`` with c = gamma+1) and
+    the gamma x M accept-ratio densities route through the configs'
+    kernel policies — with a Pallas policy the verify attention is the
+    ``spec_verify_attention`` multi-query kernel and the densities the
+    fused log-normal-mixture kernels."""
+    pol_t, pol_d = tpp.resolve_policy(cfg_t), tpp.resolve_policy(cfg_d)
     rng, r_draft, r_ver, r_new1, r_new2, r_new3 = jax.random.split(s.rng, 6)
     # --- draft ---
     cache_d, d_tau, d_k, d_t, d_mix, d_logits = draft_window(
@@ -196,8 +203,10 @@ def sd_round(cfg_t, cfg_d, params_t, params_d, gamma, s: SDState) -> SDState:
         tpp.type_logits(cfg_t, params_t, h_t))                # [g+1, K]
     mix_hist = jax.tree.map(lambda x: x[:gamma], mix_t_all)
     res = spec.verify_events(r_ver, d_tau, d_k,
-                             tpp.interval_logpdf(d_mix, d_tau), d_logits,
-                             mix_hist, logits_t_all[:gamma])
+                             tpp.interval_logpdf(d_mix, d_tau,
+                                                 policy=pol_d),
+                             d_logits, mix_hist, logits_t_all[:gamma],
+                             policy=pol_t)
     A, all_acc = res.num_accepted, res.all_accepted
     Ac = jnp.minimum(A, gamma - 1)
 

@@ -12,6 +12,8 @@ from dataclasses import dataclass
 METHODS = ("ar", "sd", "thinning")
 EXECUTIONS = ("host", "jit", "vmap", "sharded")
 DOMAINS = ("tpp", "token")
+KERNELS = ("auto", "pallas", "ref")
+KV_LAYOUTS = ("auto", "paged", "dense")
 
 
 class SpecError(ValueError):
@@ -58,9 +60,18 @@ class SamplerSpec:
     gamma: int = 10
     draft_policy: str = "fixed"
     domain: str = "tpp"
+    # kernel policy: "auto" = Pallas compiled on TPU; off-TPU the token
+    # domain runs Pallas in interpret mode while the TPP executors keep
+    # the reference (a vmapped interpret kernel serializes the lane
+    # batch). "pallas"/"ref" force a backend for every execution.
+    kernel: str = "auto"
     # token-domain knobs
     max_len: int = 256
     temperature: float = 1.0
+    # KV layout of the serving engine backing domain="token": "auto"
+    # resolves to the paged block-table pool whenever the families
+    # support it, falling back to the dense per-slot pool
+    kv_layout: str = "auto"
     # thinning-only knobs (App. D.1 adaptive bound)
     thinning_safety: float = 2.0
     thinning_grid: int = 8
@@ -80,6 +91,15 @@ class SamplerSpec:
         if self.domain not in DOMAINS:
             raise SpecError(f"unknown domain {self.domain!r}; "
                             f"expected one of {DOMAINS}")
+        if self.kernel not in KERNELS:
+            raise SpecError(f"unknown kernel {self.kernel!r}; "
+                            f"expected one of {KERNELS}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise SpecError(f"unknown kv_layout {self.kv_layout!r}; "
+                            f"expected one of {KV_LAYOUTS}")
+        if self.kv_layout != "auto" and self.domain != "token":
+            raise SpecError("kv_layout only applies to domain='token' "
+                            "(the TPP samplers have no KV pool)")
         if self.method == "thinning" and self.execution != "host":
             raise SpecError("method='thinning' is host-only (data-dependent "
                             "proposal counts cannot live in a fixed-shape "

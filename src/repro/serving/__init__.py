@@ -8,9 +8,11 @@ single target forward verifies gamma drafted tokens for every request
 in flight.
 """
 from .engine import ServingEngine
-from .kv_pool import KVCachePool, rollback_kind
+from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
+                      rollback_kind)
 from .request import EngineStats, ServeRequest, ServeResult
 from .scheduler import Scheduler, SlotState
 
 __all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
-           "Scheduler", "SlotState", "KVCachePool", "rollback_kind"]
+           "Scheduler", "SlotState", "KVCachePool", "PagedKVCachePool",
+           "paged_supported", "rollback_kind"]

@@ -37,8 +37,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import speculative as sdp
+from ..kernels.policy import KernelPolicy
 from ..models import registry
-from .kv_pool import KVCachePool, rollback_kind, rollback_one, select_slots
+from ..models import transformer as tfm
+from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
+                      rollback_kind, rollback_one, select_slots)
 from .request import EngineStats, ServeRequest, ServeResult, _as_key
 from .scheduler import Scheduler, SlotState
 
@@ -101,6 +104,53 @@ def _ar_round_fn(cfg_t):
     return _FN_CACHE[key]
 
 
+def _draft_tokens(gamma, r_d, temps, ingest, pending):
+    """Shared draft loop of one batched sd round — the SAME sampling ops
+    for the dense and the paged layout (``ingest(toks [S,1]) -> logits``
+    is the only difference: a vmapped dense extend or a paged one,
+    advancing its cache through the closure). Keeping the fold_in /
+    categorical sequence in ONE place is what upholds the paged==dense
+    token-bitwise guarantee. Returns (d_toks [S,g], d_logps [S,g,V])."""
+    logits = ingest(pending[:, None])
+    lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
+    d_toks, d_logps = [], []
+    for i in range(gamma):
+        ki = jax.vmap(lambda k: jax.random.fold_in(k, i))(r_d)
+        tok = jax.vmap(jax.random.categorical)(ki, lp_d)
+        d_toks.append(tok.astype(jnp.int32))
+        d_logps.append(lp_d)
+        logits = ingest(tok[:, None].astype(jnp.int32))
+        lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
+    return jnp.stack(d_toks, axis=1), jnp.stack(d_logps, axis=1)
+
+
+def _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps, lp_t_all):
+    """Shared accept/bonus/adjusted sampling of one batched sd round —
+    the SAME ops for the dense and the paged round, so the two layouts
+    consume identical random streams and commit identical tokens.
+
+    d_toks: [S, g]; d_logps: [S, g, V]; lp_t_all: [S, g+1, V].
+    Returns (A [S], extra [S])."""
+    u = jax.vmap(lambda k: jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(k, i)))(
+            jnp.arange(gamma)))(r_v)            # [S, g]
+    lp_t_tok = jnp.take_along_axis(
+        lp_t_all[:, :gamma], d_toks[..., None], -1)[..., 0]
+    lp_d_tok = jnp.take_along_axis(
+        d_logps, d_toks[..., None], -1)[..., 0]
+    acc = jnp.log(u) < (lp_t_tok - lp_d_tok)
+    A = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+    all_acc = A == gamma
+
+    bonus = jax.vmap(jax.random.categorical)(r_b, lp_t_all[:, gamma])
+    Ac = jnp.minimum(A, gamma - 1)
+    lp_t_A = jax.vmap(lambda l, a: l[a])(lp_t_all, A)
+    lp_d_A = jax.vmap(lambda l, a: l[a])(d_logps, Ac)
+    adj = jax.vmap(sdp.adjusted_discrete)(r_a, lp_t_A, lp_d_A)
+    extra = jnp.where(all_acc, bonus, adj).astype(jnp.int32)
+    return A, extra
+
+
 def _sd_round_fn(cfg_t, cfg_d, gamma: int):
     """One batched propose-verify round (static draft window ``gamma``).
 
@@ -122,20 +172,16 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
             len0_t, len0_d = pt_tree["len"], pd_tree["len"]
 
             # ---- draft gamma tokens (pending ingested first)
-            logits, pd2 = _pool_extend(model_d, params_d, pd_tree,
-                                       pending[:, None])
-            lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
-            d_toks, d_logps = [], []
-            for i in range(gamma):
-                ki = jax.vmap(lambda k: jax.random.fold_in(k, i))(r_d)
-                tok = jax.vmap(jax.random.categorical)(ki, lp_d)
-                d_toks.append(tok.astype(jnp.int32))
-                d_logps.append(lp_d)
-                logits, pd2 = _pool_extend(model_d, params_d, pd2,
-                                           tok[:, None].astype(jnp.int32))
-                lp_d = jax.nn.log_softmax(logits[:, -1] / temps[:, None], -1)
-            d_toks = jnp.stack(d_toks, axis=1)          # [S, g]
-            d_logps = jnp.stack(d_logps, axis=1)        # [S, g, V]
+            st = {"pd": pd_tree}
+
+            def ingest(toks):
+                logits, st["pd"] = _pool_extend(model_d, params_d,
+                                                st["pd"], toks)
+                return logits
+
+            d_toks, d_logps = _draft_tokens(gamma, r_d, temps, ingest,
+                                            pending)
+            pd2 = st["pd"]
 
             # ---- verify pending + drafts in ONE target forward (c=g+1)
             ver = jnp.concatenate([pending[:, None], d_toks], axis=1)
@@ -144,24 +190,8 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
                 lg_t / temps[:, None, None], axis=-1)   # [S, g+1, V]
 
             # ---- acceptance tests (same streams as the batch-1 path)
-            u = jax.vmap(lambda k: jax.vmap(
-                lambda i: jax.random.uniform(jax.random.fold_in(k, i)))(
-                    jnp.arange(gamma)))(r_v)            # [S, g]
-            lp_t_tok = jnp.take_along_axis(
-                lp_t_all[:, :gamma], d_toks[..., None], -1)[..., 0]
-            lp_d_tok = jnp.take_along_axis(
-                d_logps, d_toks[..., None], -1)[..., 0]
-            acc = jnp.log(u) < (lp_t_tok - lp_d_tok)
-            A = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
-            all_acc = A == gamma
-
-            # ---- bonus (all accepted) or adjusted (first rejection)
-            bonus = jax.vmap(jax.random.categorical)(r_b, lp_t_all[:, gamma])
-            Ac = jnp.minimum(A, gamma - 1)
-            lp_t_A = jax.vmap(lambda l, a: l[a])(lp_t_all, A)
-            lp_d_A = jax.vmap(lambda l, a: l[a])(d_logps, Ac)
-            adj = jax.vmap(sdp.adjusted_discrete)(r_a, lp_t_A, lp_d_A)
-            extra = jnp.where(all_acc, bonus, adj).astype(jnp.int32)
+            A, extra = _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps,
+                                   lp_t_all)
 
             # ---- rollback to committed prefix (mask families, in-jit)
             if kind_t == "replay":
@@ -182,6 +212,74 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
     return _FN_CACHE[key]
 
 
+def _sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy: KernelPolicy,
+                       max_kv: int):
+    """One batched propose-verify round over PAGED pools.
+
+    Identical random streams and sampling ops as ``_sd_round_fn`` — the
+    layouts differ only in how KV is stored and scored (block-table
+    pages + the spec-verify attention kernel instead of a vmapped dense
+    extend). No in-jit rollback: commit/rollback is the host's
+    block-table truncation after the round.
+    """
+    key = ("sd_round_paged", cfg_t, cfg_d, gamma, policy, max_kv)
+    if key not in _FN_CACHE:
+
+        def fn(params_t, params_d, pg_t, pg_d, bt_t, lens_t, bt_d, lens_d,
+               pending, keys, ridx, temps):
+            ks = jax.vmap(lambda k, r: jax.random.split(
+                jax.random.fold_in(k, r), 4))(keys, ridx)
+            r_d, r_v, r_a, r_b = ks[:, 0], ks[:, 1], ks[:, 2], ks[:, 3]
+
+            # ---- draft gamma tokens (pending ingested first)
+            st = {"pg": pg_d, "len": lens_d}
+
+            def ingest(toks):
+                logits, st["pg"] = tfm.extend_paged(
+                    cfg_d, params_d, st["pg"], bt_d, st["len"], toks,
+                    policy=policy, max_kv=max_kv)
+                st["len"] = st["len"] + toks.shape[1]
+                return logits
+
+            d_toks, d_logps = _draft_tokens(gamma, r_d, temps, ingest,
+                                            pending)
+            pg_d = st["pg"]
+
+            # ---- verify pending + drafts: ONE c=g+1 paged forward whose
+            # attention is a single spec-verify kernel pass per layer
+            ver = jnp.concatenate([pending[:, None], d_toks], axis=1)
+            lg_t, pg_t = tfm.extend_paged(
+                cfg_t, params_t, pg_t, bt_t, lens_t, ver, policy=policy,
+                max_kv=max_kv)
+            lp_t_all = jax.nn.log_softmax(
+                lg_t / temps[:, None, None], axis=-1)   # [S, g+1, V]
+
+            A, extra = _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps,
+                                   lp_t_all)
+            return pg_t, pg_d, d_toks, A, extra
+
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+def _ar_round_paged_fn(cfg_t, policy: KernelPolicy, max_kv: int):
+    """Batched paged decode: ingest pending, sample the next token."""
+    key = ("ar_round_paged", cfg_t, policy, max_kv)
+    if key not in _FN_CACHE:
+
+        def fn(params_t, pg_t, bt_t, lens_t, pending, keys, ridx, temps):
+            logits, pg_t = tfm.extend_paged(
+                cfg_t, params_t, pg_t, bt_t, lens_t, pending[:, None],
+                policy=policy, max_kv=max_kv)
+            lp = jax.nn.log_softmax(logits[:, -1] / temps[:, None], axis=-1)
+            rks = jax.vmap(jax.random.fold_in)(keys, ridx)
+            tok = jax.vmap(jax.random.categorical)(rks, lp).astype(jnp.int32)
+            return pg_t, tok
+
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
 class ServingEngine:
     """Request-queue serving over the model zoo (method "sd" or "ar").
 
@@ -197,7 +295,19 @@ class ServingEngine:
 
     def __init__(self, cfg_t, params_t, cfg_d=None, params_d=None, *,
                  method: str = "sd", max_batch: int = 4, max_len: int = 256,
-                 gamma: int = 4, draft_policy: str = "fixed", mesh=None):
+                 gamma: int = 4, draft_policy: str = "fixed", mesh=None,
+                 kv_layout: str = "auto", kernel="auto",
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
+        """``kv_layout``: "paged" (block-table pool + spec-verify Pallas
+        attention — the production hot path), "dense" (per-slot dense
+        caches + vmapped extend), or "auto" (paged whenever the families
+        support it: transformer mask families, no sliding window, no
+        mesh). ``kernel``: a ``KernelPolicy`` or one of
+        "auto"|"pallas"|"ref" — "auto" runs Pallas, compiled on TPU and
+        ``interpret=True`` elsewhere. ``page_size``/``n_pages`` size the
+        paged pool (n_pages=None fully provisions max_batch x max_len;
+        smaller values admit under memory pressure by deferring)."""
         if method not in ("ar", "sd"):
             raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
         if method == "sd" and (cfg_d is None or params_d is None):
@@ -207,6 +317,32 @@ class ServingEngine:
         self.cfg_d, self.params_d = cfg_d, params_d
         self.method = method
         self.max_batch, self.max_len = max_batch, max_len
+        pol = kernel if isinstance(kernel, KernelPolicy) \
+            else KernelPolicy(backend=kernel)
+        self.policy = pol.resolve(default_backend="pallas")
+        if page_size is not None:
+            self.policy = self.policy.replace(page_size=page_size)
+        self.n_pages = n_pages
+        paged_ok = (mesh is None and paged_supported(cfg_t)
+                    and (method == "ar" or paged_supported(cfg_d)))
+        if kv_layout == "auto":
+            kv_layout = "paged" if paged_ok else "dense"
+        elif kv_layout == "paged" and not paged_ok:
+            raise ValueError(
+                "kv_layout='paged' needs transformer mask families with "
+                "no sliding window and no mesh (replay/encdec/ring "
+                "families roll back by other means)")
+        elif kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        self.kv_layout = kv_layout
+        explicit_pallas = (kernel.backend if isinstance(kernel, KernelPolicy)
+                           else kernel) == "pallas"
+        if explicit_pallas and self.kv_layout == "dense":
+            import warnings
+            warnings.warn(
+                "kernel='pallas' only accelerates the paged rounds today; "
+                "the dense layout keeps the families' reference extend "
+                "path", UserWarning, stacklevel=2)
         self.mesh, self.rules = mesh, None
         if mesh is not None:
             from ..launch.mesh import serving_rules_for
@@ -223,14 +359,19 @@ class ServingEngine:
         self.pool_d = self._make_pool(cfg_d) if method == "sd" else None
         if method == "sd":
             from ..sampling.policies import resolve_policy_by_name
-            self.policy = resolve_policy_by_name(draft_policy, gamma)
-            self._policy_state = self.policy.init_state()
+            self.draft_policy = resolve_policy_by_name(draft_policy, gamma)
+            self._policy_state = self.draft_policy.init_state()
         else:
-            self.policy = None
+            self.draft_policy = None
         self._stats = EngineStats()
         self._results: List[ServeResult] = []
 
-    def _make_pool(self, cfg) -> KVCachePool:
+    def _make_pool(self, cfg):
+        if self.kv_layout == "paged":
+            return PagedKVCachePool(self.max_batch, cfg,
+                                    page_size=self.policy.page_size,
+                                    max_len=self.max_len,
+                                    n_pages=self.n_pages)
         if self.rules is None:
             return KVCachePool(self.max_batch)
         return KVCachePool(self.max_batch, rules=self.rules,
@@ -250,8 +391,11 @@ class ServingEngine:
             raise RuntimeError("reset() with requests still queued/active; "
                                "pass force=True to discard them")
         self.scheduler = Scheduler(self.max_batch, self.max_len)
-        if self.policy is not None:
-            self._policy_state = self.policy.init_state()
+        self.pool_t.reset()
+        if self.pool_d is not None:
+            self.pool_d.reset()
+        if self.draft_policy is not None:
+            self._policy_state = self.draft_policy.init_state()
         self._stats = EngineStats()
         self._results = []
 
@@ -269,8 +413,14 @@ class ServingEngine:
         """One scheduler round; returns requests completed this round."""
         t0 = time.perf_counter()
         done: List[ServeResult] = []
+        blocked = False
         for slot, state in self.scheduler.admit():
-            self._admit(slot, state)
+            if blocked:
+                # strict FIFO under page pressure: once one admission
+                # defers, younger placements wait behind it
+                self.scheduler.defer(slot)
+                continue
+            blocked = not self._admit(slot, state)
         # requests whose whole budget was the prefill token
         alive: List[Tuple[int, SlotState]] = []
         for slot, state in self.scheduler.active():
@@ -280,9 +430,11 @@ class ServingEngine:
                 alive.append((slot, state))
         if alive:
             if self.method == "sd":
-                self._sd_step(alive)
+                (self._sd_step_paged if self.kv_layout == "paged"
+                 else self._sd_step)(alive)
             else:
-                self._ar_step(alive)
+                (self._ar_step_paged if self.kv_layout == "paged"
+                 else self._ar_step)(alive)
             for slot, state in alive:
                 if state.done:
                     done.append(self._retire(slot))
@@ -305,20 +457,52 @@ class ServingEngine:
         return self._stats
 
     # -- internals ---------------------------------------------------------
-    def _admit(self, slot: int, state: SlotState) -> None:
+    def _admit(self, slot: int, state: SlotState) -> bool:
+        """Back the slot with cache memory and prefill it. Returns False
+        when a paged pool cannot back the request yet (deferred — no
+        prefill wasted: the lifetime need is known from the request)."""
         req = state.request
+        if self.kv_layout == "paged":
+            # admission under memory pressure: reserve the request's
+            # WHOLE lifetime (prefix + prompt + budget) up front, so
+            # per-round growth of admitted slots can never exhaust the
+            # free list; defer when the reservation does not fit now
+            prefix = 0
+            if req.extra and req.extra.get("vision_embeds") is not None:
+                prefix = int(req.extra["vision_embeds"].shape[1])
+            total = prefix + req.prompt_len + req.max_new_tokens
+            ok = self.pool_t.can_admit(total)
+            if ok and self.method == "sd":
+                ok = self.pool_d.can_admit(total)
+            if not ok:
+                self.scheduler.defer(slot)
+                if not any(self.scheduler.active()):
+                    raise RuntimeError(
+                        "paged KV pool cannot hold a single request "
+                        f"(need {total} positions); raise n_pages")
+                return False
+            self.pool_t.reserve(slot, total)
+            if self.method == "sd":
+                self.pool_d.reserve(slot, total)
         batch = {"tokens": req.prompt[None, :]}
         if req.extra:
             batch.update(req.extra)
         logits, cache_t = _prefill_fn(self.cfg_t, self.max_len)(
             self.params_t, batch)
-        self.pool_t.ensure(cache_t)
-        self.pool_t.write(slot, cache_t)
+        cache_d = None
         if self.method == "sd":
             _, cache_d = _prefill_fn(self.cfg_d, self.max_len)(
                 self.params_d, batch)
-            self.pool_d.ensure(cache_d)
-            self.pool_d.write(slot, cache_d)
+        if self.kv_layout == "paged":
+            self.pool_t.write_prefill(slot, cache_t)
+            if cache_d is not None:
+                self.pool_d.write_prefill(slot, cache_d)
+        else:
+            self.pool_t.ensure(cache_t)
+            self.pool_t.write(slot, cache_t)
+            if cache_d is not None:
+                self.pool_d.ensure(cache_d)
+                self.pool_d.write(slot, cache_d)
         lp = jax.nn.log_softmax(logits[0, -1] / req.temperature)
         tok0 = int(jax.random.categorical(
             jax.random.fold_in(req.rng, 0), lp))
@@ -326,6 +510,7 @@ class ServingEngine:
         state.pending = tok0
         self._stats.prefills += 1
         self._stats.tokens += 1
+        return True
 
     def _round_inputs(self, alive):
         S = self.max_batch
@@ -358,18 +543,40 @@ class ServingEngine:
         — and (b) a non-ring KV buffer's capacity: the models' slot
         indexing wraps modulo the buffer, so writing beyond it would
         silently overwrite the prompt's entries."""
-        gamma = self.policy.gamma(self._policy_state)
+        gamma = self.draft_policy.gamma(self._policy_state)
         max_remaining = max(st.request.max_new_tokens - len(st.out)
                             for _, st in alive)
         gamma = min(gamma, max(1, max_remaining - 1))
         for cfg, pool in ((self.cfg_t, self.pool_t),
                           (self.cfg_d, self.pool_d)):
-            if (rollback_kind(cfg) != "replay"
+            if self.kv_layout == "paged":
+                # same bound as the dense pos buffer (capacity == the
+                # dense max_len), so both layouts pick identical windows
+                smax = pool.capacity
+                head = smax - 1 - max(int(pool.lens[s]) for s, _ in alive)
+                gamma = min(gamma, max(1, head))
+            elif (rollback_kind(cfg) != "replay"
                     and cfg.sliding_window == 0 and "pos" in pool.tree):
                 smax = pool.tree["pos"].shape[-1]
                 lens = np.asarray(pool.lens)
                 head = smax - 1 - max(int(lens[s]) for s, _ in alive)
                 gamma = min(gamma, max(1, head))
+        if self.kv_layout == "paged":
+            # under page pressure the BATCH window (max over alive
+            # budgets) can transiently over-ask a short-budget slot's
+            # lifetime reservation; shrink it to what the free list can
+            # back. Admission reservations guarantee gamma=1 always
+            # fits, so this terminates with progress — it only ever
+            # fires on under-provisioned pools with mixed budgets
+            def short(pool, g):
+                need = sum(
+                    pool._blocks_for(min(int(pool.lens[s]) + 1 + g,
+                                         pool.capacity))
+                    - int(pool.n_blocks[s]) for s, _ in alive)
+                return need > len(pool.free)
+            while gamma > 1 and (short(self.pool_t, gamma) or
+                                 short(self.pool_d, gamma)):
+                gamma -= 1
         return gamma
 
     def _sd_step(self, alive) -> None:
@@ -409,7 +616,7 @@ class ServingEngine:
         # window when EVERY slot fully accepts, collapsing gamma under
         # real mixed traffic
         for slot, _ in alive:
-            self._policy_state = self.policy.update(
+            self._policy_state = self.draft_policy.update(
                 self._policy_state, gamma, int(A[slot]))
         self._stats.tokens += delivered
         self._stats.drafted += gamma * n_active
@@ -421,6 +628,77 @@ class ServingEngine:
         # host loops' `drafted` counter in sampling/loops.py, so for a
         # single-slot engine draft_forwards == drafted exactly)
         self._stats.draft_forwards += gamma
+
+    def _sd_step_paged(self, alive) -> None:
+        """One paged propose-verify round: grow block tables for the
+        window's writes, run the jitted paged round (spec-verify kernel
+        attention), then commit/rollback by block-table truncation —
+        no cache rewrite in either direction."""
+        gamma = self._clamped_gamma(alive)
+        len0_t, len0_d = {}, {}
+        for slot, _ in alive:
+            len0_t[slot] = int(self.pool_t.lens[slot])
+            len0_d[slot] = int(self.pool_d.lens[slot])
+            self.pool_t.ensure_blocks(slot, len0_t[slot] + gamma + 1)
+            self.pool_d.ensure_blocks(slot, len0_d[slot] + gamma + 1)
+        pending, keys, ridx, temps, _ = self._round_inputs(alive)
+        fn = _sd_round_paged_fn(self.cfg_t, self.cfg_d, gamma, self.policy,
+                                self.max_len)
+        pg_t, pg_d, d_toks, A, extra = fn(
+            self.params_t, self.params_d, self.pool_t.pages,
+            self.pool_d.pages, self.pool_t.device_tables(),
+            self.pool_t.device_lens(), self.pool_d.device_tables(),
+            self.pool_d.device_lens(), pending, keys, ridx, temps)
+        self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
+        d_toks, A, extra = (np.asarray(d_toks), np.asarray(A),
+                            np.asarray(extra))
+        delivered = 0
+        for slot, st in alive:
+            a = int(A[slot])
+            before = len(st.out)
+            st.out.extend([int(t) for t in d_toks[slot, :a]]
+                          + [int(extra[slot])])
+            st.pending = int(extra[slot])
+            st.round_idx += 1
+            st.drafted += gamma
+            st.accepted += a
+            st.rounds += 1
+            if len(st.out) > st.request.max_new_tokens:
+                del st.out[st.request.max_new_tokens:]
+            delivered += len(st.out) - before
+            # rollback == truncation: surplus pages return to the free
+            # list; the stale K/V past the committed length is causally
+            # invisible until the next round overwrites it
+            self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
+            self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
+        for slot, _ in alive:
+            self._policy_state = self.draft_policy.update(
+                self._policy_state, gamma, int(A[slot]))
+        self._stats.tokens += delivered
+        self._stats.drafted += gamma * len(alive)
+        self._stats.accepted += int(sum(int(A[s]) for s, _ in alive))
+        self._stats.target_forwards += 1
+        self._stats.draft_forwards += gamma
+
+    def _ar_step_paged(self, alive) -> None:
+        for slot, _ in alive:
+            self.pool_t.ensure_blocks(slot, int(self.pool_t.lens[slot]) + 1)
+        pending, keys, ridx, temps, _ = self._round_inputs(alive)
+        fn = _ar_round_paged_fn(self.cfg_t, self.policy, self.max_len)
+        pg_t, tok = fn(self.params_t, self.pool_t.pages,
+                       self.pool_t.device_tables(),
+                       self.pool_t.device_lens(), pending, keys, ridx,
+                       temps)
+        self.pool_t.pages = pg_t
+        tok = np.asarray(tok)
+        for slot, st in alive:
+            self.pool_t.truncate(slot, int(self.pool_t.lens[slot]) + 1)
+            st.out.append(int(tok[slot]))
+            st.pending = int(tok[slot])
+            st.round_idx += 1
+            st.rounds += 1
+        self._stats.tokens += len(alive)
+        self._stats.target_forwards += 1
 
     def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
         """Final pool for this round. Mask families were rolled back
@@ -458,6 +736,12 @@ class ServingEngine:
 
     def _retire(self, slot: int) -> ServeResult:
         st = self.scheduler.retire(slot)
+        if self.kv_layout == "paged":
+            # finish returns the slot's pages to the free list; the next
+            # occupant allocates its own
+            self.pool_t.free_slot(slot)
+            if self.pool_d is not None:
+                self.pool_d.free_slot(slot)
         self._stats.requests_completed += 1
         return ServeResult(
             request_id=st.request.request_id,

@@ -20,10 +20,11 @@ Rollback after a speculative round is family-dependent, mirroring
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models import transformer as tfm
 
@@ -37,6 +38,14 @@ def rollback_kind(cfg) -> str:
     if cfg.family == "encdec":
         return "encdec"
     return "replay"
+
+
+def paged_supported(cfg) -> bool:
+    """Paged KV needs the transformer mask families with a non-ring
+    cache: slot == position is what makes rollback a pure block-table
+    truncation. Ring buffers (sliding windows), recurrent replay
+    families and the enc-dec cross caches stay on the dense pool."""
+    return rollback_kind(cfg) == "mask" and cfg.sliding_window == 0
 
 
 def rollback_one(cfg, cache, new_len):
@@ -134,3 +143,149 @@ class KVCachePool:
     def lens(self) -> jnp.ndarray:
         """Per-slot valid lengths ([n_slots] int32)."""
         return self.tree["len"]
+
+    def reset(self) -> None:
+        """Nothing to do: slot contents are stale after an engine reset
+        and admission overwrites a slot's cache before it is read."""
+
+
+class PagedKVCachePool:
+    """Block-table paged KV pool (transformer mask families).
+
+    Physical pages ``pages = {"k","v"} [L, P, page, KV, Dh]`` are shared
+    by every slot; each slot owns an ordered list of pages (its block
+    table) covering positions ``0..len-1``. Page 0 is a reserved null
+    page: free slots' tables point at it, so the batched round's writes
+    for idle lanes land in sacrificial memory and no ``select_slots``
+    restore pass is needed.
+
+    Allocation is by actual lengths — admit takes ceil(len/page) pages,
+    every round grows tables just enough for its gamma+1 writes, finish
+    returns everything — so total page memory can be provisioned below
+    ``n_slots * max_len`` (``n_pages=``); admission defers when the pool
+    is momentarily out of pages. Rollback after a rejected window is a
+    block-table truncation: lengths shrink, surplus pages return to the
+    free list, and the stale K/V left behind is causally invisible
+    (logical position > any live query) until overwritten.
+
+    Host-side state (tables, lengths, free list) is numpy; only the page
+    arrays live on device.
+    """
+
+    def __init__(self, n_slots: int, cfg, *, page_size: int = 16,
+                 max_len: int = 256, n_pages: Optional[int] = None):
+        if not paged_supported(cfg):
+            raise ValueError(f"family {cfg.family!r} (window="
+                             f"{cfg.sliding_window}) cannot use the paged "
+                             "pool")
+        self.n_slots = n_slots
+        self.cfg = cfg
+        self.page = page_size
+        self.capacity = max_len                 # logical positions per slot
+        self.blocks_per_slot = -(-max_len // page_size)
+        if n_pages is None:
+            n_pages = n_slots * self.blocks_per_slot + 1
+        if n_pages < self.blocks_per_slot + 1:
+            raise ValueError("n_pages must cover at least one full slot")
+        self.n_pages = n_pages
+        self.pages = tfm.init_kv_pages(cfg, n_pages, page_size)
+        self.tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        self.lens = np.zeros((n_slots,), np.int32)
+        self.n_blocks = np.zeros((n_slots,), np.int32)
+        # lifetime reservation per slot (blocks), set at admission
+        self.reserved = np.zeros((n_slots,), np.int32)
+        self.free: List[int] = list(range(n_pages - 1, 0, -1))  # 0 = null
+
+    # -- host bookkeeping --------------------------------------------------
+    def _blocks_for(self, length: int) -> int:
+        return -(-max(length, 0) // self.page)
+
+    def _shortfall(self) -> int:
+        """Blocks the admitted slots may still claim against their
+        reservations."""
+        return int(np.maximum(self.reserved - self.n_blocks, 0).sum())
+
+    def can_admit(self, total_len: int) -> bool:
+        """Admission check against the request's WHOLE lifetime need
+        (prompt + budget, clamped to capacity), on top of every
+        already-admitted slot's outstanding reservation. Conservative on
+        purpose: once admitted under a reservation, a gamma=1 round's
+        growth always fits (the engine shrinks larger batch windows to
+        the free list), so an under-provisioned pool admits fewer
+        concurrent requests instead of deadlocking mid-stream."""
+        need = self._blocks_for(min(total_len, self.capacity))
+        return len(self.free) >= self._shortfall() + need
+
+    def reserve(self, slot: int, total_len: int) -> None:
+        self.reserved[slot] = self._blocks_for(min(total_len,
+                                                   self.capacity))
+
+    def ensure_blocks(self, slot: int, new_len: int) -> None:
+        """Grow the slot's table to cover ``new_len`` positions."""
+        need = self._blocks_for(min(new_len, self.capacity))
+        have = int(self.n_blocks[slot])
+        if need <= have:
+            return
+        if len(self.free) < need - have:
+            raise RuntimeError(
+                f"paged KV pool out of pages ({len(self.free)} free, "
+                f"{need - have} needed); raise n_pages or lower max_batch")
+        for b in range(have, need):
+            self.tables[slot, b] = self.free.pop()
+        self.n_blocks[slot] = need
+
+    def truncate(self, slot: int, new_len: int) -> None:
+        """Rollback/commit: set the committed length, free surplus pages
+        (no K/V rewrite — this is the whole point of paging)."""
+        keep = self._blocks_for(new_len)
+        for b in range(keep, int(self.n_blocks[slot])):
+            self.free.append(int(self.tables[slot, b]))
+            self.tables[slot, b] = 0
+        self.n_blocks[slot] = keep
+        self.lens[slot] = new_len
+
+    def free_slot(self, slot: int) -> None:
+        self.truncate(slot, 0)
+        self.reserved[slot] = 0
+
+    def reset(self) -> None:
+        """Return every page; keep the allocated page arrays (stale
+        contents are overwritten before being readable)."""
+        for s in range(self.n_slots):
+            self.free_slot(s)
+
+    # -- device views ------------------------------------------------------
+    def device_tables(self) -> jnp.ndarray:
+        return jnp.asarray(self.tables)
+
+    def device_lens(self) -> jnp.ndarray:
+        return jnp.asarray(self.lens)
+
+    # -- admission ---------------------------------------------------------
+    def write_prefill(self, slot: int, cache) -> None:
+        """Scatter a dense batch-1 prefilled cache into freshly allocated
+        pages (admission reuses the families' existing prefill)."""
+        length = min(int(cache["len"]), self.capacity)
+        self.ensure_blocks(slot, length)
+        nb = self._blocks_for(length)
+        if nb == 0:
+            self.lens[slot] = 0
+            return
+        k = cache["k"][:, 0]                       # [L, max_len, KV, Dh]
+        v = cache["v"][:, 0]
+        pad = nb * self.page - k.shape[1]
+        if pad > 0:
+            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, widths)
+            v = jnp.pad(v, widths)
+        L, _, KV, Dh = k.shape
+        ids = jnp.asarray(self.tables[slot, :nb])
+        kb = k[:, :nb * self.page].reshape(L, nb, self.page, KV, Dh)
+        vb = v[:, :nb * self.page].reshape(L, nb, self.page, KV, Dh)
+        self.pages = {
+            "k": self.pages["k"].at[:, ids].set(kb.astype(
+                self.pages["k"].dtype)),
+            "v": self.pages["v"].at[:, ids].set(vb.astype(
+                self.pages["v"].dtype)),
+        }
+        self.lens[slot] = length

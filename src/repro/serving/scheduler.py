@@ -51,6 +51,10 @@ class Scheduler:
         self.max_batch = max_batch
         self.max_len = max_len
         self.queue: Deque[ServeRequest] = deque()
+        # admissions the engine undid (e.g. no KV pages free yet); they
+        # are older than anything in ``queue`` and re-admit first, in
+        # their original order
+        self.deferred: Deque[ServeRequest] = deque()
         self.slots: List[Optional[SlotState]] = [None] * max_batch
 
     # -- queue side --------------------------------------------------------
@@ -66,19 +70,23 @@ class Scheduler:
 
     @property
     def pending_count(self) -> int:
-        return len(self.queue)
+        return len(self.queue) + len(self.deferred)
 
     # -- slot side ---------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def admit(self) -> List[Tuple[int, SlotState]]:
-        """Fill free slots from the queue head (strict FIFO)."""
+        """Fill free slots — deferred re-admissions first, then the
+        queue head (strict FIFO across both)."""
         placed = []
         for i in self.free_slots():
-            if not self.queue:
+            if self.deferred:
+                req = self.deferred.popleft()
+            elif self.queue:
+                req = self.queue.popleft()
+            else:
                 break
-            req = self.queue.popleft()
             self.slots[i] = SlotState(request=req, slot=i)
             placed.append((i, self.slots[i]))
         return placed
@@ -93,5 +101,15 @@ class Scheduler:
         self.slots[slot] = None
         return state
 
+    def defer(self, slot: int) -> None:
+        """Undo an admission: the engine could not back the slot with
+        resources (e.g. the paged KV pool is momentarily out of pages).
+        The request joins the deferred list — ahead of the queue and in
+        original order even when several admissions defer in one step —
+        and retries when pages free up."""
+        state = self.retire(slot)
+        self.deferred.append(state.request)
+
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return (bool(self.queue) or bool(self.deferred)
+                or any(s is not None for s in self.slots))

@@ -1,0 +1,151 @@
+"""KernelPolicy threading: the TPP sd/ar samplers must produce the SAME
+event streams whether the hot path runs the Pallas kernels (spec-verify
+attention + fused mixture densities, interpret on CPU) or the jnp
+references — lengths/types bitwise, times to kernel tolerance — across
+the host/jit/vmap executors. Plus policy resolution rules and the
+thinning hazard routed through the fused log-survival kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TPPConfig
+from repro.kernels.policy import KernelPolicy
+from repro.models import tpp
+from repro.sampling import SamplerSpec, build_sampler
+
+RNG = jax.random.PRNGKey(0)
+TIME_TOL = 2e-5      # kernel numerics tolerance (same as sharded tests)
+
+
+def _tiny_pair(K=3):
+    cfg_t = TPPConfig(encoder="thp", num_layers=2, num_heads=2, d_model=16,
+                      d_ff=32, num_marks=K, num_mix=4)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+# ---------------------------------------------------------------------------
+# resolution rules
+# ---------------------------------------------------------------------------
+
+def test_policy_resolution_rules():
+    auto = KernelPolicy()
+    assert auto.backend == "auto" and auto.interpret is None
+    ser = auto.resolve(default_backend="pallas")
+    assert ser.backend in ("pallas", "ref") and ser.interpret is not None
+    if jax.default_backend() != "tpu":
+        assert ser.backend == "pallas" and ser.interpret      # serving auto
+        assert tpp.resolve_policy(
+            TPPConfig()).backend == "ref"                     # TPP auto
+    forced = KernelPolicy(backend="pallas", interpret=False)
+    assert forced.resolve().interpret is False
+    # resolve() is idempotent; resolved policies hash into jit caches
+    assert ser.resolve() == ser
+    hash(ser)
+    with pytest.raises(ValueError, match="backend"):
+        KernelPolicy(backend="cuda")
+
+
+def test_spec_validates_kernel_knobs():
+    from repro.sampling.spec import SpecError
+    with pytest.raises(SpecError, match="kernel"):
+        SamplerSpec(kernel="fast").validate()
+    with pytest.raises(SpecError, match="kv_layout"):
+        SamplerSpec(kv_layout="ragged").validate()
+    with pytest.raises(SpecError, match="token"):
+        SamplerSpec(kv_layout="paged").validate()
+
+
+# ---------------------------------------------------------------------------
+# sd pallas == ref across executors (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["sd", "ar"])
+@pytest.mark.parametrize("execution", ["host", "jit", "vmap"])
+def test_tpp_pallas_stream_matches_ref(method, execution):
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    batch = 3 if execution == "vmap" else 1
+    base = SamplerSpec(method=method, execution=execution, t_end=2.5,
+                       gamma=3, max_events=32, batch=batch)
+    args = (cfg_t, pt) + ((cfg_d, pd) if method == "sd" else ())
+    br = build_sampler(base.replace(kernel="ref"), *args)(
+        jax.random.PRNGKey(11))
+    bp = build_sampler(base.replace(kernel="pallas"), *args)(
+        jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.array(br.lengths), np.array(bp.lengths))
+    for b in range(batch):
+        n = int(br.lengths[b])
+        np.testing.assert_array_equal(np.array(br.types[b, :n]),
+                                      np.array(bp.types[b, :n]))
+        np.testing.assert_allclose(np.array(br.times[b, :n]),
+                                   np.array(bp.times[b, :n]),
+                                   atol=TIME_TOL, rtol=TIME_TOL)
+
+
+def test_tpp_pallas_host_jit_identical():
+    """With the SAME (pallas) policy, host and jit stay stream-equal —
+    the policy rides the configs, not the executor. Types are bitwise;
+    times agree to kernel tolerance (XLA fuses the interpret-mode kernel
+    ops differently inside the device loop's while_loop)."""
+    cfg_t, cfg_d, pt, pd = _tiny_pair()
+    base = SamplerSpec(method="sd", t_end=2.0, gamma=3, max_events=32,
+                       kernel="pallas")
+    rh = build_sampler(base.replace(execution="host"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
+    rj = build_sampler(base.replace(execution="jit"),
+                       cfg_t, pt, cfg_d, pd)(jax.random.PRNGKey(6))
+    n = int(rh.lengths[0])
+    assert n == int(rj.lengths[0])
+    np.testing.assert_array_equal(np.array(rh.types[0, :n]),
+                                  np.array(rj.types[0, :n]))
+    np.testing.assert_allclose(np.array(rh.times[0, :n]),
+                               np.array(rj.times[0, :n]),
+                               atol=TIME_TOL, rtol=TIME_TOL)
+
+
+def test_attnhp_keeps_reference_attention():
+    """The AttNHP +1-denominator attention has no kernel form; a pallas
+    policy must still sample correctly through the reference."""
+    cfg_t = TPPConfig(encoder="attnhp", num_layers=1, num_heads=2,
+                      d_model=16, d_ff=32, num_marks=2, num_mix=4,
+                      kernel_policy=KernelPolicy(backend="pallas"))
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    res = build_sampler(SamplerSpec(method="ar", execution="jit", t_end=2.0,
+                                    max_events=16),
+                        cfg_t, pt)(jax.random.PRNGKey(2))
+    assert int(res.lengths[0]) >= 0
+    t = np.array(res.times[0, :int(res.lengths[0])])
+    assert np.all(np.diff(t) > 0) or len(t) < 2
+
+
+# ---------------------------------------------------------------------------
+# thinning bound through the fused log-survival kernel
+# ---------------------------------------------------------------------------
+
+def test_thinning_hazard_pallas_matches_ref():
+    cfg = TPPConfig(encoder="thp", num_layers=1, num_heads=2, d_model=16,
+                    d_ff=32, num_marks=2, num_mix=4)
+    p = tpp.init_params(cfg, RNG)
+    h = jax.random.normal(jax.random.PRNGKey(4), (cfg.d_model,))
+    taus = jnp.linspace(1e-3, 2.0, 8)
+    from repro.core.cif_thinning import _hazard
+    ref_h = _hazard(cfg, p, h, taus)
+    cfgp = cfg.replace(kernel_policy=KernelPolicy(backend="pallas"))
+    pal_h = _hazard(cfgp, p, h, taus)
+    assert bool(jnp.isfinite(pal_h).all())
+    np.testing.assert_allclose(np.asarray(pal_h), np.asarray(ref_h),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_thinning_sampler_runs_with_pallas_policy():
+    cfg = TPPConfig(encoder="thp", num_layers=1, num_heads=2, d_model=16,
+                    d_ff=32, num_marks=2, num_mix=4,
+                    kernel_policy=KernelPolicy(backend="pallas"))
+    p = tpp.init_params(cfg, RNG)
+    fn = build_sampler(SamplerSpec(method="thinning", execution="host",
+                                   t_end=2.0, max_events=16), cfg, p)
+    batch = fn(jax.random.PRNGKey(5))
+    assert int(batch.lengths[0]) >= 0

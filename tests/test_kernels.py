@@ -1,14 +1,21 @@
 """Per-kernel validation: Pallas (interpret=True) against the pure-jnp
 ref.py oracles, swept over shapes and dtypes."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lognorm_mix import lognorm_mix_logpdf_pallas
+from repro.kernels.lognorm_mix import (lognorm_mix_logpdf_pallas,
+                                       lognorm_mix_logsf_pallas)
+from repro.kernels.policy import KernelPolicy, validate_block_size
+from repro.kernels.spec_verify_attention import (
+    spec_verify_attention_pallas, spec_verify_attention_ref,
+    spec_verify_attention_seq_pallas)
 
 RNG = jax.random.PRNGKey(0)
 
@@ -82,6 +89,152 @@ def test_lognorm_mix_pallas_vs_oracle(N, M, dtype):
     want = ref.lognorm_mix_logpdf_ref(tau, log_w, mu, sigma)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5,
                                rtol=1e-5)
+
+
+# ---- spec-verify attention (paged, gamma+1 queries) ----
+
+def _paged_inputs(S, C, H, KV, Dh, page, NB, dtype=jnp.float32, seed=0):
+    """Random pages + SCATTERED per-slot block tables + mixed lengths."""
+    ks = jax.random.split(jax.random.fold_in(RNG, seed), 3)
+    P = S * NB + 1
+    q = jax.random.normal(ks[0], (S, C, H, Dh), dtype)
+    k_pages = jax.random.normal(ks[1], (P, page, KV, Dh), dtype)
+    v_pages = jax.random.normal(ks[2], (P, page, KV, Dh), dtype)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, P))
+    bt = jnp.asarray(perm[:S * NB].reshape(S, NB), jnp.int32)
+    lens = jnp.asarray(
+        np.linspace(1, NB * page - C, S).astype(np.int32))
+    return q, k_pages, v_pages, bt, lens
+
+
+@pytest.mark.parametrize("shape", [
+    # (S, C, H, KV, Dh, page, NB): GQA grids, gamma in {2, 4, 8}
+    (2, 3, 4, 2, 16, 8, 4),
+    (3, 5, 8, 2, 32, 16, 3),
+    (1, 9, 4, 4, 64, 8, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (24, 0.0), (0, 20.0)])
+def test_spec_verify_pallas_vs_flash_ref(shape, dtype, window, softcap):
+    """Kernel parity against ``ref.flash_attention_ref`` on the dense
+    gather of the same pages (and against the paged oracle)."""
+    S, C, H, KV, Dh, page, NB = shape
+    q, kp, vp, bt, lens = _paged_inputs(S, C, H, KV, Dh, page, NB, dtype)
+    out = spec_verify_attention_pallas(q, kp, vp, bt, lens, window=window,
+                                       softcap=softcap, interpret=True)
+    # dense gather of each slot's pages == the logical cache
+    k = kp[bt].reshape(S, NB * page, KV, Dh)
+    v = vp[bt].reshape(S, NB * page, KV, Dh)
+    q_pos = lens[:, None] + jnp.arange(C)
+    kv_pos = jnp.broadcast_to(jnp.arange(NB * page), (S, NB * page))
+    want = ref.flash_attention_ref(q, k, v, q_pos, kv_pos, window, softcap,
+                                   16, 32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+    want2 = spec_verify_attention_ref(q, kp, vp, bt, lens, window=window,
+                                      softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want2, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_spec_verify_ref_max_kv_matches_dense_bitwise():
+    """The gather-and-slice oracle is BITWISE a dense cache of the same
+    contents — the contract behind paged==dense serving equivalence."""
+    S, C, H, KV, Dh, page, NB = 2, 3, 4, 2, 16, 8, 4
+    q, kp, vp, bt, lens = _paged_inputs(S, C, H, KV, Dh, page, NB)
+    max_kv = 24                               # < NB * page
+    out = spec_verify_attention_ref(q, kp, vp, bt, lens, max_kv=max_kv)
+    k = kp[bt].reshape(S, NB * page, KV, Dh)[:, :max_kv]
+    v = vp[bt].reshape(S, NB * page, KV, Dh)[:, :max_kv]
+    q_pos = lens[:, None] + jnp.arange(C)
+    kv_pos = jnp.broadcast_to(jnp.arange(max_kv), (S, max_kv))
+    want = ref.naive_attention(q, k, v, q_pos, kv_pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_spec_verify_seq_form_vmaps():
+    """The dense single-sequence wrapper (TPP verify path) under vmap:
+    every lane must equal its own unbatched call."""
+    C, H, Dh, N, B = 4, 2, 16, 40, 3
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, C, H, Dh))
+    k = jax.random.normal(ks[1], (B, N, H, Dh))
+    v = jax.random.normal(ks[2], (B, N, H, Dh))
+    starts = jnp.array([3, 17, N - C], jnp.int32)
+    f = lambda q1, k1, v1, s1: spec_verify_attention_seq_pallas(
+        q1, k1, v1, s1, bk=16, interpret=True)
+    batched = jax.vmap(f)(q, k, v, starts)
+    for b in range(B):
+        single = f(q[b], k[b], v[b], starts[b])
+        np.testing.assert_array_equal(np.asarray(batched[b]),
+                                      np.asarray(single))
+        want = ref.naive_attention(
+            q[b][None], k[b][None], v[b][None],
+            (starts[b] + jnp.arange(C))[None], jnp.arange(N)[None])[0]
+        np.testing.assert_allclose(np.asarray(single), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---- fused log-survival (thinning upper bound) ----
+
+@pytest.mark.parametrize("N,M", [(1, 4), (100, 64), (257, 16)])
+def test_lognorm_logsf_pallas_vs_oracle(N, M):
+    ks = jax.random.split(RNG, 4)
+    tau = jax.random.uniform(ks[0], (N,), jnp.float32, 1e-3, 10.0)
+    log_w = jax.nn.log_softmax(jax.random.normal(ks[1], (N, M)))
+    mu = jax.random.normal(ks[2], (N, M))
+    sigma = jnp.exp(jax.random.normal(ks[3], (N, M)) * 0.4)
+    out = lognorm_mix_logsf_pallas(tau, log_w, mu, sigma, interpret=True)
+    want = ref.lognorm_mix_logsf_ref(tau, log_w, mu, sigma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_lognorm_logsf_pallas_broadcast_and_tails():
+    """One mixture against a tau grid (the thinning bound's call shape)
+    + deep-tail stability."""
+    log_w = jnp.log(jnp.array([0.5, 0.5]))
+    mu = jnp.array([0.0, -1.0])
+    sigma = jnp.array([0.1, 0.05])
+    taus = jnp.array([0.5, 2.0, 50.0], jnp.float32)
+    out = lognorm_mix_logsf_pallas(taus, log_w, mu, sigma, interpret=True)
+    want = ref.lognorm_mix_logsf_ref(taus, log_w, mu, sigma)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---- block-size validation (ops entry points) ----
+
+def test_block_size_autorounds_and_warns_once():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert validate_block_size("op_x", "bq", 100) == 104
+        assert validate_block_size("op_x", "bq", 100) == 104  # same site
+    assert sum("auto-rounded" in str(x.message) for x in w) == 1
+    # capping to the array extent is the normal small-input case: silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert validate_block_size("op_y", "bk", 128, total=16) == 16
+    assert not w
+    with pytest.raises(ValueError, match=">= 1"):
+        validate_block_size("op_z", "bq", 0)
+
+
+def test_ops_policy_dispatch_misaligned_block():
+    """A misaligned policy block size must be rounded by the entry point
+    instead of failing inside pallas_call."""
+    q, k, v, qp, kp = _attn_inputs(1, 16, 32, 2, 2, 8, jnp.float32)
+    pol = KernelPolicy(backend="pallas", interpret=True, bq=10, bk=12)
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        out = ops.flash_attention(q, k, v, qp, kp, policy=pol)
+    want = ref.naive_attention(q, k, v, qp, kp)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
 
 
 # ---- the jnp flash (used by the models on CPU / in the dry-run) ----

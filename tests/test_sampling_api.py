@@ -297,7 +297,10 @@ def test_token_sampler_reuses_engine_and_pool():
     prompt = jnp.arange(4, dtype=jnp.int32)
     b1 = fn(jax.random.PRNGKey(0), prompt)
     engine, pool_t, pool_d = fn.engine, fn.engine.pool_t, fn.engine.pool_d
-    assert pool_t.tree is not None   # allocated by the first call
+    if engine.kv_layout == "paged":
+        assert pool_t.pages is not None   # page arrays allocated
+    else:
+        assert pool_t.tree is not None    # allocated by the first call
     b2 = fn(jax.random.PRNGKey(0), prompt)
     assert fn.engine is engine
     assert fn.engine.pool_t is pool_t and fn.engine.pool_d is pool_d

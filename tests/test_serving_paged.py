@@ -1,0 +1,264 @@
+"""Paged KV pool == dense pool equivalence on the serving suite.
+
+The block-table pool + spec-verify Pallas attention is the production
+hot path; these tests pin that switching the layout/kernel changes NO
+committed token: paged+ref is bitwise the dense+ref engine (same
+shapes => same XLA reductions), and paged+Pallas(interpret) matches it
+on every committed stream too (kernel numerics stay under the sampling
+decision thresholds). Coverage includes rejection-driven rollback
+(draft != target), slot reuse after finish, per-request temperatures,
+MoE capacity dispatch, replay-family fallback, admission deferral under
+page pressure, and pool bookkeeping units.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import ServeRequest, ServingEngine
+from repro.serving.kv_pool import PagedKVCachePool, paged_supported
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+def _serve(cfg_t, cfg_d, pt, pd, n_req=8, max_batch=4, max_len=64,
+           gamma=4, **engine_kw):
+    """Run the standard mixed-budget workload; tokens by submit order."""
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
+                        max_len=max_len, gamma=gamma, **engine_kw)
+    order = []
+    for i in range(n_req):
+        order.append(eng.submit(ServeRequest(
+            prompt=jnp.arange(5, dtype=jnp.int32),
+            max_new_tokens=5 + i, rng=100 + i,
+            temperature=1.0 + 0.1 * (i % 3))))
+    by_id = {r.request_id: r for r in eng.run()}
+    return eng, [np.asarray(by_id[rid].tokens) for rid in order]
+
+
+# ---------------------------------------------------------------------------
+# pool bookkeeping units (no engine)
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_alloc_truncate_free():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    assert pool.n_pages == 2 * 4 + 1          # full provisioning + null
+    total_free = pool.n_pages - 1
+    assert len(pool.free) == total_free
+    pool.ensure_blocks(0, 9)                   # 3 pages of 4
+    assert pool.n_blocks[0] == 3 and len(pool.free) == total_free - 3
+    assert all(pool.tables[0, :3] > 0)         # never the null page
+    pool.truncate(0, 5)                        # rollback to 2 pages
+    assert pool.n_blocks[0] == 2 and pool.lens[0] == 5
+    assert len(pool.free) == total_free - 2
+    assert pool.tables[0, 2] == 0              # freed entry points at null
+    pool.free_slot(0)
+    assert len(pool.free) == total_free and pool.lens[0] == 0
+    # reuse: freed pages are handed out again
+    pool.ensure_blocks(1, 16)
+    assert pool.n_blocks[1] == 4
+
+
+def test_paged_pool_rejects_unsupported_families():
+    ssm = ModelConfig(name="s", family="ssm", num_layers=1, d_model=16,
+                      num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=11,
+                      ssm_state=4, dtype="float32", param_dtype="float32",
+                      remat=False)
+    assert not paged_supported(ssm)
+    with pytest.raises(ValueError, match="paged"):
+        PagedKVCachePool(2, ssm, page_size=4, max_len=16)
+    ring = _dense(1, sliding_window=8)
+    assert not paged_supported(ring)
+
+
+# ---------------------------------------------------------------------------
+# paged == dense token-bitwise
+# ---------------------------------------------------------------------------
+
+def test_paged_ref_matches_dense_ref_bitwise(dense_pair):
+    """Same contents, same shapes, same ops: with the reference kernels
+    the paged engine must commit EXACTLY the dense engine's tokens —
+    including rollback rounds (draft != target => rejections) and slots
+    reused across the 8-requests/4-slots run."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng_d, toks_d = _serve(cfg_t, cfg_d, pt, pd, kv_layout="dense",
+                           kernel="ref")
+    eng_p, toks_p = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                           kernel="ref")
+    assert eng_d.kv_layout == "dense" and eng_p.kv_layout == "paged"
+    for a, b in zip(toks_d, toks_p):
+        np.testing.assert_array_equal(a, b)
+    # acceptance accounting identical => identical random streams
+    assert eng_d.stats().accepted == eng_p.stats().accepted
+    # finish returned every page
+    assert len(eng_p.pool_t.free) == eng_p.pool_t.n_pages - 1
+    assert len(eng_p.pool_d.free) == eng_p.pool_d.n_pages - 1
+
+
+def test_paged_pallas_matches_dense_ref_bitwise(dense_pair):
+    """The production configuration (paged + Pallas spec-verify kernel,
+    interpret on CPU) against the legacy dense+ref path."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    _, toks_d = _serve(cfg_t, cfg_d, pt, pd, kv_layout="dense",
+                       kernel="ref")
+    eng_p, toks_p = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                           kernel="pallas")
+    assert eng_p.policy.use_pallas
+    for a, b in zip(toks_d, toks_p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_paged_is_the_default_for_mask_families(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd)
+    assert eng.kv_layout == "paged"
+    assert eng.policy.backend == "pallas"
+
+
+def test_paged_moe_matches_dense(dense_pair):
+    """MoE capacity dispatch (per-sequence groups) must not change under
+    the paged batched extend."""
+    cfg_t = _dense(2, name="moe-t", family="moe", num_experts=4,
+                   num_experts_per_tok=2)
+    cfg_d = _dense(1, name="moe-d", family="moe", num_experts=4,
+                   num_experts_per_tok=2)
+    pt = registry.get_model(cfg_t).init_params(RNG)
+    pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    _, toks_d = _serve(cfg_t, cfg_d, pt, pd, n_req=4, kv_layout="dense",
+                       kernel="ref")
+    _, toks_p = _serve(cfg_t, cfg_d, pt, pd, n_req=4, kv_layout="paged",
+                       kernel="pallas")
+    for a, b in zip(toks_d, toks_p):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ar_paged_matches_dense(dense_pair):
+    cfg_t, _, pt, _ = dense_pair
+    def run(layout):
+        eng = ServingEngine(cfg_t, pt, method="ar", max_batch=2,
+                            max_len=64, kv_layout=layout, kernel="ref")
+        order = [eng.submit(ServeRequest(
+            prompt=jnp.arange(4, dtype=jnp.int32), max_new_tokens=7,
+            rng=7 + i)) for i in range(3)]
+        by_id = {r.request_id: r for r in eng.run()}
+        return [np.asarray(by_id[rid].tokens) for rid in order]
+    for a, b in zip(run("dense"), run("paged")):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# fallbacks / pressure / reset
+# ---------------------------------------------------------------------------
+
+def test_replay_family_falls_back_to_dense():
+    ssm = ModelConfig(name="s", family="ssm", num_layers=1, d_model=16,
+                      num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=11,
+                      ssm_state=4, dtype="float32", param_dtype="float32",
+                      remat=False)
+    p = registry.get_model(ssm).init_params(RNG)
+    eng = ServingEngine(ssm, p, ssm, p, max_batch=2, max_len=32, gamma=2)
+    assert eng.kv_layout == "dense"
+    eng.submit(ServeRequest(prompt=jnp.arange(4, dtype=jnp.int32),
+                            max_new_tokens=5, rng=3))
+    res = eng.run()
+    assert res[0].n == 5
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(ssm, p, ssm, p, kv_layout="paged")
+
+
+def test_admission_defers_under_page_pressure(dense_pair):
+    """An under-provisioned pool keeps serving: lifetime reservations
+    admit only what the free list can back end-to-end (here ~2 of 4
+    slots), deferred requests land as finishing ones return pages, and
+    no round can run the pool dry mid-stream."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=4, max_len=64,
+                        gamma=3, kv_layout="paged", kernel="ref",
+                        page_size=8, n_pages=9)
+    # each request reserves ceil((5 + 20)/8) = 4 of the 8 usable pages
+    budgets = {}
+    for i in range(5):
+        rid = eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                      max_new_tokens=20, rng=50 + i))
+        budgets[rid] = 20
+    max_active = 0
+    while eng.scheduler.has_work():
+        eng.step()
+        max_active = max(max_active, len(eng.scheduler.active()))
+    results = eng._results
+    assert len(results) == 5
+    for r in results:
+        assert r.n == budgets[r.request_id]
+    assert max_active == 2                 # reservations capped concurrency
+    assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1
+
+
+def test_mixed_budgets_shrink_window_instead_of_exhausting_pool(dense_pair):
+    """Regression: with mixed budgets the batch window (max over alive
+    remaining budgets) can over-ask a short request's lifetime
+    reservation; the engine must shrink gamma to the free list instead
+    of raising mid-stream."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=32,
+                        gamma=12, kv_layout="paged", kernel="ref",
+                        page_size=4, n_pages=9)
+    ra = eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                 max_new_tokens=2, rng=1))
+    rb = eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                 max_new_tokens=13, rng=2))
+    by_id = {r.request_id: r for r in eng.run()}
+    assert by_id[ra].n == 2 and by_id[rb].n == 13
+    assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1
+
+
+def test_scheduler_defer_preserves_fifo():
+    from repro.serving import Scheduler
+    s = Scheduler(max_batch=2, max_len=64)
+    reqs = [_mkreq(i) for i in range(4)]
+    for r in reqs:
+        s.submit(r)
+    placed = s.admit()                      # r0, r1
+    s.defer(placed[0][0])
+    s.defer(placed[1][0])                   # both deferred, same step
+    nxt = s.admit()                         # must come back r0, r1 — not
+    assert [st.request.request_id for _, st in nxt] \
+        == [reqs[0].request_id, reqs[1].request_id]   # reversed
+    assert s.pending_count == 2             # r2, r3 still queued behind
+
+
+def _mkreq(i):
+    return ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                        max_new_tokens=4, rng=i)
+
+
+def test_reset_keeps_pages_frees_slots(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng, _ = _serve(cfg_t, cfg_d, pt, pd, n_req=2, kv_layout="paged",
+                    kernel="ref")
+    pages_before = eng.pool_t.pages["k"]
+    eng.reset()
+    assert eng.pool_t.pages["k"] is pages_before   # no reallocation
+    assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1
+    # and the engine still serves after the reset
+    eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                            max_new_tokens=4, rng=9))
+    assert eng.run()[0].n == 4
