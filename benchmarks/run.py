@@ -448,8 +448,12 @@ def serving_throughput(args):
     """tokens/sec + tokens/target-forward of ``repro.serving`` on the
     smoke LLM config, single-request vs continuous batching — the line
     that makes BENCH_*.json track serving throughput over time. Runs the
-    legacy dense+ref layout (the historical row) AND the production
-    paged+Pallas layout."""
+    legacy dense+ref layout (the historical row), the production
+    paged+Pallas layout, AND a long-prompt admission workload that
+    reports TTFT p50/p95 + prefill tok/s for chunked-paged prefill vs
+    the dense staging buffer. All rows land in ``BENCH_serving.json``."""
+    import json
+
     from repro.configs import get_arch, smoke_variant
     from repro.models import registry as zoo
     from repro.serving import ServeRequest, ServingEngine
@@ -461,22 +465,30 @@ def serving_throughput(args):
     prompt = jnp.arange(8, dtype=jnp.int32)
     new_tokens = 16 if args.quick else 32
     gamma = 4   # fixed smoke setting so BENCH rows stay comparable
+    bench = {"backend": jax.default_backend(), "gamma": gamma}
 
-    def run(max_batch, n_req, **kw):
+    def run(max_batch, n_req, plen=8, **kw):
         eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
                             max_len=256, gamma=gamma, **kw)
+        p = (prompt if plen == 8
+             else jnp.arange(plen, dtype=jnp.int32) % cfg_t.vocab_size)
         for i in range(n_req):
-            eng.submit(ServeRequest(prompt=prompt,
+            eng.submit(ServeRequest(prompt=p,
                                     max_new_tokens=new_tokens, rng=100 + i))
-        eng.run()
-        return eng.stats()
+        res = eng.run()
+        return eng.stats(), res
 
     for tag, kw in (("", dict(kv_layout="dense", kernel="ref")),
                     ("_paged", dict(kv_layout="paged"))):
         run(1, 1, **kw)          # compile
-        s1 = run(1, 2, **kw)
+        s1, _ = run(1, 2, **kw)
         run(4, 1, **kw)          # compile the batched round
-        sb = run(4, 8, **kw)
+        sb, _ = run(4, 8, **kw)
+        bench[f"llm_sd{tag}"] = {
+            "tok_per_sec_b1": s1.tokens_per_sec,
+            "tok_per_sec_b4": sb.tokens_per_sec,
+            "tok_per_fwd_b4": sb.tokens_per_forward,
+            "alpha": sb.acceptance_rate}
         emit(f"serving/llm_sd{tag}", 1e6 / max(sb.tokens_per_sec, 1e-9),
              f"tok_per_sec_b1={s1.tokens_per_sec:.1f};"
              f"tok_per_sec_b4={sb.tokens_per_sec:.1f};"
@@ -484,6 +496,37 @@ def serving_throughput(args):
              f"tok_per_fwd_b4={sb.tokens_per_forward:.2f};"
              f"alpha={sb.acceptance_rate:.2f};"
              f"gamma={gamma};requests=8;max_batch=4")
+
+    # --- long-prompt admission: TTFT + prefill throughput, chunked
+    # prefill THROUGH the paged pool vs the dense staging buffer
+    plen = 96 if args.quick else 160
+    n_req = 6
+    for tag, kw in (
+            ("staging", dict(kv_layout="paged")),
+            ("chunked", dict(kv_layout="paged", prefill_chunk=32)),
+            ("chunked_budget", dict(kv_layout="paged", prefill_chunk=32,
+                                    prefill_budget=64))):
+        run(4, 2, plen=plen, **kw)      # compile
+        st, res = run(4, n_req, plen=plen, **kw)
+        tt = np.sort(np.array([r.ttft_s for r in res]))
+        p50 = float(np.percentile(tt, 50))
+        p95 = float(np.percentile(tt, 95))
+        ptok = st.prefill_tokens_per_sec
+        bench[f"longprompt_{tag}"] = {
+            "prompt_len": plen, "requests": n_req,
+            "ttft_p50_ms": p50 * 1e3, "ttft_p95_ms": p95 * 1e3,
+            "prefill_tok_per_sec": ptok,
+            "prefill_tokens": st.prefill_tokens,
+            "tok_per_sec": st.tokens_per_sec}
+        emit(f"serving/longprompt_{tag}", p50 * 1e6,
+             f"ttft_p50_ms={p50 * 1e3:.1f};ttft_p95_ms={p95 * 1e3:.1f};"
+             f"prefill_tok_per_sec={ptok:.0f};"
+             f"tok_per_sec={st.tokens_per_sec:.1f};"
+             f"prompt_len={plen};requests={n_req}")
+
+    with open("BENCH_serving.json", "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+    print("# wrote BENCH_serving.json")
 
 
 # ---------------------------------------------------------------------------

@@ -79,23 +79,37 @@ def spec_verify_attention(q, k_pages, v_pages, block_tables, lens, *,
                           window: int = 0, softcap: float = 0.0,
                           max_kv: int = 0,
                           policy: KernelPolicy | None = None):
-    """Speculative-verify attention over a paged KV cache.
+    """Chunk-query attention over a paged KV cache — the speculative
+    verify (C = gamma+1) and the chunked-prefill path (C = chunk) run
+    through this one entry point, so both follow the same policy.
 
-    q: [S, C, H, Dh] (C = gamma+1 chunk queries at positions
+    q: [S, C, H, Dh] (C chunk queries at positions
     lens[s]..lens[s]+C-1, K/V already written into the pages);
     k/v_pages: [P, page, KV, Dh]; block_tables: [S, NB]; lens: [S].
+
+    Chunks longer than the policy's ``bq`` run query-tiled (per-query
+    math unchanged — each query sweeps the same blocks in the same
+    order); decode-sized chunks keep the single-tile grid bitwise.
 
     ``max_kv`` only affects the reference path: it slices the gathered
     cache to that length so the result is bitwise what the same dense
     cache produces (the paged==dense equivalence contract).
     """
-    use_pallas, interpret, _ = _dispatch(policy, False, True)
+    use_pallas, interpret, pol = _dispatch(policy, False, True)
     if use_pallas:
+        C = q.shape[1]
+        bq = pol.bq
+        if C > bq:
+            # tiled path only: align the requested tile (warn-once)
+            # instead of failing inside pallas_call lowering
+            bq = validate_block_size("spec_verify_attention", "bq", bq,
+                                     total=C)
         from .spec_verify_attention import spec_verify_attention_pallas
         return spec_verify_attention_pallas(q, k_pages, v_pages,
                                             block_tables, lens,
                                             window=window, softcap=softcap,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            bq=bq if C > bq else 0)
     from .spec_verify_attention import spec_verify_attention_ref
     return spec_verify_attention_ref(q, k_pages, v_pages, block_tables,
                                      lens, window=window, softcap=softcap,

@@ -1,13 +1,18 @@
-"""Pallas TPU kernel: speculative-verify attention over a PAGED KV cache.
+"""Pallas TPU kernel: chunk-query attention over a PAGED KV cache.
 
-One propose-verify round scores gamma+1 query positions per sequence
-(the pending token + gamma drafts) against that sequence's whole KV
-history. Expressing this as a vmapped single-token extend wastes the
-MXU (one [1, bk] logits row per step) and re-reads the cache gamma+1
-times; this kernel processes all C = gamma+1 queries x all G query
-heads of one KV head together — a [C*G, page] logits tile per KV block
-— with online-softmax state in VMEM scratch, so the whole verify is ONE
-pass over the cache.
+One propose-verify round scores C = gamma+1 query positions per
+sequence (the pending token + gamma drafts) against that sequence's
+whole KV history; one chunked-prefill step scores C = chunk prompt
+positions the same way. Expressing either as a vmapped single-token
+extend wastes the MXU (one [1, bk] logits row per step) and re-reads
+the cache C times; this kernel processes all C chunk queries x all G
+query heads of one KV head together — a [bq*G, page] logits tile per
+KV block, with the C axis tiled by ``bq`` for long prefill chunks —
+with online-softmax state in VMEM scratch, so the whole chunk is ONE
+pass over the cache. Masking is causal on logical positions WITHIN the
+chunk too (query i at position lens[s]+i sees keys up to itself), which
+is what lets the speculative verify and the prefill chunks share one
+kernel.
 
 The KV cache is paged: physical pages ``k_pages/v_pages [P, page, KV,
 Dh]`` shared by every sequence, with a per-sequence block table mapping
@@ -19,9 +24,11 @@ entry p of logical block b sits at position b*page + p, which is what
 makes rollback a block-table truncation (stale entries beyond the
 committed length are causally masked, never rewritten).
 
-Grid: (S, KV, nb) — nb innermost/sequential, scratch re-initialized at
-b == 0 and flushed at b == nb - 1. Blocks past a sequence's visible
-horizon are skipped via ``pl.when``.
+Grid: (S, KV, nq, nb) — nb innermost/sequential, scratch
+re-initialized at b == 0 and flushed at b == nb - 1 (the query-tile
+dim nq sits outside nb, so each tile owns one full sweep over the
+cache). Blocks past a query tile's visible horizon are skipped via
+``pl.when``.
 """
 from __future__ import annotations
 
@@ -40,9 +47,10 @@ NEG_INF = -1e30
 
 def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, out_ref,
             m_scr, l_scr, acc_scr, *, scale, window, softcap, page, nb,
-            C, G):
+            bq, G):
     s = pl.program_id(0)
-    b = pl.program_id(2)
+    qb = pl.program_id(2)
+    b = pl.program_id(3)
     Dh = q_ref.shape[-1]
 
     @pl.when(b == 0)
@@ -52,21 +60,22 @@ def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, out_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr[...])
 
     l0 = lens_ref[s]
+    q0 = qb * bq                           # first chunk row of this tile
 
     # A block contributes iff its first logical position can be visible
-    # to the last query (position l0 + C - 1).
-    @pl.when(b * page <= l0 + C - 1)
+    # to the tile's last query (position l0 + q0 + bq - 1).
+    @pl.when(b * page <= l0 + q0 + bq - 1)
     def _accumulate():
-        q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(C * G, Dh)
+        q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(bq * G, Dh)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # [page, Dh]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
 
         s_blk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         if softcap > 0:
             s_blk = jnp.tanh(s_blk / softcap) * softcap
-        row = jax.lax.broadcasted_iota(jnp.int32, (C * G, page), 0)
-        col = jax.lax.broadcasted_iota(jnp.int32, (C * G, page), 1)
-        qp = l0 + row // G                 # logical query positions
+        row = jax.lax.broadcasted_iota(jnp.int32, (bq * G, page), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (bq * G, page), 1)
+        qp = l0 + q0 + row // G            # logical query positions
         kp = b * page + col                # logical key positions
         mask = kp <= qp
         if window > 0:
@@ -89,54 +98,69 @@ def _kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, out_ref,
         safe = jnp.maximum(l, 1e-30)
         out = acc_scr[...] / safe[:, None]
         out = jnp.where((l > 0)[:, None], out, 0.0)
-        out_ref[0, :, 0, :, :] = out.reshape(C, G, Dh).astype(out_ref.dtype)
+        out_ref[0, :, 0, :, :] = out.reshape(bq, G, Dh).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap",
-                                             "interpret"))
+                                             "interpret", "bq"))
 def spec_verify_attention_pallas(q, k_pages, v_pages, block_tables, lens, *,
                                  window: int = 0, softcap: float = 0.0,
-                                 interpret: bool = True):
-    """q: [S, C, H, Dh]; k/v_pages: [P, page, KV, Dh];
+                                 interpret: bool = True,
+                                 bq: int = 0):
+    """q: [S, C, H, Dh] — C is ANY chunk length: gamma+1 for the
+    speculative verify, the chunk size for paged prefill (causal
+    within-chunk masking covers both); k/v_pages: [P, page, KV, Dh];
     block_tables: [S, NB] int32 physical page per logical block;
     lens: [S] int32 committed KV length BEFORE the chunk (queries sit at
     positions lens[s] .. lens[s]+C-1, and their K/V are already written
-    into the pages). Returns [S, C, H, Dh]."""
+    into the pages). ``bq`` tiles the query axis (0 = the whole chunk
+    in one tile, the decode-round setting); tiling never changes the
+    per-query math — each query still sweeps the same blocks in the
+    same order — it only bounds the [bq*G, page] logits tile for long
+    prefill chunks. Returns [S, C, H, Dh]."""
     S, C, H, Dh = q.shape
     page, KV = k_pages.shape[1], k_pages.shape[2]
     G = H // KV
     NB = block_tables.shape[1]
+    bq = C if bq <= 0 else min(bq, C)
+    nq = -(-C // bq)
+    Cp = nq * bq
     qg = q.reshape(S, C, KV, G, Dh)
+    if Cp != C:
+        # pad the query axis to a whole number of tiles; the padded
+        # rows attend at positions past the chunk (garbage, finite) and
+        # are sliced off below
+        qg = jnp.pad(qg, ((0, 0), (0, Cp - C), (0, 0), (0, 0), (0, 0)))
     lens = lens.astype(jnp.int32)
     kern = functools.partial(_kernel, scale=1.0 / math.sqrt(Dh),
                              window=window, softcap=softcap, page=page,
-                             nb=NB, C=C, G=G)
+                             nb=NB, bq=bq, G=G)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(S, KV, NB),
+        grid=(S, KV, nq, NB),
         in_specs=[
-            pl.BlockSpec((1, C, 1, G, Dh),
-                         lambda s, h, b, bt, ln: (s, 0, h, 0, 0)),
+            pl.BlockSpec((1, bq, 1, G, Dh),
+                         lambda s, h, qb, b, bt, ln: (s, qb, h, 0, 0)),
             pl.BlockSpec((1, page, 1, Dh),
-                         lambda s, h, b, bt, ln: (bt[s, b], 0, h, 0)),
+                         lambda s, h, qb, b, bt, ln: (bt[s, b], 0, h, 0)),
             pl.BlockSpec((1, page, 1, Dh),
-                         lambda s, h, b, bt, ln: (bt[s, b], 0, h, 0)),
+                         lambda s, h, qb, b, bt, ln: (bt[s, b], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, C, 1, G, Dh),
-                               lambda s, h, b, bt, ln: (s, 0, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, bq, 1, G, Dh),
+                               lambda s, h, qb, b, bt, ln: (s, qb, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((C * G,), jnp.float32),
-            pltpu.VMEM((C * G,), jnp.float32),
-            pltpu.VMEM((C * G, Dh), jnp.float32),
+            pltpu.VMEM((bq * G,), jnp.float32),
+            pltpu.VMEM((bq * G,), jnp.float32),
+            pltpu.VMEM((bq * G, Dh), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((S, C, KV, G, Dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((S, Cp, KV, G, Dh), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lens, qg, k_pages, v_pages)
-    return out.reshape(S, C, H, Dh)
+    return out[:, :C].reshape(S, C, H, Dh)
 
 
 def spec_verify_attention_ref(q, k_pages, v_pages, block_tables, lens, *,

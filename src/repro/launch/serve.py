@@ -2,12 +2,16 @@
 
 Serves a target architecture with a smaller same-family draft via
 continuous-batching token-level speculative decoding: requests stream
-through a FIFO queue into ``--max-batch`` KV-cache slots, and every
-engine step verifies gamma drafted tokens for all active slots in one
-batched target forward.
+through a policy-ordered queue (``--sched fifo|priority|sjf``) into
+``--max-batch`` KV-cache slots, prompts prefill through the paged pool
+in ``--prefill-chunk`` token chunks under a per-step
+``--prefill-budget``, and every engine step verifies gamma drafted
+tokens for all decoding slots in one batched target forward.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 8 --new-tokens 32 --gamma 4 --max-batch 4
+  PYTHONPATH=src python -m repro.launch.serve --prompt-len 96 \
+      --prefill-chunk 32 --sched priority --priorities 0,2,1
 """
 from __future__ import annotations
 
@@ -38,7 +42,9 @@ def build_engine(args):
         max_len=args.max_len, gamma=args.gamma,
         draft_policy=args.draft_policy, mesh=mesh,
         kv_layout=args.kv_layout, kernel=args.kernel,
-        page_size=args.page_size)
+        page_size=args.page_size, sched=args.sched,
+        prefill_chunk=args.prefill_chunk or None,
+        prefill_budget=args.prefill_budget or None)
 
 
 def main():
@@ -66,6 +72,23 @@ def main():
                          "TPU, interpret elsewhere)")
     ap.add_argument("--page-size", dest="page_size", type=int, default=None,
                     help="KV block size of the paged pool")
+    ap.add_argument("--sched", default="fifo",
+                    choices=["fifo", "priority", "sjf"],
+                    help="admission policy: fifo (default), priority "
+                         "(per-request priority + aging), sjf "
+                         "(shortest job first)")
+    ap.add_argument("--prefill-chunk", dest="prefill_chunk", type=int,
+                    default=0,
+                    help="stream prompts through the paged pool in "
+                         "chunks of N tokens (0 = one-shot dense-staging "
+                         "admission)")
+    ap.add_argument("--prefill-budget", dest="prefill_budget", type=int,
+                    default=0,
+                    help="max prefill tokens per engine step across all "
+                         "admitting slots (0 = unlimited)")
+    ap.add_argument("--priorities", default="0",
+                    help="CSV of request priorities, cycled across "
+                         "--requests (ranked by --sched priority)")
     ap.add_argument("--sharded", action="store_true",
                     help="place the slot pool + params on a device mesh "
                          "(the serving mesh when 256+ devices are "
@@ -75,27 +98,41 @@ def main():
     args = ap.parse_args()
 
     cfg_t, engine = build_engine(args)
+    prios = [int(p) for p in args.priorities.split(",")]
     print(f"serving {cfg_t.name} (target 4L, draft {args.draft_layers}L, "
           f"method={args.method}, gamma={args.gamma}, "
-          f"policy={args.draft_policy}, max_batch={args.max_batch}, "
-          f"requests={args.requests})")
+          f"policy={args.draft_policy}, sched={args.sched}, "
+          f"prefill_chunk={args.prefill_chunk or 'off'}, "
+          f"max_batch={args.max_batch}, requests={args.requests})")
     for r in range(args.requests):
         prompt = jax.random.randint(
             jax.random.PRNGKey(10 + r), (args.prompt_len,), 0,
             cfg_t.vocab_size).astype(jnp.int32)
         engine.submit(ServeRequest(prompt=prompt,
                                    max_new_tokens=args.new_tokens,
-                                   rng=100 + r))
+                                   rng=100 + r,
+                                   priority=prios[r % len(prios)]))
+    results = []
     while engine.scheduler.has_work():
         for res in engine.step():
+            results.append(res)
             print(f"request {res.request_id}: {res.n} tokens, "
-                  f"{res.rounds} rounds, alpha={res.acceptance_rate:.2f}")
+                  f"{res.rounds} rounds, alpha={res.acceptance_rate:.2f}, "
+                  f"ttft={res.ttft_s * 1e3:.0f}ms/"
+                  f"{res.ttft_rounds}r")
     st = engine.stats()
+    ttfts = sorted(r.ttft_s for r in results)
+    p50 = ttfts[len(ttfts) // 2] if ttfts else 0.0
+    p95 = ttfts[min(len(ttfts) - 1, int(0.95 * len(ttfts)))] if ttfts \
+        else 0.0
     print(f"served {st.tokens} tokens in {st.wall_s:.1f}s | "
           f"alpha={st.acceptance_rate:.2f} | "
           f"tokens/target-forward={st.tokens_per_forward:.2f} "
           f"(AR = ~{args.max_batch}.0 at this batch) | "
           f"tokens/sec={st.tokens_per_sec:.1f}")
+    print(f"admission: prefill_tokens={st.prefill_tokens} "
+          f"prefill_tok_per_sec={st.prefill_tokens_per_sec:.0f} "
+          f"ttft_p50={p50 * 1e3:.0f}ms ttft_p95={p95 * 1e3:.0f}ms")
 
 
 if __name__ == "__main__":

@@ -297,7 +297,7 @@ def init_kv_pages(cfg, n_pages: int, page_size: int):
 
 
 def extend_paged(cfg, params, pages, block_tables, lens, tokens, *,
-                 policy=None, max_kv: int = 0):
+                 policy=None, max_kv: int = 0, nvalid=None):
     """Batched extend over a PAGED KV pool: append ``tokens[s]`` at
     positions ``lens[s]..lens[s]+c-1`` for every sequence in one native
     batch (this replaces the serving engine's vmapped per-slot extend).
@@ -307,6 +307,12 @@ def extend_paged(cfg, params, pages, block_tables, lens, tokens, *,
                    rows must already cover lens[s]+c entries.
     lens         : [S] int32 committed lengths before the chunk.
     tokens       : [S, c] int32.
+    nvalid       : optional [S] int32 — how many of the c tokens are
+                   real per sequence. Padding tokens (and whole lanes
+                   with nvalid == 0) write the null page, so a batched
+                   chunk call can mix sequences with different chunk
+                   lengths (chunked prefill) without touching the pages
+                   of lanes that are not participating.
 
     Returns (logits [S, c, V], new pages). Lengths/allocation/rollback
     are the caller's (host) bookkeeping: commit = advance lens, rollback
@@ -319,11 +325,22 @@ def extend_paged(cfg, params, pages, block_tables, lens, tokens, *,
     dtype = cm.get_dtype(cfg.dtype)
     S, c = tokens.shape
     P, page = pages["k"].shape[1], pages["k"].shape[2]
+    NB = block_tables.shape[1]
     x = params["embed"][tokens].astype(dtype)
     lens = lens.astype(jnp.int32)
     positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)   # [S, c]
+    blk_idx = positions // page
     blk = jnp.take_along_axis(block_tables.astype(jnp.int32),
-                              positions // page, axis=1)
+                              jnp.minimum(blk_idx, NB - 1), axis=1)
+    # Writes with no backing block go to the reserved null page 0: a
+    # lane running past its table coverage (idle / mid-prefill slots in
+    # a mixed round) and the padding tail of a partial chunk must never
+    # corrupt another sequence's pages.
+    keep = blk_idx < NB
+    if nvalid is not None:
+        keep &= jnp.arange(c, dtype=jnp.int32)[None, :] \
+            < nvalid.astype(jnp.int32)[:, None]
+    blk = jnp.where(keep, blk, 0)
     flat = (blk * page + positions % page).reshape(-1)           # [S*c]
 
     def scan_body(x, layer_in):
@@ -367,6 +384,37 @@ def extend_paged(cfg, params, pages, block_tables, lens, tokens, *,
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
     return logits, {"k": k_new, "v": v_new}
+
+
+def prefill_paged(cfg, params, pages, block_tables, lens, tokens, nvalid, *,
+                  policy=None, max_kv: int = 0):
+    """Chunked prompt prefill THROUGH the paged pool (admission path).
+
+    One fixed-size chunk of every prefilling slot's prompt in a single
+    natively batched forward: ``tokens [S, c]`` (right-padded),
+    ``nvalid [S]`` real token counts (0 for lanes not prefilling),
+    ``lens [S]`` prompt tokens already committed. Reuses
+    ``extend_paged``'s page-write machinery — padding tokens and
+    non-participating lanes write the null page — and its attention: a
+    prefill chunk is just a C=c query block with causal within-chunk
+    masking, so chunks run on the same spec-verify kernel policy as the
+    gamma+1 verify rounds.
+
+    Per-sequence MoE dispatch (inherited from ``extend_paged``) keeps
+    each slot's capacity groups independent of its batch-mates. Note
+    the chunked == one-shot bitwise guarantee for MoE configs holds
+    only while expert capacity never binds (capacity_factor >=
+    num_experts / num_experts_per_tok): dropping is a function of the
+    dispatch group, and chunking changes the grouping.
+
+    Returns (logits [S, c, V], new pages); row ``nvalid[s] - 1`` of a
+    slot's final chunk is the prompt's last-position logits — with
+    ``max_kv`` set to the dense capacity it is bitwise what the dense
+    staging prefill produces (same masked reduction shapes), which is
+    what lets chunked admission commit identical token streams.
+    """
+    return extend_paged(cfg, params, pages, block_tables, lens, tokens,
+                        policy=policy, max_kv=max_kv, nvalid=nvalid)
 
 
 def rollback(cache, new_len):

@@ -237,7 +237,9 @@ class SamplingEngine:
             cfg_t, params_t, cfg_d, params_d, method=spec.method,
             max_batch=spec.batch, max_len=spec.max_len,
             gamma=spec.gamma, draft_policy=spec.draft_policy, mesh=mesh,
-            kernel=spec.kernel, kv_layout=spec.kv_layout)
+            kernel=spec.kernel, kv_layout=spec.kv_layout,
+            sched=spec.sched,
+            prefill_chunk=spec.prefill_chunk or None)
 
         def token_fn(rng, prompt):
             prompt = jnp.asarray(prompt, jnp.int32)

@@ -14,6 +14,7 @@ EXECUTIONS = ("host", "jit", "vmap", "sharded")
 DOMAINS = ("tpp", "token")
 KERNELS = ("auto", "pallas", "ref")
 KV_LAYOUTS = ("auto", "paged", "dense")
+SCHEDS = ("fifo", "priority", "sjf")
 
 
 class SpecError(ValueError):
@@ -72,6 +73,15 @@ class SamplerSpec:
     # resolves to the paged block-table pool whenever the families
     # support it, falling back to the dense per-slot pool
     kv_layout: str = "auto"
+    # admission policy of the serving scheduler ("fifo" is bitwise the
+    # historical behavior; "priority" ranks on ServeRequest.priority
+    # with aging, "sjf" shortest-job-first). Never changes any
+    # request's sampled distribution (per-request rng) — only admission
+    # order/latency.
+    sched: str = "fifo"
+    # stream prompts into the paged pool in chunks of this many tokens
+    # (0 = disabled: the dense-staging admission prefill)
+    prefill_chunk: int = 0
     # thinning-only knobs (App. D.1 adaptive bound)
     thinning_safety: float = 2.0
     thinning_grid: int = 8
@@ -100,6 +110,20 @@ class SamplerSpec:
         if self.kv_layout != "auto" and self.domain != "token":
             raise SpecError("kv_layout only applies to domain='token' "
                             "(the TPP samplers have no KV pool)")
+        if self.sched not in SCHEDS:
+            raise SpecError(f"unknown sched {self.sched!r}; "
+                            f"expected one of {SCHEDS}")
+        if self.prefill_chunk < 0:
+            raise SpecError("prefill_chunk must be >= 0 (0 disables "
+                            "chunked admission)")
+        if ((self.sched != "fifo" or self.prefill_chunk)
+                and self.domain != "token"):
+            raise SpecError("sched/prefill_chunk only apply to "
+                            "domain='token' (the serving scheduler)")
+        if self.prefill_chunk and self.kv_layout == "dense":
+            raise SpecError("prefill_chunk streams prompts through the "
+                            "paged pool; it cannot combine with "
+                            "kv_layout='dense'")
         if self.method == "thinning" and self.execution != "host":
             raise SpecError("method='thinning' is host-only (data-dependent "
                             "proposal counts cannot live in a fixed-shape "

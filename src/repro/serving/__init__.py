@@ -1,18 +1,24 @@
 """Continuous-batching speculative serving (request/scheduler API).
 
 The serving layer turns the paper's single-sequence propose-verify loop
-into a system that takes traffic: requests enter a FIFO queue, a
-scheduler slots them into a pooled per-slot KV cache, and every engine
-step runs ONE batched draft+verify round for all active slots — so a
-single target forward verifies gamma drafted tokens for every request
-in flight.
+into a system that takes traffic: requests enter a policy-ordered queue
+(FIFO / priority+aging / SJF), a scheduler slots them into a paged KV
+pool, prompts prefill THROUGH the pool in chunks under a per-step token
+budget, and every engine step runs ONE batched draft+verify round for
+all decoding slots — so a single target forward verifies gamma drafted
+tokens for every request in flight while newly admitted prompts stream
+in beside them.
 """
 from .engine import ServingEngine
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind)
 from .request import EngineStats, ServeRequest, ServeResult
-from .scheduler import Scheduler, SlotState
+from .scheduler import (FifoPolicy, PriorityPolicy, Scheduler,
+                        SchedulingPolicy, SJFPolicy, SlotState,
+                        resolve_sched_policy)
 
 __all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
-           "Scheduler", "SlotState", "KVCachePool", "PagedKVCachePool",
-           "paged_supported", "rollback_kind"]
+           "Scheduler", "SlotState", "SchedulingPolicy", "FifoPolicy",
+           "PriorityPolicy", "SJFPolicy", "resolve_sched_policy",
+           "KVCachePool", "PagedKVCachePool", "paged_supported",
+           "rollback_kind"]

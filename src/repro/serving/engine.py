@@ -9,15 +9,23 @@
 
 Each ``step()`` is one scheduler round:
 
-  1. admit queued requests into free KV-cache slots (prefill target +
-     draft at batch 1, sample the first new token from the prefill
-     logits, write the caches into the pool);
-  2. run ONE batched propose-verify round for every active slot — the
+  1. admit queued requests into free KV-cache slots in the scheduling
+     policy's order (fifo / priority / sjf). With ``prefill_chunk``
+     set, admission just reserves pages and parks the slot PREFILLING;
+     otherwise the staging path prefills target + draft at batch 1,
+     samples the first new token from the prefill logits, and writes
+     the caches into the pool;
+  2. stream one or more prompt chunks for every PREFILLING slot
+     through the paged pool (``prefill_paged`` — no dense staging
+     buffer), bounded by the per-step ``prefill_budget``; slots whose
+     prompt completes sample their first token from the final chunk's
+     logits and flip to DECODING;
+  3. run ONE batched propose-verify round for every decoding slot — the
      draft drafts gamma tokens (gamma+1 batched c=1 forwards), the
      target verifies pending+drafts in a single c=gamma+1 forward, and
      acceptance/rollback is computed per slot inside the same jitted
      call (mask families; replay families re-extend on the host);
-  3. commit accepted prefixes + the bonus/adjusted token, retire
+  4. commit accepted prefixes + the bonus/adjusted token, retire
      requests whose budget is spent (their slots refill at the next
      step's admission).
 
@@ -43,7 +51,7 @@ from ..models import transformer as tfm
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind, rollback_one, select_slots)
 from .request import EngineStats, ServeRequest, ServeResult, _as_key
-from .scheduler import Scheduler, SlotState
+from .scheduler import DECODING, PREFILLING, Scheduler, SlotState
 
 # Jitted closures cached per (role, cfg..., static dims). Configs are
 # frozen dataclasses (hashable), so the cache survives across engine
@@ -262,6 +270,32 @@ def _sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy: KernelPolicy,
     return _FN_CACHE[key]
 
 
+def _prefill_chunk_fn(cfg_t, cfg_d, chunk: int, policy: KernelPolicy,
+                      max_kv: int):
+    """One batched prefill chunk THROUGH the paged pools: write the
+    chunk's K/V into the target (and draft) pages and return the target
+    logits for every chunk position. Lanes with ``nvalid == 0`` (idle /
+    decoding slots sharing the batch) write the null page and are
+    untouched. One compilation per engine (the chunk length is static;
+    partial final chunks ride the same program right-padded)."""
+    key = ("prefill_chunk", cfg_t, cfg_d, chunk, policy, max_kv)
+    if key not in _FN_CACHE:
+
+        def fn(params_t, params_d, pg_t, bt_t, pg_d, bt_d, lens, tokens,
+               nvalid):
+            lg, pg_t = tfm.prefill_paged(
+                cfg_t, params_t, pg_t, bt_t, lens, tokens, nvalid,
+                policy=policy, max_kv=max_kv)
+            if cfg_d is not None:
+                _, pg_d = tfm.prefill_paged(
+                    cfg_d, params_d, pg_d, bt_d, lens, tokens, nvalid,
+                    policy=policy, max_kv=max_kv)
+            return lg, pg_t, pg_d
+
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
 def _ar_round_paged_fn(cfg_t, policy: KernelPolicy, max_kv: int):
     """Batched paged decode: ingest pending, sample the next token."""
     key = ("ar_round_paged", cfg_t, policy, max_kv)
@@ -298,7 +332,9 @@ class ServingEngine:
                  gamma: int = 4, draft_policy: str = "fixed", mesh=None,
                  kv_layout: str = "auto", kernel="auto",
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 sched="fifo", prefill_chunk: Optional[int] = None,
+                 prefill_budget: Optional[int] = None):
         """``kv_layout``: "paged" (block-table pool + spec-verify Pallas
         attention — the production hot path), "dense" (per-slot dense
         caches + vmapped extend), or "auto" (paged whenever the families
@@ -307,7 +343,25 @@ class ServingEngine:
         "auto"|"pallas"|"ref" — "auto" runs Pallas, compiled on TPU and
         ``interpret=True`` elsewhere. ``page_size``/``n_pages`` size the
         paged pool (n_pages=None fully provisions max_batch x max_len;
-        smaller values admit under memory pressure by deferring)."""
+        smaller values admit under memory pressure by deferring).
+
+        ``sched``: admission policy — "fifo" (default, bitwise the
+        historical behavior), "priority" (``ServeRequest.priority`` +
+        aging), "sjf" (shortest job first), or a ``SchedulingPolicy``.
+        ``prefill_chunk``: stream admitted prompts into the paged pool
+        in chunks of this many tokens instead of staging a dense
+        batch-1 prefill (None = staging). Chunked slots sit in the
+        PREFILLING phase and share steps with decoding slots. With no
+        budget the round schedule is exactly the staging engine's and
+        the committed streams are token-BITWISE identical (same
+        per-request rng, same masked reductions).
+        ``prefill_budget``: max prompt tokens prefilled per engine step
+        across all PREFILLING slots (None = unlimited: an admitted
+        prompt finishes prefilling in its admission step, like
+        staging). A budget delays admission, which changes which slots
+        share a round and hence the batch window clamp — round
+        boundaries shift, so streams match staging in DISTRIBUTION
+        (the per-request rng contract) rather than bitwise."""
         if method not in ("ar", "sd"):
             raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
         if method == "sd" and (cfg_d is None or params_d is None):
@@ -343,6 +397,23 @@ class ServingEngine:
                 "kernel='pallas' only accelerates the paged rounds today; "
                 "the dense layout keeps the families' reference extend "
                 "path", UserWarning, stacklevel=2)
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1 (or None to "
+                                 "disable chunked admission)")
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "prefill_chunk streams prompts THROUGH the paged pool; "
+                    "it requires kv_layout='paged' (dense layouts and "
+                    "meshes keep the staging prefill)")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError("prefill_budget must be >= 1 (or None for "
+                             "unlimited)")
+        if prefill_budget is not None and prefill_chunk is None:
+            raise ValueError("prefill_budget paces chunked admission; set "
+                             "prefill_chunk too")
+        self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
         self.mesh, self.rules = mesh, None
         if mesh is not None:
             from ..launch.mesh import serving_rules_for
@@ -354,7 +425,7 @@ class ServingEngine:
                 self.params_d = jax.device_put(
                     params_d, self.rules.tree_shardings(
                         _model_for(cfg_d).logical_axes(), params_d))
-        self.scheduler = Scheduler(max_batch, max_len)
+        self.scheduler = Scheduler(max_batch, max_len, policy=sched)
         self.pool_t = self._make_pool(cfg_t)
         self.pool_d = self._make_pool(cfg_d) if method == "sd" else None
         if method == "sd":
@@ -390,7 +461,8 @@ class ServingEngine:
         if self.scheduler.has_work() and not force:
             raise RuntimeError("reset() with requests still queued/active; "
                                "pass force=True to discard them")
-        self.scheduler = Scheduler(self.max_batch, self.max_len)
+        self.scheduler = Scheduler(self.max_batch, self.max_len,
+                                   policy=self.scheduler.policy)
         self.pool_t.reset()
         if self.pool_d is not None:
             self.pool_d.reset()
@@ -402,28 +474,41 @@ class ServingEngine:
     # -- public API --------------------------------------------------------
     def submit(self, req: ServeRequest = None, *, prompt=None,
                max_new_tokens: int = 32, temperature: float = 1.0,
-               rng=0, extra=None) -> int:
+               rng=0, extra=None, priority: int = 0) -> int:
         """Queue a request (either a ``ServeRequest`` or its fields)."""
         if req is None:
             req = ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
-                               temperature=temperature, rng=rng, extra=extra)
+                               temperature=temperature, rng=rng, extra=extra,
+                               priority=priority)
         return self.scheduler.submit(req)
 
     def step(self) -> List[ServeResult]:
-        """One scheduler round; returns requests completed this round."""
+        """One scheduler round; returns requests completed this round.
+
+        A mixed round: admission (policy-ordered), then chunked-prefill
+        work for PREFILLING slots under the per-step token budget, then
+        ONE batched draft+verify (or decode) round for the DECODING
+        slots. Slots that finish prefilling inside this step join the
+        same step's decode round — with no budget the schedule is
+        exactly the staging engine's."""
         t0 = time.perf_counter()
+        self.scheduler.tick()
         done: List[ServeResult] = []
         blocked = False
         for slot, state in self.scheduler.admit():
             if blocked:
-                # strict FIFO under page pressure: once one admission
-                # defers, younger placements wait behind it
+                # admission-order under page pressure: once one
+                # admission defers, later placements wait behind it
                 self.scheduler.defer(slot)
                 continue
             blocked = not self._admit(slot, state)
+        if self.prefill_chunk is not None:
+            self._prefill_step()
         # requests whose whole budget was the prefill token
         alive: List[Tuple[int, SlotState]] = []
         for slot, state in self.scheduler.active():
+            if state.phase == PREFILLING:
+                continue        # still consuming chunk budget
             if state.done:
                 done.append(self._retire(slot))
             else:
@@ -458,18 +543,27 @@ class ServingEngine:
 
     # -- internals ---------------------------------------------------------
     def _admit(self, slot: int, state: SlotState) -> bool:
-        """Back the slot with cache memory and prefill it. Returns False
-        when a paged pool cannot back the request yet (deferred — no
-        prefill wasted: the lifetime need is known from the request)."""
+        """Back the slot with cache memory and start (or finish) its
+        prefill. Returns False when a paged pool cannot back the
+        request yet (deferred — no prefill wasted: the lifetime need is
+        known from the request).
+
+        With ``prefill_chunk`` set, admission only reserves pages and
+        parks the slot in the PREFILLING phase — the prompt streams
+        into the pool chunk by chunk in ``_prefill_step``. Without it
+        (and for requests carrying extra prefill fields, e.g. VLM
+        vision prefixes, and for the dense layout) the historical
+        staging path runs: one dense batch-1 prefill scattered into the
+        pool via ``write_prefill``."""
         req = state.request
+        prefix = 0
+        if req.extra and req.extra.get("vision_embeds") is not None:
+            prefix = int(req.extra["vision_embeds"].shape[1])
         if self.kv_layout == "paged":
             # admission under memory pressure: reserve the request's
             # WHOLE lifetime (prefix + prompt + budget) up front, so
             # per-round growth of admitted slots can never exhaust the
             # free list; defer when the reservation does not fit now
-            prefix = 0
-            if req.extra and req.extra.get("vision_embeds") is not None:
-                prefix = int(req.extra["vision_embeds"].shape[1])
             total = prefix + req.prompt_len + req.max_new_tokens
             ok = self.pool_t.can_admit(total)
             if ok and self.method == "sd":
@@ -484,6 +578,12 @@ class ServingEngine:
             self.pool_t.reserve(slot, total)
             if self.method == "sd":
                 self.pool_d.reserve(slot, total)
+        if (self.prefill_chunk is not None and self.kv_layout == "paged"
+                and not req.extra):
+            state.phase = PREFILLING
+            state.prefilled = 0
+            return True
+        t0 = time.perf_counter()
         batch = {"tokens": req.prompt[None, :]}
         if req.extra:
             batch.update(req.extra)
@@ -506,11 +606,84 @@ class ServingEngine:
         lp = jax.nn.log_softmax(logits[0, -1] / req.temperature)
         tok0 = int(jax.random.categorical(
             jax.random.fold_in(req.rng, 0), lp))
+        self._first_token(state, tok0)
+        self._stats.prefill_tokens += prefix + req.prompt_len
+        self._stats.prefill_s += time.perf_counter() - t0
+        return True
+
+    def _first_token(self, state: SlotState, tok0: int) -> None:
+        """Commit a freshly prefilled slot's first token (sampled from
+        the prompt's last-position logits with fold_in(rng, 0) — the
+        same draw on every admission path) and flip it to DECODING."""
         state.out.append(tok0)
         state.pending = tok0
+        state.phase = DECODING
+        state.ttft_rounds = self.scheduler.step_idx - state.submit_step
+        state.ttft_s = time.perf_counter() - state.submit_t
         self._stats.prefills += 1
         self._stats.tokens += 1
-        return True
+
+    def _prefill_step(self) -> None:
+        """Chunked-prefill work for this step: batched ``prefill_paged``
+        calls over every PREFILLING slot, one chunk per slot per call,
+        until the per-step token budget (or the prompts) run out. Page
+        growth is per chunk, always inside the slot's admission-time
+        reservation, so it can never exhaust the free list. A slot
+        whose prompt completes samples its first token from the final
+        chunk's last valid row — bitwise the staging path's draw."""
+        budget = self.prefill_budget or (1 << 30)
+        chunk = self.prefill_chunk
+        t0 = time.perf_counter()
+        sd = self.method == "sd"
+        while budget > 0:
+            pref = [(s, st) for s, st in self.scheduler.active()
+                    if st.phase == PREFILLING]
+            if not pref:
+                break
+            S = self.max_batch
+            tokens = np.zeros((S, chunk), np.int32)
+            nvalid = np.zeros((S,), np.int32)
+            lens = np.zeros((S,), np.int32)
+            work = []
+            for slot, st in pref:
+                n = min(chunk, st.request.prompt_len - st.prefilled, budget)
+                if n <= 0:
+                    continue                     # budget spent this call
+                tokens[slot, :n] = np.asarray(
+                    st.request.prompt[st.prefilled:st.prefilled + n])
+                nvalid[slot] = n
+                lens[slot] = st.prefilled
+                budget -= n
+                self.pool_t.ensure_blocks(slot, st.prefilled + n)
+                if sd:
+                    self.pool_d.ensure_blocks(slot, st.prefilled + n)
+                work.append((slot, st, n))
+            if not work:
+                break
+            fn = _prefill_chunk_fn(self.cfg_t, self.cfg_d if sd else None,
+                                   chunk, self.policy, self.max_len)
+            lg, pg_t, pg_d = fn(
+                self.params_t, self.params_d, self.pool_t.pages,
+                self.pool_t.device_tables(),
+                self.pool_d.pages if sd else None,
+                self.pool_d.device_tables() if sd else None,
+                jnp.asarray(lens), jnp.asarray(tokens), jnp.asarray(nvalid))
+            self.pool_t.pages = pg_t
+            if sd:
+                self.pool_d.pages = pg_d
+            for slot, st, n in work:
+                st.prefilled += n
+                self.pool_t.lens[slot] = st.prefilled    # commit the chunk
+                if sd:
+                    self.pool_d.lens[slot] = st.prefilled
+                self._stats.prefill_tokens += n
+                if st.prefilled == st.request.prompt_len:
+                    lp = jax.nn.log_softmax(
+                        lg[slot, n - 1] / st.request.temperature)
+                    tok0 = int(jax.random.categorical(
+                        jax.random.fold_in(st.request.rng, 0), lp))
+                    self._first_token(st, tok0)
+        self._stats.prefill_s += time.perf_counter() - t0
 
     def _round_inputs(self, alive):
         S = self.max_batch
@@ -747,4 +920,5 @@ class ServingEngine:
             request_id=st.request.request_id,
             tokens=np.asarray(st.out[:st.request.max_new_tokens], np.int32),
             prompt_len=st.request.prompt_len,
-            drafted=st.drafted, accepted=st.accepted, rounds=st.rounds)
+            drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
+            ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s)

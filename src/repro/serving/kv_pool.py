@@ -159,14 +159,19 @@ class PagedKVCachePool:
     for idle lanes land in sacrificial memory and no ``select_slots``
     restore pass is needed.
 
-    Allocation is by actual lengths — admit takes ceil(len/page) pages,
-    every round grows tables just enough for its gamma+1 writes, finish
-    returns everything — so total page memory can be provisioned below
-    ``n_slots * max_len`` (``n_pages=``); admission defers when the pool
-    is momentarily out of pages. Rollback after a rejected window is a
-    block-table truncation: lengths shrink, surplus pages return to the
-    free list, and the stale K/V left behind is causally invisible
-    (logical position > any live query) until overwritten.
+    Allocation is by actual lengths — admission reserves a request's
+    lifetime need up front (``can_admit``/``reserve``) but draws pages
+    only as content arrives: chunked prefill grows the table one chunk
+    at a time (``ensure_blocks`` per chunk, always inside the
+    reservation, so a partially-prefilled slot can never be starved by
+    its batch-mates), every decode round grows just enough for its
+    gamma+1 writes, finish returns everything — so total page memory
+    can be provisioned below ``n_slots * max_len`` (``n_pages=``);
+    admission defers when the pool is momentarily out of pages.
+    Rollback after a rejected window is a block-table truncation:
+    lengths shrink, surplus pages return to the free list, and the
+    stale K/V left behind is causally invisible (logical position > any
+    live query) until overwritten.
 
     Host-side state (tables, lengths, free list) is numpy; only the page
     arrays live on device.
@@ -263,8 +268,13 @@ class PagedKVCachePool:
 
     # -- admission ---------------------------------------------------------
     def write_prefill(self, slot: int, cache) -> None:
-        """Scatter a dense batch-1 prefilled cache into freshly allocated
-        pages (admission reuses the families' existing prefill)."""
+        """Staging fallback: scatter a dense batch-1 prefilled cache
+        into freshly allocated pages. The production admission path
+        prefills THROUGH the pool in chunks (``transformer.prefill_paged``
+        + per-chunk ``ensure_blocks`` — no dense staging buffer); this
+        remains for chunking disabled, requests with extra prefill
+        fields (VLM vision prefixes), and as the engine's
+        chunked == staged equivalence oracle."""
         length = min(int(cache["len"]), self.capacity)
         self.ensure_blocks(slot, length)
         nb = self._blocks_for(length)

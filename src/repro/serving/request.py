@@ -41,6 +41,10 @@ class ServeRequest:
     rng             : PRNGKey or int seed; the request's private stream.
     extra           : optional extra prefill-batch fields (e.g.
                       ``enc_frames`` for encoder-decoder families).
+    priority        : scheduling weight (higher admits sooner under the
+                      scheduler's "priority" policy; FIFO/SJF ignore
+                      it). Never affects the sampled tokens — only WHEN
+                      a request is admitted.
     """
 
     prompt: Any
@@ -48,12 +52,15 @@ class ServeRequest:
     temperature: float = 1.0
     rng: Any = 0
     extra: Optional[Dict[str, Any]] = None
+    priority: int = 0
     request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self):
         self.prompt = jnp.asarray(self.prompt, jnp.int32)
         if self.prompt.ndim != 1:
             raise ValueError("ServeRequest.prompt must be 1-D [P]")
+        if self.prompt.shape[0] < 1:
+            raise ValueError("ServeRequest.prompt must hold >= 1 token")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         self.rng = _as_key(self.rng)
@@ -73,6 +80,8 @@ class ServeResult:
     drafted: int            # draft tokens proposed for this request
     accepted: int           # draft tokens accepted by verification
     rounds: int             # propose-verify rounds this request rode in
+    ttft_rounds: int = 0    # engine steps from submission to first token
+    ttft_s: float = 0.0     # wall seconds from submission to first token
 
     @property
     def n(self) -> int:
@@ -89,7 +98,11 @@ class EngineStats:
 
     ``target_forwards`` counts the batched verify/decode rounds — the
     quantity the paper's speedup divides by (prefills are tracked
-    separately, as in the single-request accounting).
+    separately, as in the single-request accounting). ``prefills``
+    counts requests whose prompt finished prefilling; ``prefill_tokens``
+    is the prompt-token figure that makes prefill throughput honest
+    (``prefill_tokens / prefill_s``), accumulated by both the chunked
+    paged admission and the dense-staging fallback.
     """
 
     requests_completed: int = 0
@@ -98,7 +111,9 @@ class EngineStats:
     accepted: int = 0
     target_forwards: int = 0     # batched verify/decode rounds
     draft_forwards: int = 0      # batched draft steps
-    prefills: int = 0
+    prefills: int = 0            # requests fully prefilled
+    prefill_tokens: int = 0      # prompt (+prefix) tokens prefilled
+    prefill_s: float = 0.0       # wall seconds spent in prefill work
     wall_s: float = 0.0
 
     @property
@@ -114,9 +129,15 @@ class EngineStats:
     def tokens_per_sec(self) -> float:
         return self.tokens / max(1e-9, self.wall_s)
 
+    @property
+    def prefill_tokens_per_sec(self) -> float:
+        return self.prefill_tokens / max(1e-9, self.prefill_s)
+
     def describe(self) -> str:
         return (f"requests={self.requests_completed} tokens={self.tokens} "
                 f"target_fwds={self.target_forwards} "
                 f"alpha={self.acceptance_rate:.2f} "
                 f"tok/fwd={self.tokens_per_forward:.2f} "
-                f"tok/s={self.tokens_per_sec:.1f}")
+                f"tok/s={self.tokens_per_sec:.1f} "
+                f"prefill_tok={self.prefill_tokens} "
+                f"prefill_tok/s={self.prefill_tokens_per_sec:.1f}")

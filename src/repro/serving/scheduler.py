@@ -1,21 +1,46 @@
-"""Continuous-batching scheduler: a FIFO queue feeding ``max_batch``
-KV-cache slots.
+"""Continuous-batching scheduler: a policy-ordered queue feeding
+``max_batch`` KV-cache slots.
 
 The scheduler is pure bookkeeping — it never touches models or device
-arrays, so its policies (admission order, slot reuse, per-slot budgets)
-are unit-testable without JAX. The engine drives it:
+arrays, so its policies (admission order, deferral, aging) are
+unit-testable without JAX. Admission order is pluggable through
+``SchedulingPolicy``:
 
-    admit() -> [(slot, request)]   at the top of every step
+  - ``fifo``     — submission order; engine-deferred re-admissions rank
+                   ahead of the queue in their original order (the
+                   bitwise default: identical to the historical
+                   FIFO-with-deferral behavior).
+  - ``priority`` — higher ``ServeRequest.priority`` first, FIFO among
+                   equals, with aging: a waiting request's effective
+                   priority rises by one every ``aging`` scheduler
+                   steps, so a request ``g`` levels below the steady
+                   arrival priority is admitted within ``g * aging``
+                   steps of becoming the oldest waiter (the starvation
+                   bound the unit tests pin).
+  - ``sjf``      — shortest job (prompt + budget tokens) first, FIFO
+                   tie-break.
+
+The engine drives it:
+
+    tick()                          at the top of every step
+    admit() -> [(slot, SlotState)]  policy-ordered placements
     active() -> [(slot, SlotState)]
-    retire(slot) -> SlotState      when a request's budget is spent
+    defer(slot)                     undo an admission (no pages yet)
+    retire(slot) -> SlotState       when a request's budget is spent
 """
 from __future__ import annotations
 
-from collections import deque
+import itertools
+import time
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 from .request import ServeRequest
+
+#: Slot phases: a slot is PREFILLING while its prompt streams into the
+#: paged pool in chunks, DECODING once the first token is committed.
+PREFILLING = "prefill"
+DECODING = "decode"
 
 
 @dataclass
@@ -30,32 +55,139 @@ class SlotState:
     drafted: int = 0
     accepted: int = 0
     rounds: int = 0
+    # chunked-prefill admission: the prompt streams into the paged pool
+    # in chunks while phase == PREFILLING; ``prefilled`` counts prompt
+    # tokens already committed to the pool
+    phase: str = DECODING
+    prefilled: int = 0
+    # accounting carried over from the queue entry
+    seq: int = 0          # admission-order stamp (policy tie-break)
+    submit_step: int = 0
+    submit_t: float = 0.0
+    ttft_rounds: int = 0  # engine steps from submission to first token
+    ttft_s: float = 0.0
 
     @property
     def done(self) -> bool:
-        return len(self.out) >= self.request.max_new_tokens
+        return (self.phase == DECODING
+                and len(self.out) >= self.request.max_new_tokens)
+
+
+@dataclass
+class _QueueEntry:
+    """One queued (or engine-deferred) request with its policy inputs."""
+
+    request: ServeRequest
+    seq: int
+    submit_step: int
+    submit_t: float
+    deferred: bool = False
+
+
+class SchedulingPolicy:
+    """Admission-ordering policy: a pure sort key over queue entries.
+
+    ``key(entry, step)`` returns a tuple; entries sort ascending and the
+    smallest key is admitted first. Policies are stateless — everything
+    they rank on lives in the entry (request, seq, submit_step, deferred
+    flag) and the scheduler's step counter, which is what keeps them
+    model-free and unit-testable.
+    """
+
+    name = "base"
+
+    def key(self, entry: _QueueEntry, step: int) -> Tuple:
+        raise NotImplementedError
+
+
+class FifoPolicy(SchedulingPolicy):
+    """Strict submission order; deferred re-admissions first, in their
+    original order (they are always older than anything still queued,
+    so this reproduces the historical deferred-then-queue behavior
+    bitwise)."""
+
+    name = "fifo"
+
+    def key(self, entry: _QueueEntry, step: int) -> Tuple:
+        return (0 if entry.deferred else 1, entry.seq)
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Highest ``request.priority`` first, FIFO among equals, with
+    aging as the starvation bound: effective priority grows by one per
+    ``aging`` steps waited, so no request waits more than
+    ``(gap to the highest steady arrival priority) * aging`` steps once
+    it is the oldest waiter."""
+
+    name = "priority"
+
+    def __init__(self, aging: int = 8):
+        if aging < 1:
+            raise ValueError("aging must be >= 1")
+        self.aging = aging
+
+    def key(self, entry: _QueueEntry, step: int) -> Tuple:
+        waited = max(0, step - entry.submit_step)
+        effective = entry.request.priority + waited // self.aging
+        return (-effective, 0 if entry.deferred else 1, entry.seq)
+
+
+class SJFPolicy(SchedulingPolicy):
+    """Shortest job first — job length = prompt + token budget (the
+    slot-occupancy a request will cost) — with FIFO tie-break."""
+
+    name = "sjf"
+
+    def key(self, entry: _QueueEntry, step: int) -> Tuple:
+        req = entry.request
+        return (req.prompt_len + req.max_new_tokens,
+                0 if entry.deferred else 1, entry.seq)
+
+
+POLICIES = {"fifo": FifoPolicy, "priority": PriorityPolicy,
+            "sjf": SJFPolicy}
+
+
+def resolve_sched_policy(
+        policy: Union[str, SchedulingPolicy]) -> SchedulingPolicy:
+    """A ``SchedulingPolicy`` instance from a name or a pass-through."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    if policy in POLICIES:
+        return POLICIES[policy]()
+    raise ValueError(f"unknown scheduling policy {policy!r}; expected "
+                     f"one of {sorted(POLICIES)} or a SchedulingPolicy")
 
 
 class Scheduler:
-    """FIFO admission into a fixed pool of ``max_batch`` slots.
+    """Policy-ordered admission into a fixed pool of ``max_batch`` slots.
 
     A request is admitted the moment a slot is free (continuous
     batching): slots freed by a completed request are refilled at the
     next ``admit()`` call, so the batch stays as full as the queue
-    allows instead of draining between "generations".
+    allows instead of draining between "generations". One pending list
+    holds queued and engine-deferred requests alike; the policy's sort
+    key decides who lands next (deferral is just a flag the key may
+    rank on).
     """
 
-    def __init__(self, max_batch: int, max_len: int):
+    def __init__(self, max_batch: int, max_len: int,
+                 policy: Union[str, SchedulingPolicy] = "fifo"):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
         self.max_len = max_len
-        self.queue: Deque[ServeRequest] = deque()
-        # admissions the engine undid (e.g. no KV pages free yet); they
-        # are older than anything in ``queue`` and re-admit first, in
-        # their original order
-        self.deferred: Deque[ServeRequest] = deque()
+        self.policy = resolve_sched_policy(policy)
+        self.pending: List[_QueueEntry] = []
         self.slots: List[Optional[SlotState]] = [None] * max_batch
+        self.step_idx = 0
+        self._seq = itertools.count()
+
+    def tick(self) -> int:
+        """Advance the step counter (aging input); one call per engine
+        step, before ``admit()``."""
+        self.step_idx += 1
+        return self.step_idx
 
     # -- queue side --------------------------------------------------------
     def submit(self, req: ServeRequest) -> int:
@@ -65,29 +197,34 @@ class Scheduler:
                 f"request {req.request_id}: prompt ({req.prompt_len}) + "
                 f"max_new_tokens ({req.max_new_tokens}) exceeds the "
                 f"engine's max_len ({self.max_len})")
-        self.queue.append(req)
+        self.pending.append(_QueueEntry(
+            request=req, seq=next(self._seq), submit_step=self.step_idx,
+            submit_t=time.perf_counter()))
         return req.request_id
 
     @property
     def pending_count(self) -> int:
-        return len(self.queue) + len(self.deferred)
+        return len(self.pending)
 
     # -- slot side ---------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def admit(self) -> List[Tuple[int, SlotState]]:
-        """Fill free slots — deferred re-admissions first, then the
-        queue head (strict FIFO across both)."""
+        """Fill free slots in policy order (one sort per call; the keys
+        only depend on the current step)."""
         placed = []
-        for i in self.free_slots():
-            if self.deferred:
-                req = self.deferred.popleft()
-            elif self.queue:
-                req = self.queue.popleft()
-            else:
+        free = self.free_slots()
+        if not free or not self.pending:
+            return placed
+        self.pending.sort(key=lambda e: self.policy.key(e, self.step_idx))
+        for i in free:
+            if not self.pending:
                 break
-            self.slots[i] = SlotState(request=req, slot=i)
+            e = self.pending.pop(0)
+            self.slots[i] = SlotState(
+                request=e.request, slot=i, seq=e.seq,
+                submit_step=e.submit_step, submit_t=e.submit_t)
             placed.append((i, self.slots[i]))
         return placed
 
@@ -104,12 +241,15 @@ class Scheduler:
     def defer(self, slot: int) -> None:
         """Undo an admission: the engine could not back the slot with
         resources (e.g. the paged KV pool is momentarily out of pages).
-        The request joins the deferred list — ahead of the queue and in
-        original order even when several admissions defer in one step —
-        and retries when pages free up."""
+        The request re-enters the pending list flagged ``deferred`` with
+        its original stamps, so FIFO re-admits it ahead of the queue in
+        original order and aging policies keep its accumulated wait."""
         state = self.retire(slot)
-        self.deferred.append(state.request)
+        self.pending.append(_QueueEntry(
+            request=state.request, seq=state.seq,
+            submit_step=state.submit_step, submit_t=state.submit_t,
+            deferred=True))
 
     def has_work(self) -> bool:
-        return (bool(self.queue) or bool(self.deferred)
+        return (bool(self.pending)
                 or any(s is not None for s in self.slots))

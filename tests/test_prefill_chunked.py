@@ -1,0 +1,335 @@
+"""Chunked-paged prefill == dense-staging prefill, token-bitwise.
+
+PR 5 routes admission THROUGH the paged pool: prompts stream in as
+fixed-size chunks (``transformer.prefill_paged``) instead of staging a
+dense batch-1 prefill and scattering it. These tests pin that the
+committed token streams do not move by a bit — on the reference kernels
+AND in Pallas interpret mode, including MoE (capacity never binding),
+rejection-driven rollback right after a chunked admission, per-step
+prefill budgets (mixed prefill+decode rounds), and deferral under page
+pressure with long prompts. Also pins the kernel's query-block tiling:
+a tiled chunk computes exactly the untiled chunk.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import ServeRequest, ServingEngine
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+def _serve(cfg_t, cfg_d, pt, pd, n_req=8, max_batch=4, max_len=64,
+           gamma=4, plen=5, **engine_kw):
+    """The standard mixed-budget workload; tokens by submit order."""
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=max_batch,
+                        max_len=max_len, gamma=gamma, **engine_kw)
+    order = []
+    for i in range(n_req):
+        order.append(eng.submit(ServeRequest(
+            prompt=jnp.arange(plen, dtype=jnp.int32),
+            max_new_tokens=5 + i, rng=100 + i,
+            temperature=1.0 + 0.1 * (i % 3))))
+    by_id = {r.request_id: r for r in eng.run()}
+    return eng, [np.asarray(by_id[rid].tokens) for rid in order], \
+        [by_id[rid] for rid in order]
+
+
+# ---------------------------------------------------------------------------
+# chunked == one-shot staging, token-bitwise
+# ---------------------------------------------------------------------------
+
+def test_chunked_ref_matches_staging_bitwise(dense_pair):
+    """chunk=3 over 5-token prompts (one full + one padded partial
+    chunk) must commit EXACTLY the staging engine's streams — the
+    workload has draft != target, so rejection rollback runs right
+    after chunked admissions."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng_s, toks_s, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                              kernel="ref")
+    eng_c, toks_c, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                              kernel="ref", prefill_chunk=3)
+    for a, b in zip(toks_s, toks_c):
+        np.testing.assert_array_equal(a, b)
+    assert eng_s.stats().accepted == eng_c.stats().accepted
+    # the staging buffer is gone: no dense prefill compiled, yet the
+    # prefill token accounting agrees
+    assert eng_c.stats().prefill_tokens == 8 * 5
+    assert len(eng_c.pool_t.free) == eng_c.pool_t.n_pages - 1
+
+
+def test_chunked_matches_dense_layout_bitwise(dense_pair):
+    """Transitivity made explicit: chunked-paged == the legacy dense
+    per-slot layout (the PR4 oracle), not just == paged staging."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    _, toks_d, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="dense",
+                          kernel="ref")
+    _, toks_c, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                          kernel="ref", prefill_chunk=2)
+    for a, b in zip(toks_d, toks_c):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chunked_pallas_matches_staging_pallas(dense_pair):
+    """The production configuration: chunked admission under the Pallas
+    spec-verify kernel (interpret on CPU) == one-shot staging under the
+    same kernel, bitwise."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    _, toks_s, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                          kernel="pallas")
+    eng_c, toks_c, _ = _serve(cfg_t, cfg_d, pt, pd, kv_layout="paged",
+                              kernel="pallas", prefill_chunk=3)
+    assert eng_c.policy.use_pallas
+    for a, b in zip(toks_s, toks_c):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_chunked_moe_matches_staging(dense_pair):
+    """MoE: per-sequence dispatch + non-binding capacity
+    (capacity_factor >= E/K) keeps chunked == one-shot bitwise — the
+    drop pattern is the only group-shape-dependent quantity."""
+    kw = dict(family="moe", num_experts=4, num_experts_per_tok=2,
+              capacity_factor=2.0)
+    cfg_t = _dense(2, name="moe-ct", **kw)
+    cfg_d = _dense(1, name="moe-cd", **kw)
+    pt = registry.get_model(cfg_t).init_params(RNG)
+    pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    _, toks_s, _ = _serve(cfg_t, cfg_d, pt, pd, n_req=4, kv_layout="paged",
+                          kernel="ref")
+    _, toks_c, _ = _serve(cfg_t, cfg_d, pt, pd, n_req=4, kv_layout="paged",
+                          kernel="ref", prefill_chunk=2)
+    for a, b in zip(toks_s, toks_c):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_ar_chunked_matches_staging(dense_pair):
+    cfg_t, _, pt, _ = dense_pair
+
+    def run(**kw):
+        eng = ServingEngine(cfg_t, pt, method="ar", max_batch=2,
+                            max_len=64, kv_layout="paged", kernel="ref",
+                            **kw)
+        order = [eng.submit(ServeRequest(
+            prompt=jnp.arange(7, dtype=jnp.int32), max_new_tokens=6,
+            rng=7 + i)) for i in range(3)]
+        by_id = {r.request_id: r for r in eng.run()}
+        return [np.asarray(by_id[rid].tokens) for rid in order]
+
+    for a, b in zip(run(), run(prefill_chunk=4)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# mixed rounds under a prefill budget
+# ---------------------------------------------------------------------------
+
+def test_prefill_budget_spreads_ttft_not_lengths(dense_pair):
+    """A tight per-step budget makes long prompts take several steps to
+    admit (mixed prefill+decode rounds): TTFT moves, every budget is
+    still honored, and the prefill-token accounting is identical.
+    (Streams are NOT compared bitwise here: a budget changes which
+    slots share a round, and the batch window clamp — max remaining
+    budget over the batch — legitimately shifts round boundaries; the
+    per-request rng contract keeps the distribution identical, which
+    test_serving.py pins.)"""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    kw = dict(max_batch=2, max_len=64, gamma=3, plen=16, n_req=4,
+              kv_layout="paged", kernel="ref")
+    eng_f, toks_fast, res_fast = _serve(cfg_t, cfg_d, pt, pd,
+                                        prefill_chunk=4, **kw)
+    eng_s, toks_slow, res_slow = _serve(cfg_t, cfg_d, pt, pd,
+                                        prefill_chunk=4, prefill_budget=4,
+                                        **kw)
+    for i, (a, b) in enumerate(zip(toks_fast, toks_slow)):
+        assert len(a) == len(b) == 5 + i
+    assert eng_f.stats().prefill_tokens == eng_s.stats().prefill_tokens \
+        == 4 * 16
+    # unbudgeted: a prompt admits within its admission step
+    assert res_fast[0].ttft_rounds == 1
+    # budget 4 tok/step over a 16-token prompt: >= 4 steps of chunk
+    # work before the first token of request 0
+    assert res_slow[0].ttft_rounds > res_fast[0].ttft_rounds
+    assert res_slow[0].ttft_rounds >= 4
+
+
+def test_decode_rounds_run_beside_prefilling_slots(dense_pair):
+    """While one slot is still streaming its prompt (budgeted), the
+    other slot must keep committing tokens — the mixed-round core."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=64,
+                        gamma=3, kv_layout="paged", kernel="ref",
+                        prefill_chunk=4, prefill_budget=4)
+    fast = eng.submit(ServeRequest(prompt=jnp.arange(4, dtype=jnp.int32),
+                                   max_new_tokens=12, rng=1))
+    slow = eng.submit(ServeRequest(prompt=jnp.arange(24, dtype=jnp.int32),
+                                   max_new_tokens=4, rng=2))
+    progressed_together = False
+    while eng.scheduler.has_work():
+        eng.step()
+        phases = {st.request.request_id: st.phase
+                  for _, st in eng.scheduler.active()}
+        outs = {st.request.request_id: len(st.out)
+                for _, st in eng.scheduler.active()}
+        if (phases.get(slow) == "prefill" and outs.get(fast, 0) > 1):
+            progressed_together = True
+    assert progressed_together
+    by_id = {r.request_id: r for r in eng._results}
+    assert by_id[fast].n == 12 and by_id[slow].n == 4
+    # the long prompt took several budgeted steps to reach token 1
+    assert by_id[slow].ttft_rounds >= 24 // 4 - 1
+
+
+# ---------------------------------------------------------------------------
+# long prompts under page pressure (deferral regression)
+# ---------------------------------------------------------------------------
+
+def test_long_prompts_under_page_pressure_defer_and_complete(dense_pair):
+    """Under-provisioned pool + long prompts + chunked admission: the
+    lifetime reservation still caps concurrency, deferred requests land
+    as pages free, the pool drains clean — and because chunked and
+    staged admission produce the SAME deferral schedule (reservations
+    are taken before any prefill work on both paths), the tight chunked
+    engine is token-bitwise the tight staged engine."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+    kw = dict(max_batch=4, max_len=64, gamma=3, kv_layout="paged",
+              kernel="ref", page_size=8, n_pages=9)   # 8 usable pages
+
+    def run(**extra):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, **kw, **extra)
+        order = [eng.submit(ServeRequest(
+            prompt=jnp.arange(24, dtype=jnp.int32), max_new_tokens=8,
+            rng=50 + i)) for i in range(5)]
+        max_active = 0
+        while eng.scheduler.has_work():
+            eng.step()
+            max_active = max(max_active, len(eng.scheduler.active()))
+        by_id = {r.request_id: r for r in eng._results}
+        return eng, [np.asarray(by_id[rid].tokens) for rid in order], \
+            max_active
+
+    eng_stg, toks_stg, act_stg = run()
+    eng_chk, toks_chk, act_chk = run(prefill_chunk=8)
+    # each request reserves ceil((24+8)/8) = 4 pages -> 2 concurrent
+    assert act_stg == act_chk == 2
+    for a, b in zip(toks_stg, toks_chk):
+        np.testing.assert_array_equal(a, b)
+    for eng in (eng_stg, eng_chk):
+        assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1
+        assert len(eng.pool_d.free) == eng.pool_d.n_pages - 1
+        assert len(eng._results) == 5
+        for r in eng._results:
+            assert r.n == 8
+
+
+# ---------------------------------------------------------------------------
+# accounting + validation
+# ---------------------------------------------------------------------------
+
+def test_prefill_token_and_ttft_accounting(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng, _, results = _serve(cfg_t, cfg_d, pt, pd, n_req=6, plen=5,
+                             kv_layout="paged", kernel="ref",
+                             prefill_chunk=3)
+    st = eng.stats()
+    assert st.prefills == 6
+    assert st.prefill_tokens == 6 * 5
+    assert st.prefill_s > 0.0
+    assert st.prefill_tokens_per_sec > 0.0
+    for r in results:
+        assert r.ttft_rounds >= 1
+        assert r.ttft_s > 0.0
+    # staging path accounts the same token figure
+    eng_s, _, _ = _serve(cfg_t, cfg_d, pt, pd, n_req=6, plen=5,
+                         kv_layout="paged", kernel="ref")
+    assert eng_s.stats().prefill_tokens == 6 * 5
+
+
+def test_chunked_requires_paged_layout(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg_t, pt, cfg_d, pd, kv_layout="dense",
+                      prefill_chunk=4)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingEngine(cfg_t, pt, cfg_d, pd, prefill_chunk=0)
+
+
+def test_sched_policies_thread_through_engine(dense_pair):
+    """Policies change completion ORDER, never a request's tokens: under
+    sjf with one slot the short job must finish first even when
+    submitted last, and both streams equal their fifo twins."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+
+    def run(sched):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=1, max_len=64,
+                            gamma=3, kv_layout="paged", kernel="ref",
+                            sched=sched)
+        long_id = eng.submit(ServeRequest(
+            prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=12,
+            rng=11))
+        short_id = eng.submit(ServeRequest(
+            prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=3,
+            rng=12, priority=7))
+        res = eng.run()
+        by_id = {r.request_id: r for r in res}
+        first = "long" if res[0].request_id == long_id else "short"
+        return first, (np.asarray(by_id[long_id].tokens),
+                       np.asarray(by_id[short_id].tokens))
+
+    first_fifo, toks_fifo = run("fifo")
+    first_sjf, toks_sjf = run("sjf")
+    first_prio, toks_prio = run("priority")
+    assert first_fifo == "long"           # fifo: submission order
+    assert first_sjf == "short"           # sjf runs the short job first
+    assert first_prio == "short"          # priority=7 also jumps ahead
+    for a, b in zip(toks_fifo, toks_sjf):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(toks_fifo, toks_prio):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# kernel: query-block tiling is exact
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_kernel_query_tiling_is_exact():
+    """Tiling the query axis (long prefill chunks) must not move a bit:
+    every query sweeps the same pages in the same order."""
+    from repro.kernels.spec_verify_attention import (
+        spec_verify_attention_pallas, spec_verify_attention_ref)
+    S, C, H, KV, Dh, page, NB = 2, 12, 4, 2, 8, 4, 8
+    P = S * NB + 1
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (S, C, H, Dh))
+    k_pages = jax.random.normal(ks[1], (P, page, KV, Dh))
+    v_pages = jax.random.normal(ks[2], (P, page, KV, Dh))
+    bt = jnp.arange(1, S * NB + 1, dtype=jnp.int32).reshape(S, NB)
+    lens = jnp.asarray([5, 11], jnp.int32)
+    full = spec_verify_attention_pallas(q, k_pages, v_pages, bt, lens,
+                                        interpret=True)
+    for bq in (4, 5, 16):                 # divides, ragged, over-sized
+        tiled = spec_verify_attention_pallas(q, k_pages, v_pages, bt, lens,
+                                             interpret=True, bq=bq)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(tiled))
+    ref = spec_verify_attention_ref(q, k_pages, v_pages, bt, lens)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
