@@ -38,6 +38,39 @@ def emit(name: str, us_per_call: float, derived: str):
     print(line, flush=True)
 
 
+_INTERP_WARNED = False
+
+
+def accel_meta() -> Dict[str, object]:
+    """Backend/interpret stamp for every BENCH_*.json entry, so a row
+    measured under pallas-interpret on CPU can never be compared against
+    a compiled-TPU row as if they shared hardware."""
+    from repro.kernels.policy import on_tpu
+    return {"backend": jax.default_backend(), "interpret": not on_tpu()}
+
+
+def stamp_bench(rows: Dict) -> Dict:
+    """Stamp ``accel_meta`` onto the table dict AND every per-entry
+    sub-dict; print one warning row when the numbers come from
+    pallas-interpret on CPU (correctness-path cost, not hardware speed
+    — e.g. the known paged-vs-dense CPU gap is an interpret artifact,
+    not a perf trajectory)."""
+    global _INTERP_WARNED
+    meta = accel_meta()
+    for v in rows.values():
+        if isinstance(v, dict):
+            v.update(meta)
+    rows.update(meta)
+    if meta["interpret"] and not _INTERP_WARNED:
+        _INTERP_WARNED = True
+        emit("warning/pallas_interpret", 0.0,
+             f"backend={meta['backend']};interpret=True;"
+             "note=pallas kernels ran in interpret mode (no TPU): "
+             "timings measure the correctness path and must not be "
+             "read as a hardware perf trajectory")
+    return rows
+
+
 # ---------------------------------------------------------------------------
 # shared helpers
 # ---------------------------------------------------------------------------
@@ -436,7 +469,7 @@ def kernels_microbench(args):
              f"N={N};M={M}")
 
     with open("BENCH_kernels.json", "w") as f:
-        json.dump(rows, f, indent=2, sort_keys=True)
+        json.dump(stamp_bench(rows), f, indent=2, sort_keys=True)
     print("# wrote BENCH_kernels.json")
 
 
@@ -524,9 +557,94 @@ def serving_throughput(args):
              f"tok_per_sec={st.tokens_per_sec:.1f};"
              f"prompt_len={plen};requests={n_req}")
 
+    _merge_bench_serving(bench)
+
+
+def _merge_bench_serving(rows: Dict) -> None:
+    """Merge (not overwrite) rows into ``BENCH_serving.json`` so the
+    serving and prefix workloads can run as separate ``--only`` legs
+    and still land in one file."""
+    import json
+    import os
+    out = {}
+    if os.path.exists("BENCH_serving.json"):
+        try:
+            with open("BENCH_serving.json") as f:
+                out = json.load(f)
+        except (OSError, ValueError):
+            out = {}
+    out.update(stamp_bench(rows))
     with open("BENCH_serving.json", "w") as f:
-        json.dump(bench, f, indent=2, sort_keys=True)
+        json.dump(out, f, indent=2, sort_keys=True)
     print("# wrote BENCH_serving.json")
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache + scenario fan-out: prefill tokens saved by sharing
+# ---------------------------------------------------------------------------
+
+def prefix_fanout(args):
+    """``--only prefix``: a shared-prompt forecasting-style workload —
+    groups of fanout-K rollouts over one 96-token prompt — run with the
+    radix prefix cache on vs off. Reports ``prefix_hit_tokens`` (prompt
+    tokens served from shared COW pages instead of prefilled) and the
+    prefill tokens saved by turning the cache on; rows merge into
+    ``BENCH_serving.json`` next to the serving-throughput entries."""
+    from repro.configs import get_arch, smoke_variant
+    from repro.models import registry as zoo
+    from repro.serving import ServeRequest, ServingEngine
+
+    cfg_t = smoke_variant(get_arch("llama3.2-1b")).replace(num_layers=4)
+    cfg_d = cfg_t.replace(num_layers=1)
+    pt = zoo.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = zoo.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    plen, fanout, n_groups = 96, 4, 2          # 8 requests total
+    prompt = jnp.arange(plen, dtype=jnp.int32) % cfg_t.vocab_size
+    new_tokens = 16 if args.quick else 32
+    gamma = 4
+
+    def run(cache_on):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=4, max_len=256,
+                            gamma=gamma, kv_layout="paged",
+                            prefill_chunk=32, prefix_cache=cache_on)
+        for g in range(n_groups):
+            eng.submit(ServeRequest(prompt=prompt,
+                                    max_new_tokens=new_tokens,
+                                    rng=100 + g), fanout=fanout)
+        res = eng.run()
+        return eng, eng.stats(), res
+
+    run(True)                                   # compile
+    eng_on, on, res_on = run(True)
+    _, off, res_off = run(False)
+    # fan-out forking is on in BOTH runs (it rides the COW pool, not the
+    # cache); the cache adds CROSS-group sharing, so cache-on must
+    # prefill strictly fewer prompt tokens
+    saved = off.prefill_tokens - on.prefill_tokens
+    toks_on = sorted(tuple(map(int, r.tokens)) for r in res_on)
+    toks_off = sorted(tuple(map(int, r.tokens)) for r in res_off)
+    assert toks_on == toks_off, \
+        "prefix cache changed the sampled streams (bitwise contract)"
+    assert on.prefix_hit_tokens > 0, "prefix workload produced no hits"
+    assert saved > 0, "prefix cache saved no prefill tokens"
+    bench = {"prefix_fanout": {
+        "prompt_len": plen, "requests": n_groups * fanout,
+        "fanout": fanout, "gamma": gamma,
+        "prefix_hit_tokens": on.prefix_hit_tokens,
+        "prefix_hit_rate": on.prefix_hit_rate,
+        "prefill_tokens_cache_on": on.prefill_tokens,
+        "prefill_tokens_cache_off": off.prefill_tokens,
+        "prefill_tokens_saved": saved,
+        "cow_copies": eng_on.pool_t.cow_copies,
+        "tok_per_sec": on.tokens_per_sec}}
+    emit("serving/prefix_fanout", 1e6 / max(on.tokens_per_sec, 1e-9),
+         f"prefix_hit_tokens={on.prefix_hit_tokens};"
+         f"prefix_hit_rate={on.prefix_hit_rate:.2f};"
+         f"prefill_saved={saved};"
+         f"prefill_on={on.prefill_tokens};prefill_off={off.prefill_tokens};"
+         f"cow_copies={eng_on.pool_t.cow_copies};"
+         f"prompt_len={plen};requests={n_groups * fanout};fanout={fanout}")
+    _merge_bench_serving(bench)
 
 
 # ---------------------------------------------------------------------------
@@ -642,6 +760,7 @@ TABLES = {
     "appendix_d1": appendix_d1_thinning,
     "kernels": kernels_microbench,
     "serving": serving_throughput,
+    "prefix": prefix_fanout,
     "sharded": sharded_scaling,
 }
 

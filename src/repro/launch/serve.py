@@ -44,7 +44,8 @@ def build_engine(args):
         kv_layout=args.kv_layout, kernel=args.kernel,
         page_size=args.page_size, sched=args.sched,
         prefill_chunk=args.prefill_chunk or None,
-        prefill_budget=args.prefill_budget or None)
+        prefill_budget=args.prefill_budget or None,
+        prefix_cache=args.prefix_cache == "on")
 
 
 def main():
@@ -86,6 +87,18 @@ def main():
                     default=0,
                     help="max prefill tokens per engine step across all "
                          "admitting slots (0 = unlimited)")
+    ap.add_argument("--fanout", type=int, default=1,
+                    help="scenario rollouts per submitted prompt: each "
+                         "request fans into K members that FORK the "
+                         "admitted prompt's KV pages (copy-on-write) "
+                         "with independent fold_in rng streams")
+    ap.add_argument("--prefix-cache", dest="prefix_cache", default="off",
+                    choices=["on", "off"],
+                    help="radix prefix cache over retired prompt pages: "
+                         "admissions adopt the longest cached page run "
+                         "and prefill only the tail (requires the paged "
+                         "KV layout; implies --prefill-chunk 32 when "
+                         "chunking is off)")
     ap.add_argument("--priorities", default="0",
                     help="CSV of request priorities, cycled across "
                          "--requests (ranked by --sched priority)")
@@ -103,6 +116,7 @@ def main():
           f"method={args.method}, gamma={args.gamma}, "
           f"policy={args.draft_policy}, sched={args.sched}, "
           f"prefill_chunk={args.prefill_chunk or 'off'}, "
+          f"prefix_cache={args.prefix_cache}, fanout={args.fanout}, "
           f"max_batch={args.max_batch}, requests={args.requests})")
     for r in range(args.requests):
         prompt = jax.random.randint(
@@ -111,7 +125,8 @@ def main():
         engine.submit(ServeRequest(prompt=prompt,
                                    max_new_tokens=args.new_tokens,
                                    rng=100 + r,
-                                   priority=prios[r % len(prios)]))
+                                   priority=prios[r % len(prios)]),
+                      fanout=args.fanout)
     results = []
     while engine.scheduler.has_work():
         for res in engine.step():
@@ -133,6 +148,9 @@ def main():
     print(f"admission: prefill_tokens={st.prefill_tokens} "
           f"prefill_tok_per_sec={st.prefill_tokens_per_sec:.0f} "
           f"ttft_p50={p50 * 1e3:.0f}ms ttft_p95={p95 * 1e3:.0f}ms")
+    print(f"prefix sharing: hit_rate={st.prefix_hit_rate:.2f} "
+          f"({st.prefix_hits}/{st.prefix_lookups} admissions) "
+          f"prefix_hit_tokens={st.prefix_hit_tokens}")
 
 
 if __name__ == "__main__":

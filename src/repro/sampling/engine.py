@@ -25,7 +25,10 @@ Execution lowering:
 RNG contract: every executor derives lane keys as
 ``jax.random.split(rng, spec.batch)`` — so host, jit (batch=1), vmap and
 sharded execution of the same spec consume identical per-lane streams
-and produce identical sequences.
+and produce identical sequences. With ``spec.fanout=K`` each base lane
+fans into K scenario streams ``fold_in(base_lane, k)`` (the serving
+engine's fan-out convention), giving ``batch * fanout`` lanes whose
+member k is bitwise the fanout=1 run seeded with its folded key.
 
 Built callables are cached per (spec, model-bundle identity, mesh) so
 repeated calls reuse compilations.
@@ -150,6 +153,20 @@ class SamplingEngine:
 
         bundle = ModelBundle(cfg_t, params_t, cfg_d, params_d)
 
+        def lane_keys(rng):
+            """[batch * fanout] lane keys: split over base lanes, then
+            fold_in over the K scenario streams of each. fanout=1 keeps
+            the raw split keys — bitwise the historical streams."""
+            base = jax.random.split(rng, spec.batch)
+            if spec.fanout == 1:
+                return base
+            ks = jax.vmap(lambda r: jax.vmap(
+                lambda k: jax.random.fold_in(r, k))(
+                    jnp.arange(spec.fanout)))(base)
+            return ks.reshape((spec.batch * spec.fanout,) + ks.shape[2:])
+
+        n_lanes = spec.batch * spec.fanout
+
         if spec.execution == "host":
             single = strat.build_host(spec, bundle)
 
@@ -157,8 +174,7 @@ class SamplingEngine:
                 # ALWAYS split (even at batch=1): host lane i and vmap
                 # lane i consume the same key, so the two executors agree
                 # exactly at every batch size.
-                rngs = jax.random.split(rng, spec.batch)
-                return stack_seqs([single(r) for r in rngs])
+                return stack_seqs([single(r) for r in lane_keys(rng)])
             return host_fn
 
         single = strat.build_device(spec, bundle)
@@ -172,20 +188,18 @@ class SamplingEngine:
 
         mapped = jax.vmap(single)
         if spec.execution == "vmap":
-            return lambda rng: batch_from_mapped(
-                mapped(jax.random.split(rng, spec.batch)))
+            return lambda rng: batch_from_mapped(mapped(lane_keys(rng)))
 
         # sharded: the vmapped loop jitted with explicit in/out shardings
         # — the seed batch (and therefore every per-lane buffer) is
         # partitioned over the mesh's data axis; params keep the logical
         # placement applied above.
-        rng_struct = jax.eval_shape(
-            lambda k: jax.random.split(k, spec.batch), jax.random.PRNGKey(0))
+        rng_struct = jax.eval_shape(lane_keys, jax.random.PRNGKey(0))
         in_sh = rules.sharding(
             ("batch",) + (None,) * (len(rng_struct.shape) - 1),
             dims=tuple(rng_struct.shape))
         n_data = rules.rule_axis_size("batch")
-        if spec.batch % n_data != 0:
+        if n_lanes % n_data != 0:
             # report what the fallback actually did: the rules shorten
             # the axis list before giving up, so on a multi-axis batch
             # rule (e.g. ("pod", "data")) the batch may still be
@@ -196,10 +210,10 @@ class SamplingEngine:
                       f"sharding it only over {got!r} instead of the "
                       "full data extent")
             warnings.warn(
-                f"sharded execution: batch={spec.batch} does not divide "
-                f"the mesh's data extent ({n_data}); {actual} — pad the "
-                f"batch to a multiple of {n_data} for full fan-out",
-                UserWarning, stacklevel=3)
+                f"sharded execution: batch*fanout={n_lanes} does not "
+                f"divide the mesh's data extent ({n_data}); {actual} — "
+                f"pad the lane count to a multiple of {n_data} for full "
+                "fan-out", UserWarning, stacklevel=3)
         out_struct = jax.eval_shape(mapped, rng_struct)
         out_sh = jax.tree.map(
             lambda s: rules.sharding(
@@ -209,7 +223,7 @@ class SamplingEngine:
                              out_shardings=out_sh)
 
         def sharded_fn(rng):
-            rngs = jax.device_put(jax.random.split(rng, spec.batch), in_sh)
+            rngs = jax.device_put(lane_keys(rng), in_sh)
             return batch_from_mapped(jit_mapped(rngs))
         # introspection hooks (tests / benchmarks read these)
         sharded_fn.mesh = mesh
@@ -250,19 +264,28 @@ class SamplingEngine:
                     f"prompt length {prompt.shape[-1]} + max_events "
                     f"{spec.max_events} exceeds max_len {spec.max_len}")
             prompts = (prompt[None] if prompt.ndim == 1 else prompt)
-            if prompt.ndim == 1 and spec.batch > 1:
+            if prompt.ndim == 1 and spec.batch > 1 and spec.fanout == 1:
+                # historical convenience: one prompt fills every slot.
+                # With fanout > 1 the fan-out itself defines the rollout
+                # count, so a single prompt stays a single group
                 prompts = jnp.broadcast_to(
                     prompts, (spec.batch,) + prompts.shape[1:])
             n_req = prompts.shape[0]
             # force: a previous call that died mid-run must not brick
             # the sampler — its leftover requests belong to no caller
             engine.reset(force=True)
-            # ALWAYS split (same contract as the TPP executors)
+            # ALWAYS split (same contract as the TPP executors); with
+            # fanout=K every prompt becomes one shared-prefix group of
+            # K rollouts drawing from fold_in(base, k) — the engine
+            # forks the admitted prompt's pages on the paged layout
             rngs = jax.random.split(rng, n_req)
-            order = [engine.submit(ServeRequest(
-                prompt=p, max_new_tokens=spec.max_events,
-                temperature=spec.temperature, rng=r))
-                for r, p in zip(rngs, prompts)]
+            order = []
+            for r, p in zip(rngs, prompts):
+                ids = engine.submit(ServeRequest(
+                    prompt=p, max_new_tokens=spec.max_events,
+                    temperature=spec.temperature, rng=r),
+                    fanout=spec.fanout)
+                order.extend(ids if isinstance(ids, list) else [ids])
             by_id = {res.request_id: res for res in engine.run()}
 
             def to_seq(res) -> SeqResult:

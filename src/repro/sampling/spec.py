@@ -42,6 +42,18 @@ class SamplerSpec:
                  For domain="token" this is the serving engine's
                  ``max_batch`` — the number of KV-cache slots the
                  continuous-batching scheduler fills.
+    fanout     : scenario rollouts per base lane (K-way fan-out for
+                 forecasting queries). Every executor derives the K
+                 streams of base lane ``b`` as
+                 ``fold_in(split(rng, batch)[b], k)`` — so TPP runs
+                 sample ``batch * fanout`` sequences, and token runs
+                 submit each prompt to the serving engine with
+                 ``fanout=K`` (one shared-prefix group whose members
+                 FORK the admitted prompt's KV pages on the paged
+                 layout). fanout never changes any member's sampled
+                 distribution — member k is bitwise the fanout=1 run
+                 seeded with its folded key; only the prefill cost
+                 changes.
     gamma      : draft window length for method="sd" (the max window for
                  adaptive policies).
     draft_policy: name in the draft-policy registry — "fixed" (the
@@ -58,6 +70,7 @@ class SamplerSpec:
     t_end: float = 20.0
     max_events: int = 256
     batch: int = 1
+    fanout: int = 1
     gamma: int = 10
     draft_policy: str = "fixed"
     domain: str = "tpp"
@@ -139,6 +152,12 @@ class SamplerSpec:
         if self.execution == "jit" and self.batch != 1:
             raise SpecError("execution='jit' samples a single sequence; use "
                             "execution='vmap' or 'sharded' for batch > 1")
+        if self.fanout < 1:
+            raise SpecError(f"fanout must be >= 1, got {self.fanout}")
+        if self.execution == "jit" and self.fanout != 1:
+            raise SpecError("execution='jit' samples a single sequence; "
+                            "use execution='vmap'/'sharded' (or 'host') "
+                            "for fanout > 1")
         if self.t_end <= 0:
             raise SpecError(f"t_end must be > 0, got {self.t_end}")
         if self.max_events < 1:

@@ -95,3 +95,8 @@ class ThinningStrategy:
 # The token domain ("llm" special case) is not a registered strategy:
 # ``SamplerSpec(domain="token")`` routes through the ``repro.serving``
 # continuous-batching engine (see ``SamplingEngine._build_token``).
+# ``SamplerSpec(fanout=K)`` applies to BOTH domains: TPP executors fan
+# every base lane into K ``fold_in``-derived scenario streams; token
+# runs submit each prompt as one shared-prefix group whose members fork
+# the admitted prompt's KV pages (copy-on-write) instead of
+# re-prefilling — identical streams, near-zero marginal prefill.

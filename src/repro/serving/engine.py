@@ -37,6 +37,7 @@ route here).
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -50,6 +51,7 @@ from ..models import registry
 from ..models import transformer as tfm
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind, rollback_one, select_slots)
+from .prefix_cache import PrefixCache
 from .request import EngineStats, ServeRequest, ServeResult, _as_key
 from .scheduler import DECODING, PREFILLING, Scheduler, SlotState
 
@@ -334,7 +336,8 @@ class ServingEngine:
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
                  sched="fifo", prefill_chunk: Optional[int] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 prefix_cache: bool = False):
         """``kv_layout``: "paged" (block-table pool + spec-verify Pallas
         attention — the production hot path), "dense" (per-slot dense
         caches + vmapped extend), or "auto" (paged whenever the families
@@ -361,7 +364,18 @@ class ServingEngine:
         staging). A budget delays admission, which changes which slots
         share a round and hence the batch window clamp — round
         boundaries shift, so streams match staging in DISTRIBUTION
-        (the per-request rng contract) rather than bitwise."""
+        (the per-request rng contract) rather than bitwise.
+        ``prefix_cache``: keep a cross-request radix cache of retired
+        prompts' KV pages (``serving/prefix_cache.py``); admissions
+        adopt the longest page-aligned prefix match and prefill only
+        from the divergence point. Requires the paged layout; implies
+        chunked admission (cache hits resume prefill mid-prompt), so
+        ``prefill_chunk`` defaults to 32 when unset — a bitwise-neutral
+        default, since unbudgeted chunked admission is token-bitwise
+        the staging path. Cache-hit admissions are token-bitwise equal
+        to cold ones: adopted pages hold exactly the K/V the skipped
+        prefill would have written, and every sampled draw still comes
+        from ``fold_in(request.rng, round_idx)``."""
         if method not in ("ar", "sd"):
             raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
         if method == "sd" and (cfg_d is None or params_d is None):
@@ -397,6 +411,13 @@ class ServingEngine:
                 "kernel='pallas' only accelerates the paged rounds today; "
                 "the dense layout keeps the families' reference extend "
                 "path", UserWarning, stacklevel=2)
+        if prefix_cache:
+            if self.kv_layout != "paged":
+                raise ValueError(
+                    "prefix_cache retains KV pages across requests; it "
+                    "requires kv_layout='paged'")
+            if prefill_chunk is None:
+                prefill_chunk = 32
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError("prefill_chunk must be >= 1 (or None to "
@@ -428,6 +449,18 @@ class ServingEngine:
         self.scheduler = Scheduler(max_batch, max_len, policy=sched)
         self.pool_t = self._make_pool(cfg_t)
         self.pool_d = self._make_pool(cfg_d) if method == "sd" else None
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            pools = {"t": self.pool_t}
+            if self.pool_d is not None:
+                pools["d"] = self.pool_d
+            self.prefix_cache = PrefixCache(self.pool_t.page, pools)
+        # scenario fan-out: group id -> the group's live source entry
+        # {"slot", "state", "logits"} (logits None while still
+        # prefilling); siblings fork the source's prompt pages instead
+        # of prefilling their own copy
+        self._fork_sources: Dict[int, Dict[str, Any]] = {}
+        self._group_ids = itertools.count()
         if method == "sd":
             from ..sampling.policies import resolve_policy_by_name
             self.draft_policy = resolve_policy_by_name(draft_policy, gamma)
@@ -463,6 +496,11 @@ class ServingEngine:
                                "pass force=True to discard them")
         self.scheduler = Scheduler(self.max_batch, self.max_len,
                                    policy=self.scheduler.policy)
+        self._fork_sources = {}
+        if self.prefix_cache is not None:
+            # pool.reset() rebuilds the free lists wholesale, so the
+            # cache just drops its tree without per-page releases
+            self.prefix_cache.clear(release=False)
         self.pool_t.reset()
         if self.pool_d is not None:
             self.pool_d.reset()
@@ -474,13 +512,32 @@ class ServingEngine:
     # -- public API --------------------------------------------------------
     def submit(self, req: ServeRequest = None, *, prompt=None,
                max_new_tokens: int = 32, temperature: float = 1.0,
-               rng=0, extra=None, priority: int = 0) -> int:
-        """Queue a request (either a ``ServeRequest`` or its fields)."""
+               rng=0, extra=None, priority: int = 0, fanout: int = 1):
+        """Queue a request (either a ``ServeRequest`` or its fields).
+
+        ``fanout=K`` queues K scenario rollouts of the request: one
+        prefix_group whose members share the prompt and draw from
+        independent ``fold_in(rng, k)`` streams. On the paged layout
+        the engine admits the prefix once and FORKS the other K-1
+        members onto the same copy-on-write pages; each member's
+        committed tokens are bitwise what K independent submissions
+        with those rng keys would produce. Returns the list of K
+        request ids (a single id when fanout == 1)."""
         if req is None:
             req = ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                                temperature=temperature, rng=rng, extra=extra,
                                priority=priority)
-        return self.scheduler.submit(req)
+        if fanout < 1:
+            raise ValueError("fanout must be >= 1")
+        if fanout == 1:
+            return self.scheduler.submit(req)
+        gid = next(self._group_ids)
+        return [self.scheduler.submit(ServeRequest(
+            prompt=req.prompt, max_new_tokens=req.max_new_tokens,
+            temperature=req.temperature,
+            rng=jax.random.fold_in(req.rng, k),
+            extra=req.extra, priority=req.priority, prefix_group=gid))
+            for k in range(fanout)]
 
     def step(self) -> List[ServeResult]:
         """One scheduler round; returns requests completed this round.
@@ -559,15 +616,36 @@ class ServingEngine:
         prefix = 0
         if req.extra and req.extra.get("vision_embeds") is not None:
             prefix = int(req.extra["vision_embeds"].shape[1])
+        hit, runs = 0, None
         if self.kv_layout == "paged":
+            total = prefix + req.prompt_len + req.max_new_tokens
+            # -- scenario fan-out: a group sibling forks the source's
+            # prompt pages instead of prefilling its own copy
+            src = self._fork_source_for(req)
+            if src is not None:
+                if src["logits"] is None:
+                    # the group's source is still prefilling — wait for
+                    # it rather than paying a duplicate prefill
+                    self.scheduler.defer(slot)
+                    return False
+                return self._admit_fork(slot, state, src, total)
+            # -- cross-request prefix cache: adopt the longest
+            # page-aligned match and prefill from the divergence point
+            if (self.prefix_cache is not None and not req.extra
+                    and self.prefill_chunk is not None):
+                hit, runs = self.prefix_cache.match(
+                    np.asarray(req.prompt), req.prompt_len - 1)
+            adopted = hit // self.pool_t.page
             # admission under memory pressure: reserve the request's
             # WHOLE lifetime (prefix + prompt + budget) up front, so
             # per-round growth of admitted slots can never exhaust the
-            # free list; defer when the reservation does not fit now
-            total = prefix + req.prompt_len + req.max_new_tokens
-            ok = self.pool_t.can_admit(total)
+            # free list; defer when the reservation does not fit now.
+            # Adopted (shared) pages are counted once — they are
+            # already allocated, so only the tail past the match draws
+            # from the free list
+            ok = self.pool_t.can_admit(total, adopted_blocks=adopted)
             if ok and self.method == "sd":
-                ok = self.pool_d.can_admit(total)
+                ok = self.pool_d.can_admit(total, adopted_blocks=adopted)
             if not ok:
                 self.scheduler.defer(slot)
                 if not any(self.scheduler.active()):
@@ -578,10 +656,21 @@ class ServingEngine:
             self.pool_t.reserve(slot, total)
             if self.method == "sd":
                 self.pool_d.reserve(slot, total)
+            if (self.prefix_cache is not None and not req.extra
+                    and self.prefill_chunk is not None):
+                self._stats.prefix_lookups += 1
+            if hit:
+                self.pool_t.adopt(slot, runs["t"])
+                if self.method == "sd":
+                    self.pool_d.adopt(slot, runs["d"])
+                state.prefix_hit_tokens = hit
+                self._stats.prefix_hits += 1
+                self._stats.prefix_hit_tokens += hit
         if (self.prefill_chunk is not None and self.kv_layout == "paged"
                 and not req.extra):
             state.phase = PREFILLING
-            state.prefilled = 0
+            state.prefilled = hit
+            self._register_fork_source(state, slot, logits=None)
             return True
         t0 = time.perf_counter()
         batch = {"tokens": req.prompt[None, :]}
@@ -607,8 +696,86 @@ class ServingEngine:
         tok0 = int(jax.random.categorical(
             jax.random.fold_in(req.rng, 0), lp))
         self._first_token(state, tok0)
+        self._register_fork_source(state, slot,
+                                   logits=np.asarray(logits[0, -1]))
         self._stats.prefill_tokens += prefix + req.prompt_len
         self._stats.prefill_s += time.perf_counter() - t0
+        return True
+
+    def _fork_source_for(self, req: ServeRequest):
+        """The live fork source of ``req``'s fan-out group, if any."""
+        if req.prefix_group is None or req.extra:
+            return None
+        src = self._fork_sources.get(req.prefix_group)
+        if src is None:
+            return None
+        # entries are dropped at retire time; be defensive about a slot
+        # that was reassigned anyway (e.g. a deferred source)
+        if self.scheduler.slots[src["slot"]] is not src["state"]:
+            del self._fork_sources[req.prefix_group]
+            return None
+        return src
+
+    def _register_fork_source(self, state: SlotState, slot: int,
+                              logits) -> None:
+        """Make this slot its fan-out group's fork source (first
+        admitted member wins; later members fork it). ``logits`` is the
+        prompt's last-position TEMPERATURE-FREE logits row — what a
+        forked sibling samples its first token from — or None while the
+        source is still prefilling (``_prefill_step`` fills it in)."""
+        req = state.request
+        if (req.prefix_group is None or req.extra
+                or self.kv_layout != "paged"
+                or req.prefix_group in self._fork_sources):
+            return
+        self._fork_sources[req.prefix_group] = {
+            "slot": slot, "state": state, "logits": logits}
+
+    def _admit_fork(self, slot: int, state: SlotState, src, total: int) -> bool:
+        """Admit a fan-out sibling by FORKING the source's prompt pages:
+        the block tables share every page over [0, prompt_len) and the
+        first divergent write triggers a copy-on-write of at most the
+        one mid-page boundary page. No prefill forward runs at all; the
+        first token is sampled from the source's stored prompt logits
+        with this sibling's own ``fold_in(rng, 0)`` — bitwise what an
+        independent admission of the same request would draw."""
+        req = state.request
+        plen = req.prompt_len
+        adopted = self.pool_t._blocks_for(plen)
+        cow = 0
+        if plen % self.pool_t.page != 0:
+            # the fork's first append COWs the mid-page boundary page;
+            # when that page was unshared until now, the SOURCE's next
+            # append becomes a COW too — budget both new pendings
+            b = plen // self.pool_t.page
+            pid = int(self.pool_t.tables[src["slot"], b])
+            cow = 1 + (1 if int(self.pool_t.refcount[pid]) == 1 else 0)
+        ok = self.pool_t.can_admit(total, adopted_blocks=adopted,
+                                   cow_pages=cow)
+        if ok and self.method == "sd":
+            ok = self.pool_d.can_admit(total, adopted_blocks=adopted,
+                                       cow_pages=cow)
+        if not ok:
+            self.scheduler.defer(slot)
+            if not any(self.scheduler.active()):
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single request "
+                    f"(need {total} positions); raise n_pages")
+            return False
+        self.pool_t.reserve(slot, total)
+        self.pool_t.fork(src["slot"], slot, plen)
+        if self.method == "sd":
+            self.pool_d.reserve(slot, total)
+            self.pool_d.fork(src["slot"], slot, plen)
+        state.prefix_hit_tokens = plen
+        self._stats.prefix_lookups += 1
+        self._stats.prefix_hits += 1
+        self._stats.prefix_hit_tokens += plen
+        lp = jax.nn.log_softmax(jnp.asarray(src["logits"])
+                                / req.temperature)
+        tok0 = int(jax.random.categorical(
+            jax.random.fold_in(req.rng, 0), lp))
+        self._first_token(state, tok0)
         return True
 
     def _first_token(self, state: SlotState, tok0: int) -> None:
@@ -654,8 +821,13 @@ class ServingEngine:
                 nvalid[slot] = n
                 lens[slot] = st.prefilled
                 budget -= n
+                # a prefilling slot's boundary page is never actually
+                # shared (cache adoption is page-aligned), but keep the
+                # write-barrier uniform: COW before any pool write
+                self.pool_t.cow_for_append(slot)
                 self.pool_t.ensure_blocks(slot, st.prefilled + n)
                 if sd:
+                    self.pool_d.cow_for_append(slot)
                     self.pool_d.ensure_blocks(slot, st.prefilled + n)
                 work.append((slot, st, n))
             if not work:
@@ -678,6 +850,12 @@ class ServingEngine:
                     self.pool_d.lens[slot] = st.prefilled
                 self._stats.prefill_tokens += n
                 if st.prefilled == st.request.prompt_len:
+                    src = (self._fork_sources.get(st.request.prefix_group)
+                           if st.request.prefix_group is not None else None)
+                    if src is not None and src["state"] is st:
+                        # the group's siblings sample THEIR first token
+                        # from this temperature-free row
+                        src["logits"] = np.asarray(lg[slot, n - 1])
                     lp = jax.nn.log_softmax(
                         lg[slot, n - 1] / st.request.temperature)
                     tok0 = int(jax.random.categorical(
@@ -745,8 +923,9 @@ class ServingEngine:
                 need = sum(
                     pool._blocks_for(min(int(pool.lens[s]) + 1 + g,
                                          pool.capacity))
-                    - int(pool.n_blocks[s]) for s, _ in alive)
-                return need > len(pool.free)
+                    - int(pool.n_blocks[s]) + pool._cow_pending(s)
+                    for s, _ in alive)
+                return need > pool._headroom()
             while gamma > 1 and (short(self.pool_t, gamma) or
                                  short(self.pool_d, gamma)):
                 gamma -= 1
@@ -812,6 +991,11 @@ class ServingEngine:
         for slot, _ in alive:
             len0_t[slot] = int(self.pool_t.lens[slot])
             len0_d[slot] = int(self.pool_d.lens[slot])
+            # write barrier: the round writes from lens onward, so a
+            # shared boundary page (fork / adopted cache prefix) is
+            # copied before the batched forward touches it
+            self.pool_t.cow_for_append(slot)
+            self.pool_d.cow_for_append(slot)
             self.pool_t.ensure_blocks(slot, len0_t[slot] + gamma + 1)
             self.pool_d.ensure_blocks(slot, len0_d[slot] + gamma + 1)
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
@@ -855,6 +1039,7 @@ class ServingEngine:
 
     def _ar_step_paged(self, alive) -> None:
         for slot, _ in alive:
+            self.pool_t.cow_for_append(slot)
             self.pool_t.ensure_blocks(slot, int(self.pool_t.lens[slot]) + 1)
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
         fn = _ar_round_paged_fn(self.cfg_t, self.policy, self.max_len)
@@ -910,8 +1095,28 @@ class ServingEngine:
     def _retire(self, slot: int) -> ServeResult:
         st = self.scheduler.retire(slot)
         if self.kv_layout == "paged":
-            # finish returns the slot's pages to the free list; the next
-            # occupant allocates its own
+            req = st.request
+            src = (self._fork_sources.get(req.prefix_group)
+                   if req.prefix_group is not None else None)
+            if src is not None and src["state"] is st:
+                del self._fork_sources[req.prefix_group]
+            if self.prefix_cache is not None and not req.extra:
+                # donate the FULL prompt pages into the radix cache:
+                # full prompt pages are provably never rewritten or
+                # COWed (writes only land past the prompt), so their
+                # K/V is exactly what a cold prefill would produce.
+                # insert() retains new nodes' pages, turning the
+                # free_slot below into an ownership transfer
+                full = req.prompt_len // self.pool_t.page
+                if full > 0:
+                    pages = {"t": [int(self.pool_t.tables[slot, b])
+                                   for b in range(full)]}
+                    if self.pool_d is not None:
+                        pages["d"] = [int(self.pool_d.tables[slot, b])
+                                      for b in range(full)]
+                    self.prefix_cache.insert(np.asarray(req.prompt), pages)
+            # finish returns the slot's (unshared) pages to the free
+            # list; shared pages just drop one reference
             self.pool_t.free_slot(slot)
             if self.pool_d is not None:
                 self.pool_d.free_slot(slot)
@@ -921,4 +1126,5 @@ class ServingEngine:
             tokens=np.asarray(st.out[:st.request.max_new_tokens], np.int32),
             prompt_len=st.request.prompt_len,
             drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
-            ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s)
+            ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s,
+            prefix_hit_tokens=st.prefix_hit_tokens)

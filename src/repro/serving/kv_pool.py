@@ -159,6 +159,23 @@ class PagedKVCachePool:
     for idle lanes land in sacrificial memory and no ``select_slots``
     restore pass is needed.
 
+    Pages are REFCOUNTED and copy-on-write. ``fork(src, dst, upto)``
+    shares every page covering ``[0, upto)`` between the two block
+    tables (a table copy plus refcount bumps — no K/V movement), which
+    is what makes K-way scenario fan-out and the cross-request prefix
+    cache near-free: a forked continuation pays pages only for its
+    divergent tail. Writes always land at positions ``>= lens[slot]``,
+    so at most ONE shared page per slot is ever writable — the boundary
+    page ``lens // page`` when ``lens`` is mid-page; ``cow_for_append``
+    copies it to a fresh page on first divergent write (callers invoke
+    it before every append). A page returns to the free list only when
+    its refcount reaches 0 (``truncate``/``free_slot`` release, never
+    blind-free). The prefix cache holds references of its own through
+    ``retain``/``release``; when the free list runs dry the pool asks
+    the cache to evict (``evictor``/``evictable`` hooks), so
+    cache-retained pages still count as admissible headroom and the
+    PR 4 lifetime-reservation invariant survives retained pages.
+
     Allocation is by actual lengths — admission reserves a request's
     lifetime need up front (``can_admit``/``reserve``) but draws pages
     only as content arrives: chunked prefill grows the table one chunk
@@ -169,12 +186,12 @@ class PagedKVCachePool:
     can be provisioned below ``n_slots * max_len`` (``n_pages=``);
     admission defers when the pool is momentarily out of pages.
     Rollback after a rejected window is a block-table truncation:
-    lengths shrink, surplus pages return to the free list, and the
-    stale K/V left behind is causally invisible (logical position > any
-    live query) until overwritten.
+    lengths shrink, surplus pages are released, and the stale K/V left
+    behind is causally invisible (logical position > any live query)
+    until overwritten.
 
-    Host-side state (tables, lengths, free list) is numpy; only the page
-    arrays live on device.
+    Host-side state (tables, lengths, refcounts, free list) is numpy;
+    only the page arrays live on device.
     """
 
     def __init__(self, n_slots: int, cfg, *, page_size: int = 16,
@@ -199,31 +216,112 @@ class PagedKVCachePool:
         self.n_blocks = np.zeros((n_slots,), np.int32)
         # lifetime reservation per slot (blocks), set at admission
         self.reserved = np.zeros((n_slots,), np.int32)
+        # owners per page: slot tables holding it + (0/1) cache retain
+        self.refcount = np.zeros((n_pages,), np.int32)
         self.free: List[int] = list(range(n_pages - 1, 0, -1))  # 0 = null
+        # prefix-cache reclaim hooks: evictor(n) frees >= n pages of this
+        # pool if it can (LRU cache eviction); evictable() counts pages
+        # only the cache still holds (refcount 1) — admissible headroom
+        self.evictor = None     # Optional[Callable[[int], int]]
+        self.evictable = None   # Optional[Callable[[], int]]
+        self.cow_copies = 0     # lifetime copy-on-write page copies
 
     # -- host bookkeeping --------------------------------------------------
     def _blocks_for(self, length: int) -> int:
         return -(-max(length, 0) // self.page)
 
+    def _headroom(self) -> int:
+        """Pages drawable right now: the free list plus whatever LRU
+        cache eviction could hand back synchronously."""
+        extra = self.evictable() if self.evictable is not None else 0
+        return len(self.free) + extra
+
+    def _cow_pending(self, slot: int) -> int:
+        """1 iff this slot's next append must copy a shared boundary
+        page first (its write frontier sits mid-page in a page with
+        refcount > 1). Counted into the shortfall so reservations stay
+        honest under sharing."""
+        length = int(self.lens[slot])
+        if length % self.page == 0:
+            return 0
+        b = length // self.page
+        if b >= int(self.n_blocks[slot]):
+            return 0
+        return 1 if int(self.refcount[self.tables[slot, b]]) > 1 else 0
+
     def _shortfall(self) -> int:
         """Blocks the admitted slots may still claim against their
-        reservations."""
-        return int(np.maximum(self.reserved - self.n_blocks, 0).sum())
+        reservations, plus one page per pending copy-on-write (a COW
+        swaps a shared page for a fresh one without growing the table,
+        so it draws from the free list outside ``reserved - n_blocks``).
+        """
+        out = int(np.maximum(self.reserved - self.n_blocks, 0).sum())
+        return out + sum(self._cow_pending(s) for s in range(self.n_slots))
 
-    def can_admit(self, total_len: int) -> bool:
+    def can_admit(self, total_len: int, *, adopted_blocks: int = 0,
+                  cow_pages: int = 0) -> bool:
         """Admission check against the request's WHOLE lifetime need
         (prompt + budget, clamped to capacity), on top of every
         already-admitted slot's outstanding reservation. Conservative on
         purpose: once admitted under a reservation, a gamma=1 round's
         growth always fits (the engine shrinks larger batch windows to
         the free list), so an under-provisioned pool admits fewer
-        concurrent requests instead of deadlocking mid-stream."""
+        concurrent requests instead of deadlocking mid-stream.
+
+        ``adopted_blocks`` pages arrive shared (prefix-cache hit or
+        fork) and are never drawn from the free list; ``cow_pages``
+        budgets the copy-on-write pages the admission CREATES — a fork
+        whose shared prefix ends mid-page makes the forked slot's first
+        append a COW, and (when the boundary page was unshared before)
+        turns the source's own next append into one too, so callers
+        pass the number of NEW pending COWs this admission introduces
+        (the standing ones are already in ``_shortfall``).
+
+        Adopted pages are discounted from the EVICTABLE side of the
+        headroom too: adopting a cache-held page bumps it to refcount 2,
+        so it stops being reclaimable the moment this admission lands —
+        counting it as headroom for this request's own tail would admit
+        a request whose prefill then finds the free list dry.
+        (Conservative for forks, whose adopted pages were never
+        cache-evictable; an over-tight check only defers.)"""
         need = self._blocks_for(min(total_len, self.capacity))
-        return len(self.free) >= self._shortfall() + need
+        need = max(0, need - adopted_blocks) + cow_pages
+        extra = self.evictable() if self.evictable is not None else 0
+        headroom = len(self.free) + max(0, extra - adopted_blocks)
+        return headroom >= self._shortfall() + need
 
     def reserve(self, slot: int, total_len: int) -> None:
         self.reserved[slot] = self._blocks_for(min(total_len,
                                                    self.capacity))
+
+    def _alloc_page(self) -> int:
+        if not self.free and self.evictor is not None:
+            self.evictor(1)
+        if not self.free:
+            raise RuntimeError(
+                "paged KV pool out of pages; raise n_pages or lower "
+                "max_batch")
+        pid = self.free.pop()
+        self.refcount[pid] = 1
+        return pid
+
+    def retain(self, pid: int) -> None:
+        """Add an owner to an allocated page (fork adoption / prefix
+        cache donation)."""
+        if pid <= 0 or self.refcount[pid] < 1:
+            raise ValueError(f"retain of unallocated page {pid}")
+        self.refcount[pid] += 1
+
+    def release(self, pid: int) -> bool:
+        """Drop one owner; returns True when the page went back to the
+        free list (refcount reached 0)."""
+        if pid <= 0 or self.refcount[pid] < 1:
+            raise ValueError(f"release of unallocated page {pid}")
+        self.refcount[pid] -= 1
+        if self.refcount[pid] == 0:
+            self.free.append(pid)
+            return True
+        return False
 
     def ensure_blocks(self, slot: int, new_len: int) -> None:
         """Grow the slot's table to cover ``new_len`` positions."""
@@ -231,20 +329,76 @@ class PagedKVCachePool:
         have = int(self.n_blocks[slot])
         if need <= have:
             return
-        if len(self.free) < need - have:
+        if self._headroom() < need - have:
             raise RuntimeError(
                 f"paged KV pool out of pages ({len(self.free)} free, "
                 f"{need - have} needed); raise n_pages or lower max_batch")
         for b in range(have, need):
-            self.tables[slot, b] = self.free.pop()
+            self.tables[slot, b] = self._alloc_page()
         self.n_blocks[slot] = need
 
+    def cow_for_append(self, slot: int) -> bool:
+        """Copy-on-first-divergent-write: if the slot's write frontier
+        sits mid-page inside a SHARED page, copy that page's K/V to a
+        fresh page and swap the table entry, so the upcoming append
+        never mutates another owner's prefix. Callers run this before
+        every append (decode round growth / prefill chunk); all other
+        shared pages are strictly behind the frontier and are never
+        written again, so one boundary check is complete."""
+        if not self._cow_pending(slot):
+            return False
+        b = int(self.lens[slot]) // self.page
+        old = int(self.tables[slot, b])
+        new = self._alloc_page()
+        self.pages = {
+            name: arr.at[:, new].set(arr[:, old])
+            for name, arr in self.pages.items()}
+        self.refcount[old] -= 1         # was > 1: never frees here
+        self.tables[slot, b] = new
+        self.cow_copies += 1
+        return True
+
+    def fork(self, src: int, dst: int, upto_len: int) -> int:
+        """Share ``src``'s pages covering positions ``[0, upto_len)``
+        into empty slot ``dst`` (block-table copy + refcount bumps; no
+        K/V moves). ``dst`` continues from ``upto_len``; its first
+        append copy-on-writes the boundary page if ``upto_len`` is
+        mid-page. Returns the number of shared pages."""
+        if int(self.n_blocks[dst]) != 0 or int(self.lens[dst]) != 0:
+            raise ValueError(f"fork target slot {dst} is not empty")
+        upto_len = min(upto_len, self.capacity)
+        nb = self._blocks_for(upto_len)
+        if nb > int(self.n_blocks[src]) or upto_len > int(self.lens[src]):
+            raise ValueError(
+                f"fork: source slot {src} covers {int(self.lens[src])} "
+                f"positions, cannot share {upto_len}")
+        for b in range(nb):
+            pid = int(self.tables[src, b])
+            self.tables[dst, b] = pid
+            self.retain(pid)
+        self.n_blocks[dst] = nb
+        self.lens[dst] = upto_len
+        return nb
+
+    def adopt(self, slot: int, page_ids: List[int]) -> None:
+        """Adopt a prefix-cache run of FULL pages into an empty slot:
+        the matched prefix is already resident, prefill resumes at
+        ``len(page_ids) * page``."""
+        if int(self.n_blocks[slot]) != 0 or int(self.lens[slot]) != 0:
+            raise ValueError(f"adopt target slot {slot} is not empty")
+        for b, pid in enumerate(page_ids):
+            self.retain(int(pid))
+            self.tables[slot, b] = int(pid)
+        self.n_blocks[slot] = len(page_ids)
+        self.lens[slot] = len(page_ids) * self.page
+
     def truncate(self, slot: int, new_len: int) -> None:
-        """Rollback/commit: set the committed length, free surplus pages
-        (no K/V rewrite — this is the whole point of paging)."""
+        """Rollback/commit: set the committed length, release surplus
+        pages (freed only at refcount 0 — shared pages survive in their
+        other owners' tables; no K/V rewrite either way)."""
         keep = self._blocks_for(new_len)
         for b in range(keep, int(self.n_blocks[slot])):
-            self.free.append(int(self.tables[slot, b]))
+            self.release(int(self.tables[slot, b]))
             self.tables[slot, b] = 0
         self.n_blocks[slot] = keep
         self.lens[slot] = new_len
@@ -255,9 +409,15 @@ class PagedKVCachePool:
 
     def reset(self) -> None:
         """Return every page; keep the allocated page arrays (stale
-        contents are overwritten before being readable)."""
-        for s in range(self.n_slots):
-            self.free_slot(s)
+        contents are overwritten before being readable). Rebuilds the
+        free list wholesale, so cache-retained pages come back too —
+        callers clear the prefix cache alongside."""
+        self.tables[:] = 0
+        self.lens[:] = 0
+        self.n_blocks[:] = 0
+        self.reserved[:] = 0
+        self.refcount[:] = 0
+        self.free = list(range(self.n_pages - 1, 0, -1))
 
     # -- device views ------------------------------------------------------
     def device_tables(self) -> jnp.ndarray:

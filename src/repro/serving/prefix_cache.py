@@ -1,0 +1,219 @@
+"""Cross-request radix prefix cache over retained KV pages.
+
+Millions of users share system prompts and common event histories; the
+dominant redundant serving cost is re-prefilling those shared prefixes
+for every request. This cache closes the loop the copy-on-write pool
+opens: when a request retires, the FULL pages holding its prompt's K/V
+are donated into a radix tree keyed by the prompt tokens (the cache
+becomes an owner through ``PagedKVCachePool.retain``); when a new
+request is admitted, its prompt walks the tree page by page and every
+matched page is adopted straight into the new slot's block table —
+prefill restarts at the divergence point, so a fully-cached prompt
+costs (almost) zero prefill tokens.
+
+Structure: a radix tree at PAGE granularity. Every edge is labelled by
+one page's worth of token ids (``page_size`` tokens) and every node
+pins exactly one physical page per pool (the target pool, plus the
+draft pool under speculative decoding — both prefilled the same
+prompt, so they hit and miss together). Page granularity keeps
+adoption a pure block-table splice: a matched node's page slots
+directly into the new table, and because matches are always
+page-aligned the adopting slot's first write lands in a FRESH page —
+cache adoption never needs a copy-on-write.
+
+Eviction is LRU over leaves (deepest-first by construction: a node can
+only be dropped once its children are gone, which releases pages in
+longest-prefix-first order). The pool calls back into ``evict`` when
+its free list runs dry and counts ``evictable`` pages as admission
+headroom, so retaining pages NEVER reduces the pool capacity the
+PR 4 lifetime-reservation admission reasons about: any page held only
+by the cache (refcount 1) is reclaimable synchronously inside
+``ensure_blocks``/``can_admit``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["PrefixCache", "PrefixCacheStats"]
+
+
+class PrefixCacheStats:
+    """Counters the engine folds into ``EngineStats``."""
+
+    def __init__(self):
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.lookups)
+
+    def describe(self) -> str:
+        return (f"lookups={self.lookups} hits={self.hits} "
+                f"hit_rate={self.hit_rate:.2f} "
+                f"hit_tokens={self.hit_tokens} "
+                f"inserted_pages={self.inserted_pages} "
+                f"evicted_pages={self.evicted_pages}")
+
+
+class _Node:
+    """One radix node == one cached page per pool. ``tokens`` is the
+    page-sized token run labelling the edge from the parent."""
+
+    __slots__ = ("tokens", "pages", "children", "parent", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], pages: Dict[str, int],
+                 parent: Optional["_Node"], clock: int):
+        self.tokens = tokens
+        self.pages = pages            # pool key -> physical page id
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.last_used = clock
+
+
+class PrefixCache:
+    """Radix tree mapping token prefixes to retained page runs.
+
+    ``pools`` maps a short key ("t" target, "d" draft) to the
+    ``PagedKVCachePool`` whose pages the tree pins. All pools must use
+    the same ``page_size`` (they prefill the same prompts in lockstep).
+    """
+
+    def __init__(self, page_size: int, pools: Dict[str, object]):
+        if not pools:
+            raise ValueError("PrefixCache needs at least one pool")
+        self.page = page_size
+        self.pools = dict(pools)
+        self.root = _Node((), {}, None, 0)
+        self._clock = 0
+        self.stats = PrefixCacheStats()
+        for key, pool in self.pools.items():
+            pool.evictor = (lambda n, k=key: self.evict(k, n))
+            pool.evictable = (lambda k=key: self.evictable(k))
+
+    # -- introspection -----------------------------------------------------
+    def _nodes(self) -> List[_Node]:
+        out, stack = [], list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+        return out
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self._nodes())
+
+    def evictable(self, pool_key: str) -> int:
+        """Pages of ``pool_key`` the cache alone still holds (refcount
+        1): every one of them is reclaimable by (possibly cascaded)
+        leaf eviction, so admission may count them as headroom."""
+        pool = self.pools[pool_key]
+        return sum(1 for n in self._nodes()
+                   if pool_key in n.pages
+                   and int(pool.refcount[n.pages[pool_key]]) == 1)
+
+    # -- lookup ------------------------------------------------------------
+    def match(self, tokens, max_tokens: int):
+        """Longest page-aligned prefix match.
+
+        Returns ``(hit_tokens, {pool_key: [page_id, ...]})`` where
+        ``hit_tokens`` is a multiple of the page size, capped at
+        ``max_tokens`` (callers pass ``prompt_len - 1`` so at least one
+        prompt token always remains to prefill — the token that
+        produces the first-sample logits). Matched nodes' LRU stamps
+        are refreshed; adoption refcounts are the CALLER's move
+        (``PagedKVCachePool.adopt``)."""
+        toks = np.asarray(tokens).reshape(-1)
+        n_pages = min(len(toks), max(0, max_tokens)) // self.page
+        node = self.root
+        runs: Dict[str, List[int]] = {k: [] for k in self.pools}
+        hit = 0
+        self._clock += 1
+        self.stats.lookups += 1
+        for i in range(n_pages):
+            key = tuple(int(t) for t in toks[i * self.page:
+                                             (i + 1) * self.page])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            node.last_used = self._clock
+            for k in runs:
+                runs[k].append(node.pages[k])
+            hit += self.page
+        if hit:
+            self.stats.hits += 1
+            self.stats.hit_tokens += hit
+        return hit, runs
+
+    # -- donation ----------------------------------------------------------
+    def insert(self, tokens, pages: Dict[str, List[int]]) -> int:
+        """Donate a retiring slot's FULL prompt pages into the tree.
+
+        ``pages[pool_key][i]`` is the physical page holding tokens
+        ``[i*page, (i+1)*page)``. Nodes that already exist keep their
+        own (identical-content) pages — the donor's copies are released
+        by the caller's ``free_slot`` as usual; new nodes RETAIN the
+        donated pages (refcount bump), so the subsequent ``free_slot``
+        hands ownership to the cache instead of freeing. Returns the
+        number of newly retained pages (per pool)."""
+        toks = np.asarray(tokens).reshape(-1)
+        n_pages = min(len(toks) // self.page,
+                      *(len(v) for v in pages.values()))
+        node = self.root
+        self._clock += 1
+        new_pages = 0
+        for i in range(n_pages):
+            key = tuple(int(t) for t in toks[i * self.page:
+                                             (i + 1) * self.page])
+            child = node.children.get(key)
+            if child is None:
+                own = {k: int(pages[k][i]) for k in self.pools}
+                for k, pid in own.items():
+                    self.pools[k].retain(pid)
+                child = _Node(key, own, node, self._clock)
+                node.children[key] = child
+                new_pages += 1
+                self.stats.inserted_pages += 1
+            else:
+                child.last_used = self._clock
+            node = child
+        return new_pages
+
+    # -- eviction ----------------------------------------------------------
+    def evict(self, pool_key: str, n: int) -> int:
+        """Drop LRU leaves until >= ``n`` pages of ``pool_key`` went
+        back to that pool's free list (or the tree is empty). Evicting
+        a node releases its pages in EVERY pool; pages still adopted by
+        a live slot (refcount > 1) just lose the cache's reference and
+        free later when the slot retires. Returns pages actually freed
+        for ``pool_key``."""
+        freed = 0
+        while freed < n:
+            leaves = [nd for nd in self._nodes() if not nd.children]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            for k, pid in victim.pages.items():
+                if self.pools[k].release(pid) and k == pool_key:
+                    freed += 1
+                self.stats.evicted_pages += 1
+            parent = victim.parent
+            del parent.children[victim.tokens]
+        return freed
+
+    def clear(self, release: bool = True) -> None:
+        """Drop every node. ``release=True`` returns the cache's page
+        references to the pools; the engine's ``reset`` passes False
+        because the pools rebuild their free lists wholesale."""
+        if release:
+            for nd in self._nodes():
+                for k, pid in nd.pages.items():
+                    self.pools[k].release(pid)
+        self.root = _Node((), {}, None, 0)

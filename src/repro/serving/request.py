@@ -45,6 +45,13 @@ class ServeRequest:
                       scheduler's "priority" policy; FIFO/SJF ignore
                       it). Never affects the sampled tokens — only WHEN
                       a request is admitted.
+    prefix_group    : scenario fan-out group id (set by
+                      ``ServingEngine.submit(fanout=K)``). Requests in
+                      one group share a prompt; the engine admits the
+                      prefix once and FORKS the group's other slots
+                      onto the same copy-on-write KV pages. Never
+                      affects the sampled tokens (each member keeps its
+                      own rng stream) — only what prefill costs.
     """
 
     prompt: Any
@@ -53,6 +60,7 @@ class ServeRequest:
     rng: Any = 0
     extra: Optional[Dict[str, Any]] = None
     priority: int = 0
+    prefix_group: Optional[int] = None
     request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self):
@@ -82,6 +90,9 @@ class ServeResult:
     rounds: int             # propose-verify rounds this request rode in
     ttft_rounds: int = 0    # engine steps from submission to first token
     ttft_s: float = 0.0     # wall seconds from submission to first token
+    prefix_hit_tokens: int = 0  # prompt tokens served from shared pages
+                                # (prefix-cache hit or fan-out fork)
+                                # instead of being prefilled
 
     @property
     def n(self) -> int:
@@ -103,6 +114,12 @@ class EngineStats:
     is the prompt-token figure that makes prefill throughput honest
     (``prefill_tokens / prefill_s``), accumulated by both the chunked
     paged admission and the dense-staging fallback.
+
+    ``prefix_lookups``/``prefix_hits``/``prefix_hit_tokens`` count
+    prefix-sharing work: lookups are admissions that consulted shared
+    state (the radix cache, or a fan-out group's live source), hits are
+    admissions that adopted at least one shared page, and hit tokens
+    are the prompt tokens those admissions did NOT have to prefill.
     """
 
     requests_completed: int = 0
@@ -115,6 +132,9 @@ class EngineStats:
     prefill_tokens: int = 0      # prompt (+prefix) tokens prefilled
     prefill_s: float = 0.0       # wall seconds spent in prefill work
     wall_s: float = 0.0
+    prefix_lookups: int = 0      # admissions that consulted shared state
+    prefix_hits: int = 0         # ... that adopted shared pages
+    prefix_hit_tokens: int = 0   # prompt tokens skipped via sharing
 
     @property
     def acceptance_rate(self) -> float:
@@ -133,6 +153,10 @@ class EngineStats:
     def prefill_tokens_per_sec(self) -> float:
         return self.prefill_tokens / max(1e-9, self.prefill_s)
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(1, self.prefix_lookups)
+
     def describe(self) -> str:
         return (f"requests={self.requests_completed} tokens={self.tokens} "
                 f"target_fwds={self.target_forwards} "
@@ -140,4 +164,6 @@ class EngineStats:
                 f"tok/fwd={self.tokens_per_forward:.2f} "
                 f"tok/s={self.tokens_per_sec:.1f} "
                 f"prefill_tok={self.prefill_tokens} "
-                f"prefill_tok/s={self.prefill_tokens_per_sec:.1f}")
+                f"prefill_tok/s={self.prefill_tokens_per_sec:.1f} "
+                f"prefix_hit_rate={self.prefix_hit_rate:.2f} "
+                f"prefix_hit_tok={self.prefix_hit_tokens}")

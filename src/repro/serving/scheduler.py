@@ -60,6 +60,9 @@ class SlotState:
     # tokens already committed to the pool
     phase: str = DECODING
     prefilled: int = 0
+    # prompt tokens served from shared pages (prefix-cache hit or
+    # fan-out fork) instead of being prefilled by this slot
+    prefix_hit_tokens: int = 0
     # accounting carried over from the queue entry
     seq: int = 0          # admission-order stamp (policy tie-break)
     submit_step: int = 0

@@ -1,0 +1,164 @@
+"""``SamplerSpec(fanout=K)``: scenario fan-out in both domains.
+
+The contract fanout must keep: it NEVER changes any member's sampled
+distribution — member k of base lane b is bitwise the stream of the
+single-sequence sampler seeded with ``fold_in(split(rng, batch)[b], k)``
+(the TPP executors fan the lane keys; the token domain submits one
+shared-prefix group per prompt and the serving engine forks the
+admitted KV pages). Only the executor wiring and the prefill cost
+change.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TPPConfig
+from repro.models import registry, tpp
+from repro.sampling import (ENGINE, SamplerSpec, SpecError, build_sampler,
+                            get_strategy)
+from repro.sampling.strategies import ModelBundle
+
+
+@pytest.fixture(scope="module")
+def tiny_pair():
+    cfg_t = TPPConfig(encoder="thp", num_layers=2, num_heads=2, d_model=16,
+                      d_ff=32, num_marks=3, num_mix=4)
+    cfg_d = cfg_t.replace(num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(fanout=0), "fanout"),
+    (dict(fanout=-2), "fanout"),
+    (dict(execution="jit", fanout=3), "single sequence"),
+])
+def test_fanout_spec_validation(kw, match):
+    with pytest.raises(SpecError, match=match):
+        SamplerSpec(**kw).validate()
+
+
+def test_fanout_one_is_the_default_and_valid_everywhere():
+    for ex in ("host", "vmap", "sharded"):
+        SamplerSpec(execution=ex, fanout=1).validate()
+    SamplerSpec(execution="jit", fanout=1).validate()
+
+
+# ---------------------------------------------------------------------------
+# TPP domain: lane-key derivation and executor agreement
+# ---------------------------------------------------------------------------
+
+def test_tpp_fanout_host_matches_vmap(tiny_pair):
+    """batch=2 x fanout=3 -> 6 lanes, identical across executors (types
+    exact, times to the repo's cross-executor kernel tolerance)."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    spec = SamplerSpec(method="sd", execution="host", t_end=2.0, gamma=3,
+                       max_events=16, batch=2, fanout=3)
+    rng = jax.random.PRNGKey(42)
+    bh = build_sampler(spec, cfg_t, pt, cfg_d, pd)(rng)
+    bv = build_sampler(spec.replace(execution="vmap"),
+                       cfg_t, pt, cfg_d, pd)(rng)
+    assert bh.times.shape[0] == bv.times.shape[0] == 6
+    np.testing.assert_array_equal(np.array(bh.lengths),
+                                  np.array(bv.lengths))
+    for lane in range(6):
+        n = int(bh.lengths[lane])
+        np.testing.assert_array_equal(np.array(bh.types[lane, :n]),
+                                      np.array(bv.types[lane, :n]))
+        np.testing.assert_allclose(np.array(bh.times[lane, :n]),
+                                   np.array(bv.times[lane, :n]),
+                                   rtol=2e-5, atol=1e-5)
+
+
+def test_tpp_fanout_member_is_bitwise_the_folded_key_stream(tiny_pair):
+    """Member (b, k) of the fanout batch == the strategy's single
+    sampler called with fold_in(split(rng, B)[b], k): fanout is pure
+    key fan-out, nothing about a member's stream depends on K."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    spec = SamplerSpec(method="ar", execution="host", t_end=2.0,
+                       max_events=16, batch=2, fanout=3)
+    rng = jax.random.PRNGKey(9)
+    batch = build_sampler(spec, cfg_t, pt)(rng)
+    sampler = get_strategy("ar").build_host(spec, ModelBundle(cfg_t, pt))
+    base = jax.random.split(rng, 2)
+    for b in range(2):
+        for k in range(3):
+            lane = b * 3 + k
+            single = sampler(jax.random.fold_in(base[b], k))
+            n = int(single.n)
+            assert n == int(batch.lengths[lane])
+            np.testing.assert_array_equal(
+                np.array(batch.types[lane, :n]),
+                np.array(single.types[:n]))
+            np.testing.assert_array_equal(
+                np.array(batch.times[lane, :n]),
+                np.array(single.times[:n]))
+
+
+def test_tpp_fanout_one_keeps_historical_lane_keys(tiny_pair):
+    """fanout=1 must stay bitwise the pre-fanout engine: raw
+    split(rng, batch) lane keys, no fold_in wrapping."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    spec = SamplerSpec(method="ar", execution="vmap", t_end=2.0,
+                       max_events=16, batch=4)
+    rng = jax.random.PRNGKey(3)
+    b_default = build_sampler(spec, cfg_t, pt)(rng)
+    b_explicit = build_sampler(spec.replace(fanout=1), cfg_t, pt)(rng)
+    np.testing.assert_array_equal(np.array(b_default.times),
+                                  np.array(b_explicit.times))
+    np.testing.assert_array_equal(np.array(b_default.types),
+                                  np.array(b_explicit.types))
+
+
+def test_tpp_fanout_sharded_matches_vmap(tiny_pair):
+    """sharded = vmap + placement at fanout too (1-device CPU falls
+    back to replication; lane count batch*fanout drives the data-axis
+    divisibility check)."""
+    cfg_t, cfg_d, pt, pd = tiny_pair
+    spec = SamplerSpec(method="ar", t_end=2.0, max_events=16, batch=2,
+                       fanout=2)
+    rng = jax.random.PRNGKey(5)
+    bv = build_sampler(spec.replace(execution="vmap"), cfg_t, pt)(rng)
+    bs = build_sampler(spec.replace(execution="sharded"), cfg_t, pt)(rng)
+    assert bs.times.shape[0] == 4
+    np.testing.assert_array_equal(np.array(bv.lengths),
+                                  np.array(bs.lengths))
+    np.testing.assert_allclose(np.array(bv.times), np.array(bs.times),
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# token domain: fanout groups ride the serving engine's COW forks
+# ---------------------------------------------------------------------------
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_token_fanout_single_prompt_yields_k_rollouts():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    pt = registry.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    spec = SamplerSpec(method="sd", execution="host", domain="token",
+                       batch=4, max_events=8, max_len=64, gamma=3,
+                       kernel="ref", fanout=3)
+    fn = ENGINE.build(spec, cfg_t, pt, cfg_d, pd)
+    out = fn(jax.random.PRNGKey(5), np.arange(10) % 31)
+    # one prompt -> ONE group of 3 rollouts (no batch broadcast at
+    # fanout>1), each with its own stream
+    assert out.times.shape[0] == 3
+    st = fn.engine.stats()
+    # both siblings forked the admitted 10-token prompt
+    assert st.prefix_hit_tokens == 20
+    assert st.prefix_hits == 2 and st.prefix_lookups >= 2

@@ -1,0 +1,393 @@
+"""COW KV pages, the radix prefix cache, and scenario fan-out.
+
+Pins, bottom-up: (1) pool bookkeeping — ``fork`` shares pages by
+refcount bump, the first divergent append copies exactly the boundary
+page (``cow_for_append``), truncate/retire free a shared page only at
+refcount 0, and ``can_admit`` budgets adopted pages and the COWs an
+admission creates; (2) the radix cache — page-aligned longest-prefix
+match capped at ``prompt_len - 1``, retire-time donation with
+ownership transfer, LRU leaf eviction, and composition with the
+lifetime-reservation admission (cache-retained pages count as headroom
+and evict synchronously when the free list runs dry); (3) the engine
+contracts — a ``submit(fanout=K)`` group's members are token-BITWISE
+the independently-submitted requests carrying the same
+``fold_in(rng, k)`` keys, and a warm cache-hit admission is
+token-bitwise both the cold miss and the cache-off engine, on the ref
+and Pallas(interpret) backends, including rollback after a fork; and
+(4) nothing leaks — after every request retires, non-cached pools are
+fully free and cached pools hold exactly one page per radix node.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import ServeRequest, ServingEngine
+from repro.serving.kv_pool import PagedKVCachePool
+from repro.serving.prefix_cache import PrefixCache
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+# ---------------------------------------------------------------------------
+# pool units: fork / COW / refcounts (no engine, no model forward)
+# ---------------------------------------------------------------------------
+
+def test_fork_shares_pages_and_cow_isolates_the_boundary():
+    pool = PagedKVCachePool(3, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 6)                    # 2 pages, frontier mid-page
+    pool.lens[0] = 6
+    assert pool.fork(0, 1, 6) == 2
+    assert pool.lens[1] == 6 and pool.n_blocks[1] == 2
+    assert np.array_equal(pool.tables[1, :2], pool.tables[0, :2])
+    assert all(int(pool.refcount[pool.tables[0, b]]) == 2 for b in range(2))
+    # both slots' next append must copy the shared mid-page boundary
+    assert pool._cow_pending(0) == 1 and pool._cow_pending(1) == 1
+    old = int(pool.tables[1, 1])
+    assert pool.cow_for_append(1)
+    new = int(pool.tables[1, 1])
+    assert new != old and pool.cow_copies == 1
+    assert int(pool.refcount[old]) == 1 and int(pool.refcount[new]) == 1
+    # the FULL page 0 stays shared — COW never touches it
+    assert pool.tables[1, 0] == pool.tables[0, 0]
+    assert int(pool.refcount[pool.tables[0, 0]]) == 2
+    # slot 1's frontier is now private: second call is a no-op
+    assert not pool.cow_for_append(1)
+    # ... and the copy UNSHARED the boundary, so the source owes nothing
+    assert pool._cow_pending(0) == 0
+    assert not pool.cow_for_append(0)
+    assert int(pool.refcount[old]) == 1          # still slot 0's page
+
+
+def test_fork_page_aligned_never_needs_cow():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    pool.fork(0, 1, 8)
+    assert pool._cow_pending(0) == 0 and pool._cow_pending(1) == 0
+    assert not pool.cow_for_append(1)
+    # first append draws a FRESH page; shared ones are behind the frontier
+    pool.ensure_blocks(1, 9)
+    assert pool.tables[1, 2] != pool.tables[0, 2]
+
+
+def test_fork_validates_target_and_coverage():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 5)
+    pool.lens[0] = 5
+    with pytest.raises(ValueError, match="covers 5"):
+        pool.fork(0, 1, 9)                       # src holds only 5 positions
+    pool.fork(0, 1, 5)
+    with pytest.raises(ValueError, match="not empty"):
+        pool.fork(0, 1, 5)                       # dst already populated
+
+
+def test_truncate_frees_shared_pages_only_at_refcount_zero():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    total_free = pool.n_pages - 1
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    pool.fork(0, 1, 8)
+    pool.free_slot(0)                            # pages survive in slot 1
+    assert len(pool.free) == total_free - 2
+    assert all(int(pool.refcount[pool.tables[1, b]]) == 1 for b in range(2))
+    pool.free_slot(1)                            # last owner: all back
+    assert len(pool.free) == total_free
+    assert int(pool.refcount.sum()) == 0
+
+
+def test_adopt_refcounts_and_resumes_page_aligned():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    run = [int(pool.tables[0, b]) for b in range(2)]
+    pool.adopt(1, run)
+    assert pool.lens[1] == 8 and pool.n_blocks[1] == 2
+    assert all(int(pool.refcount[p]) == 2 for p in run)
+    assert pool._cow_pending(1) == 0             # page-aligned: no COW debt
+    with pytest.raises(ValueError, match="not empty"):
+        pool.adopt(1, run)
+
+
+def test_retain_release_reject_unallocated_pages():
+    pool = PagedKVCachePool(1, _dense(1), page_size=4, max_len=16)
+    for bad in (0, 1):                           # null page / never allocated
+        with pytest.raises(ValueError, match="retain"):
+            pool.retain(bad)
+        with pytest.raises(ValueError, match="release"):
+            pool.release(bad)
+    pool.ensure_blocks(0, 2)
+    pid = int(pool.tables[0, 0])
+    pool.retain(pid)
+    assert not pool.release(pid)                 # still owned by the table
+    assert pool.release(pid)                     # now free
+    pool.tables[0, 0] = 0
+    pool.n_blocks[0] = 0                         # keep bookkeeping honest
+
+
+def test_can_admit_budgets_adopted_blocks_and_created_cows():
+    # 2 slots x 2 blocks + null page, page 4: 4 usable pages
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=8)
+    pool.reserve(0, 8)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    # plain admission of 8 more positions needs 2 pages: exactly fits
+    assert pool.can_admit(8)
+    pool.reserve(1, 8)
+    pool.ensure_blocks(1, 4)
+    pool.lens[1] = 4
+    # slot 1 still owes 1 reserved block; a 2-page admission now overdraws
+    assert not pool.can_admit(8)
+    # ... unless the pages arrive shared (fork/cache adoption)
+    assert pool.can_admit(8, adopted_blocks=2)
+    # ... and each COW the admission creates costs a free page again
+    assert not pool.can_admit(8, adopted_blocks=2, cow_pages=1)
+
+
+# ---------------------------------------------------------------------------
+# radix cache units
+# ---------------------------------------------------------------------------
+
+def _donate(pool, cache, slot, tokens):
+    """Simulate the engine's retire-time donation for a retiring slot
+    whose committed prompt is ``tokens``: insert the FULL prompt pages,
+    then free the slot (ownership transfers to the cache)."""
+    full = len(tokens) // pool.page
+    pages = {"t": [int(pool.tables[slot, b]) for b in range(full)]}
+    new = cache.insert(np.asarray(tokens), pages)
+    pool.free_slot(slot)
+    return new
+
+
+def test_cache_match_donation_and_prompt_minus_one_cap():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    cache = PrefixCache(4, {"t": pool})
+    prompt = np.arange(10) % 7                  # 2 full pages + 2 tail
+    pool.reserve(0, 10)
+    pool.ensure_blocks(0, 10)
+    pool.lens[0] = 10
+    donated_run = [int(pool.tables[0, b]) for b in range(2)]
+    assert _donate(pool, cache, 0, prompt) == 2
+    # cache is the sole owner now; pages did NOT return to the free list
+    assert all(int(pool.refcount[p]) == 1 for p in donated_run)
+    assert cache.n_nodes == 2
+    hit, runs = cache.match(prompt, len(prompt) - 1)
+    assert hit == 8 and runs["t"] == donated_run
+    # the prompt_len-1 cap: a 8-token prompt may only adopt 1 page (7//4)
+    hit, runs = cache.match(prompt[:8], 7)
+    assert hit == 4 and runs["t"] == donated_run[:1]
+    # diverging second page stops the walk after one node
+    other = np.concatenate([prompt[:4], (prompt[4:8] + 1) % 7])
+    hit, runs = cache.match(other, len(other))
+    assert hit == 4 and runs["t"] == donated_run[:1]
+    # re-donating the same prompt keeps the existing nodes: no new pages
+    pool.reserve(1, 10)
+    pool.ensure_blocks(1, 10)
+    pool.lens[1] = 10
+    assert _donate(pool, cache, 1, prompt) == 0
+    assert cache.n_nodes == 2
+
+
+def test_cache_lru_eviction_drops_leaves_first():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=16)
+    cache = PrefixCache(4, {"t": pool})
+    long = np.arange(8)                         # nodes A -> B
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    _donate(pool, cache, 0, long)
+    short = np.concatenate([np.arange(4), np.arange(4) + 20])  # A -> C
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    _donate(pool, cache, 0, short)
+    assert cache.n_nodes == 3                   # shared root page A
+    cache.match(long, 8)                        # B is now most recent
+    free_before = len(pool.free)
+    assert cache.evict("t", 1) == 1             # LRU leaf = C
+    assert cache.n_nodes == 2
+    assert len(pool.free) == free_before + 1
+    hit, _ = cache.match(long, 8)
+    assert hit == 8                             # A -> B survived
+    hit, _ = cache.match(short, 8)
+    assert hit == 4                             # C gone, shared A remains
+    cache.clear()
+    assert int(pool.refcount.sum()) == 0
+    assert len(pool.free) == pool.n_pages - 1
+
+
+def test_cache_retained_pages_count_as_admission_headroom():
+    # 1 slot x 2 blocks + null: 2 usable pages, all of them cached
+    pool = PagedKVCachePool(1, _dense(1), page_size=4, max_len=8)
+    cache = PrefixCache(4, {"t": pool})
+    prompt = np.arange(8)
+    pool.reserve(0, 8)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    _donate(pool, cache, 0, prompt)
+    assert len(pool.free) == 0
+    assert cache.evictable("t") == 2
+    # the PR 4 invariant survives retained pages: a fresh full-lifetime
+    # admission is still admissible because eviction can reclaim them
+    assert pool._headroom() == 2
+    assert pool.can_admit(8)
+    # ... and ensure_blocks reclaims synchronously through the evictor
+    pool.reserve(0, 8)
+    pool.ensure_blocks(0, 8)
+    assert pool.n_blocks[0] == 2
+    assert cache.n_nodes == 0                   # both nodes evicted
+    assert cache.stats.evicted_pages == 2
+    # adopted pages are NOT evictable: they are pinned by a live slot
+    pool.lens[0] = 8
+    _donate(pool, cache, 0, prompt)
+    hit, runs = cache.match(prompt, 8)
+    pool.adopt(0, runs["t"])
+    assert cache.evictable("t") == 0
+
+
+def test_cache_eviction_keeps_live_adoptions_alive():
+    pool = PagedKVCachePool(2, _dense(1), page_size=4, max_len=8)
+    cache = PrefixCache(4, {"t": pool})
+    prompt = np.arange(8)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    _donate(pool, cache, 0, prompt)
+    hit, runs = cache.match(prompt, 8)
+    pool.adopt(1, runs["t"])                    # live slot shares the run
+    freed = cache.evict("t", 2)
+    assert freed == 0                           # cache ref dropped, not freed
+    assert cache.n_nodes == 0
+    assert all(int(pool.refcount[p]) == 1 for p in runs["t"])
+    pool.free_slot(1)                           # last owner frees them
+    assert int(pool.refcount.sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine contracts: fan-out forks and cache hits are bitwise invisible
+# ---------------------------------------------------------------------------
+
+def _engine(pair, **kw):
+    cfg_t, cfg_d, pt, pd = pair
+    kw.setdefault("kernel", "ref")
+    kw.setdefault("max_batch", 4)
+    return ServingEngine(cfg_t, pt, cfg_d, pd, max_len=128, gamma=3, **kw)
+
+
+_PROMPT = np.arange(20) % 31
+
+
+def _tokens_by_id(results):
+    return [list(map(int, r.tokens))
+            for r in sorted(results, key=lambda r: r.request_id)]
+
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_fanout_members_bitwise_match_independent_requests(dense_pair,
+                                                           kernel):
+    """submit(fanout=K) == K independent submissions with the folded
+    keys: sharing the prompt's KV pages via fork + COW changes NO
+    sampled token (gamma=3 SD rounds exercise rollback after fork)."""
+    eng = _engine(dense_pair, kernel=kernel)
+    eng.submit(prompt=_PROMPT, max_new_tokens=12, temperature=0.9, rng=7,
+               fanout=3)
+    res_fan = eng.run()
+    hits = [r.prefix_hit_tokens
+            for r in sorted(res_fan, key=lambda r: r.request_id)]
+
+    eng2 = _engine(dense_pair, kernel=kernel)
+    base = jax.random.PRNGKey(7)
+    for k in range(3):
+        eng2.submit(prompt=_PROMPT, max_new_tokens=12, temperature=0.9,
+                    rng=jax.random.fold_in(base, k))
+    assert _tokens_by_id(res_fan) == _tokens_by_id(eng2.run())
+    # the source prefilled; every sibling forked the whole prompt
+    assert hits[0] == 0 and hits[1:] == [len(_PROMPT)] * 2
+    assert eng.pool_t.cow_copies > 0            # 20 tokens: mid-page fork
+    assert eng.stats().prefix_hit_tokens == 2 * len(_PROMPT)
+    # no pages leak once everything retired
+    for e in (eng, eng2):
+        assert int(e.pool_t.refcount.sum()) == 0
+        assert len(e.pool_t.free) == e.pool_t.n_pages - 1
+
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_prefix_cache_hit_bitwise_matches_cold_and_cache_off(dense_pair,
+                                                             kernel):
+    """A warm radix-cache admission (adopt pages, prefill the tail) is
+    token-bitwise the cold admission AND the cache-off engine."""
+    eng = _engine(dense_pair, max_batch=2, kernel=kernel,
+                  prefix_cache=True)
+    eng.submit(prompt=_PROMPT, max_new_tokens=10, rng=11)
+    cold = eng.run()[0]
+    eng.submit(prompt=_PROMPT, max_new_tokens=10, rng=11)
+    warm = eng.run()[0]
+    assert list(cold.tokens) == list(warm.tokens)
+    assert cold.prefix_hit_tokens == 0
+    # 20-token prompt, page 16, cap at 19 tokens -> one full page
+    assert warm.prefix_hit_tokens == 16
+    assert eng.stats().prefix_hits == 1
+
+    off = _engine(dense_pair, max_batch=2, kernel=kernel)
+    off.submit(prompt=_PROMPT, max_new_tokens=10, rng=11)
+    assert list(off.run()[0].tokens) == list(warm.tokens)
+    # the cache engine's pools hold exactly one page per radix node
+    held = int((eng.pool_t.refcount > 0).sum())
+    assert held == eng.prefix_cache.n_nodes
+    assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1 - held
+
+
+def test_prefix_cache_requires_paged_layout(dense_pair):
+    with pytest.raises(ValueError, match="paged"):
+        _engine(dense_pair, kv_layout="dense", prefix_cache=True)
+
+
+def test_fanout_composes_with_prefix_cache(dense_pair):
+    """Fan-out groups and cross-request cache hits stack: the second
+    group's source adopts the first group's donated pages, its siblings
+    fork, and every stream stays bitwise the cache-off run. max_batch=2
+    serializes the groups so the second one sees a warm cache."""
+    def run(cache_on):
+        eng = _engine(dense_pair, max_batch=2, prefix_cache=cache_on)
+        for g in range(2):
+            eng.submit(prompt=_PROMPT, max_new_tokens=8, rng=50 + g,
+                       fanout=2)
+        return eng, _tokens_by_id(eng.run())
+
+    eng_on, toks_on = run(True)
+    _, toks_off = run(False)
+    assert toks_on == toks_off
+    st = eng_on.stats()
+    # 2 sibling forks (20 tok each) + the second source's 16-token hit
+    assert st.prefix_hit_tokens == 2 * len(_PROMPT) + 16
+    assert eng_on.prefix_cache.stats.hit_tokens == 16
+
+
+def test_engine_reset_clears_cache_and_fork_state(dense_pair):
+    eng = _engine(dense_pair, prefix_cache=True)
+    eng.submit(prompt=_PROMPT, max_new_tokens=6, rng=3, fanout=2)
+    eng.run()
+    assert eng.prefix_cache.n_nodes > 0
+    eng.reset(force=True)
+    assert eng.prefix_cache.n_nodes == 0
+    assert eng._fork_sources == {}
+    assert len(eng.pool_t.free) == eng.pool_t.n_pages - 1
+    # post-reset admissions start cold and still work
+    eng.submit(prompt=_PROMPT, max_new_tokens=6, rng=3)
+    assert eng.run()[0].prefix_hit_tokens == 0

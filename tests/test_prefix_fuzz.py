@@ -1,0 +1,180 @@
+"""Property fuzz over the COW pool + radix cache lifecycle (hypothesis).
+
+Random admit/fork/append/rollback/retire/evict schedules drive a
+``PagedKVCachePool`` + ``PrefixCache`` pair through the same moves the
+serving engine makes, checking after EVERY operation that the page
+bookkeeping is airtight:
+
+  - no leak / no double-free: every page's refcount equals the number
+    of block-table entries plus cache nodes actually holding it, the
+    free list holds exactly the refcount-0 pages (each once), and the
+    null page 0 is never allocated or freed;
+  - no write into a shared page: after ``cow_for_append``, the page
+    under a slot's write frontier always has refcount 1;
+  - admission accounting never deadlocks: operating strictly inside
+    the lifetime reservations (``can_admit`` with adopted/COW budgets,
+    as the engine does), ``ensure_blocks``/``cow_for_append`` must
+    never run out of pages — an unexpected RuntimeError IS the bug.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.serving.kv_pool import PagedKVCachePool
+from repro.serving.prefix_cache import PrefixCache
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+PAGE, SLOTS, MAXLEN = 4, 3, 16
+
+# overlapping prompts so the radix tree actually shares pages
+_PROMPTS = [
+    (0, 1, 2, 3, 0, 1, 2, 3, 0, 1),
+    (0, 1, 2, 3, 0, 1, 2, 3, 2, 2, 1),
+    (0, 1, 2, 3, 3, 3, 3, 3, 1),
+    (1, 1, 1, 2, 2),
+    (0, 1, 2, 3),
+]
+
+
+def _cfg():
+    return ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=7,
+                       dtype="float32", param_dtype="float32", remat=False)
+
+
+class _Slot:
+    """Host mirror of one admitted request: its committed tokens, the
+    original prompt length (rollback floor / donation extent), and the
+    reserved lifetime total."""
+
+    def __init__(self, tokens, prompt_len, total):
+        self.tokens = list(tokens)
+        self.prompt_len = prompt_len
+        self.total = total
+
+
+def _check(pool, cache, note):
+    """The no-leak / no-double-free invariant, from first principles."""
+    owners = np.zeros(pool.n_pages, np.int64)
+    for s in range(pool.n_slots):
+        for b in range(int(pool.n_blocks[s])):
+            pid = int(pool.tables[s, b])
+            assert pid > 0, f"{note}: null page in a live table"
+            owners[pid] += 1
+    for nd in cache._nodes():
+        owners[int(nd.pages["t"])] += 1
+    assert np.array_equal(owners, np.asarray(pool.refcount, np.int64)), \
+        f"{note}: refcounts drifted from actual owners"
+    free = pool.free
+    assert 0 not in free and len(set(free)) == len(free), \
+        f"{note}: corrupt free list"
+    assert all(int(pool.refcount[p]) == 0 for p in free), \
+        f"{note}: freed page still has owners"
+    assert len(free) + int((owners > 0).sum()) == pool.n_pages - 1, \
+        f"{note}: page leaked (neither free nor owned)"
+
+
+def _append_one(pool, slot, tok, slots):
+    pool.cow_for_append(slot)
+    n = int(pool.lens[slot])
+    pool.ensure_blocks(slot, n + 1)
+    frontier = int(pool.tables[slot, n // PAGE])
+    assert int(pool.refcount[frontier]) == 1, "write into a SHARED page"
+    pool.lens[slot] = n + 1
+    slots[slot].tokens.append(tok)
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 7),
+                          st.integers(0, 7)),
+                min_size=1, max_size=60))
+def test_random_lifecycle_never_leaks_or_shares_writes(ops):
+    pool = PagedKVCachePool(SLOTS, _cfg(), page_size=PAGE, max_len=MAXLEN)
+    cache = PrefixCache(PAGE, {"t": pool})
+    slots = {}                                  # slot -> _Slot
+
+    for i, (op, a, b) in enumerate(ops):
+        note = f"op {i} ({op},{a},{b})"
+        if op == 0:                             # ADMIT via the cache
+            free_slots = [s for s in range(SLOTS) if s not in slots]
+            if not free_slots:
+                continue
+            slot = free_slots[a % len(free_slots)]
+            prompt = _PROMPTS[b % len(_PROMPTS)]
+            total = min(len(prompt) + 1 + a % 5, MAXLEN)
+            hit, runs = cache.match(np.asarray(prompt), len(prompt) - 1)
+            if not pool.can_admit(total, adopted_blocks=hit // PAGE):
+                continue
+            pool.reserve(slot, total)
+            if hit:
+                pool.adopt(slot, runs["t"])
+            slots[slot] = _Slot(prompt[:hit], len(prompt), total)
+            while int(pool.lens[slot]) < len(prompt):
+                _append_one(pool, slot,
+                            prompt[int(pool.lens[slot])], slots)
+        elif op == 1:                           # FORK a live slot
+            live = sorted(slots)
+            free_slots = [s for s in range(SLOTS) if s not in slots]
+            if not live or not free_slots:
+                continue
+            src = live[a % len(live)]
+            dst = free_slots[b % len(free_slots)]
+            upto = int(pool.lens[src])
+            if upto == 0:
+                continue
+            total = min(upto + 1 + b % 5, MAXLEN)
+            cow = 0
+            if upto % PAGE != 0:
+                pid = int(pool.tables[src, upto // PAGE])
+                cow = 1 + (1 if int(pool.refcount[pid]) == 1 else 0)
+            adopted = pool._blocks_for(upto)
+            if not pool.can_admit(total, adopted_blocks=adopted,
+                                  cow_pages=cow):
+                continue
+            pool.reserve(dst, total)
+            pool.fork(src, dst, upto)
+            slots[dst] = _Slot(slots[src].tokens[:upto],
+                               slots[src].prompt_len, total)
+        elif op == 2:                           # APPEND inside reservation
+            live = sorted(slots)
+            if not live:
+                continue
+            slot = live[a % len(live)]
+            if int(pool.lens[slot]) >= slots[slot].total:
+                continue
+            _append_one(pool, slot, b % 7, slots)
+        elif op == 3:                           # ROLLBACK (never the prompt)
+            live = sorted(slots)
+            if not live:
+                continue
+            slot = live[a % len(live)]
+            floor = min(slots[slot].prompt_len, int(pool.lens[slot]))
+            new_len = max(floor, int(pool.lens[slot]) - (b % 3 + 1))
+            pool.truncate(slot, new_len)
+            del slots[slot].tokens[new_len:]
+        elif op == 4:                           # RETIRE + donate prompt
+            live = sorted(slots)
+            if not live:
+                continue
+            slot = live[a % len(live)]
+            state = slots.pop(slot)
+            full = min(state.prompt_len, int(pool.lens[slot])) // PAGE
+            if full:
+                pages = [int(pool.tables[slot, j]) for j in range(full)]
+                cache.insert(np.asarray(state.tokens[:full * PAGE]),
+                             {"t": pages})
+            pool.free_slot(slot)
+        else:                                   # EVICT
+            cache.evict("t", a % 3 + 1)
+        _check(pool, cache, note)
+
+    # drain: retire everything, then drop the cache — all pages return
+    for slot, state in list(slots.items()):
+        pool.free_slot(slot)
+    cache.clear()
+    assert int(pool.refcount.sum()) == 0
+    assert len(pool.free) == pool.n_pages - 1
