@@ -1,0 +1,178 @@
+"""Open-loop Poisson load generator for the serving + forecast engines.
+
+Closed-loop drivers (submit, drain, repeat — the benchmark legs in
+``run.py``) measure capacity; an OPEN-loop driver measures what a rate
+actually feels like: arrivals are drawn up front from a Poisson process
+and submitted on schedule whether or not the engine has caught up, so
+queueing delay shows up in latency instead of silently throttling the
+offered rate. The arrival stream comes from the repo's own classical
+thinning sampler (``repro.core.thinning``) over a homogeneous process —
+the same machinery the paper benchmarks TPP-SD against, here generating
+the traffic instead of serving it.
+
+Each arrival is one QUERY: a fanout-K scenario group for the forecast
+target (K rollouts of a shared event history through the wave-serving
+TPP engine) or a prompt completion for the token serving target. The
+report is sustained queries/s + rollouts/s against the offered rate,
+with completion-latency percentiles.
+
+  PYTHONPATH=src python -m benchmarks.loadgen --target forecast \
+      --rate 2 --queries 12 --fanout 8
+  PYTHONPATH=src python -m benchmarks.loadgen --target serving --rate 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.thinning import InhomPoisson, thinning_sample
+
+
+def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
+    """First ``n`` arrival times of a rate-``rate`` homogeneous Poisson
+    process, sampled with the repo's thinning sampler (omega=0 makes
+    ``InhomPoisson`` exactly homogeneous: lambda = A * b)."""
+    proc = InhomPoisson(A=rate, b=1.0, omega=0.0)
+    rng = np.random.default_rng(seed)
+    horizon, times = 4.0 * n / max(rate, 1e-9), np.empty(0)
+    while times.size < n:
+        times, _ = thinning_sample(proc, horizon, np.random.default_rng(
+            rng.integers(1 << 31)), max_events=4 * n)
+        horizon *= 2
+    return times[:n]
+
+
+@dataclass
+class _Query:
+    qid: int
+    arrival_s: float
+    member_ids: List[str]
+    submit_s: float = 0.0
+    done_s: float = 0.0
+    pending: set = field(default_factory=set)
+
+
+def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
+    """Open-loop drive: submit query i at its Poisson arrival offset,
+    stepping the engine in between; returns (per-query records, wall)."""
+    arrivals = poisson_arrivals(rate, len(queries), seed)
+    recs: List[_Query] = []
+    next_q = 0
+    t0 = time.perf_counter()
+    while next_q < len(queries) or engine.scheduler.has_work():
+        now = time.perf_counter() - t0
+        while next_q < len(queries) and arrivals[next_q] <= now:
+            ids = engine.submit(**queries[next_q])
+            ids = ids if isinstance(ids, list) else [ids]
+            recs.append(_Query(qid=next_q, arrival_s=arrivals[next_q],
+                               member_ids=ids, submit_s=now,
+                               pending=set(ids)))
+            next_q += 1
+        if engine.scheduler.has_work():
+            for res in engine.step():
+                for q in recs:
+                    if res.request_id in q.pending:
+                        q.pending.discard(res.request_id)
+                        if not q.pending:
+                            q.done_s = time.perf_counter() - t0
+        elif next_q < len(queries):
+            # idle gap until the next scheduled arrival
+            time.sleep(min(0.01, max(0.0, arrivals[next_q] - now)))
+    return recs, time.perf_counter() - t0
+
+
+def build_forecast_engine(args):
+    from repro.configs.base import TPPConfig
+    from repro.models import tpp
+    from repro.serving import ServingEngine
+
+    cfg_t = TPPConfig(name="lg-t", encoder="thp", num_layers=2,
+                      num_heads=2, d_model=32, d_ff=64, num_marks=5,
+                      num_mix=16)
+    cfg_d = cfg_t.replace(name="lg-d", num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
+                        max_batch=args.max_batch, gamma=2,
+                        max_len=8 + args.budget + 2, page_size=4,
+                        sched="grouped", prefix_cache=True)
+    r = np.random.default_rng(args.seed)
+    hist_t = np.cumsum(r.exponential(0.5, size=8)).astype(np.float32)
+    hist_k = r.integers(0, 5, size=8).astype(np.int32)
+    queries = [dict(prompt=hist_k, times=hist_t,
+                    t_end=float(hist_t[-1]) + 4.0,
+                    max_new_tokens=args.budget,
+                    rng=jax.random.PRNGKey(100 + i), fanout=args.fanout)
+               for i in range(args.queries)]
+    return eng, queries
+
+
+def build_serving_engine(args):
+    from repro.configs import get_arch, smoke_variant
+    from repro.models import registry
+    from repro.serving import ServingEngine
+
+    cfg_t = smoke_variant(get_arch("llama3.2-1b")).replace(num_layers=2)
+    cfg_d = cfg_t.replace(num_layers=1)
+    pt = registry.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
+    pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
+                        max_batch=args.max_batch, max_len=64, gamma=2)
+    queries = [dict(prompt=jnp.arange(8, dtype=jnp.int32),
+                    max_new_tokens=args.budget, rng=100 + i)
+               for i in range(args.queries)]
+    return eng, queries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--target", default="forecast",
+                    choices=["forecast", "serving"])
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="offered arrival rate, queries/s (open loop)")
+    ap.add_argument("--queries", type=int, default=12)
+    ap.add_argument("--fanout", type=int, default=8,
+                    help="rollouts per forecast query")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="events/tokens per rollout")
+    ap.add_argument("--max-batch", dest="max_batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    eng, queries = (build_forecast_engine(args) if args.target == "forecast"
+                    else build_serving_engine(args))
+    # warm the compile caches outside the timed window, then reset
+    eng.submit(**queries[0])
+    eng.run()
+    eng.reset()
+
+    recs, wall = drive(eng, queries, args.rate, args.seed)
+    st = eng.stats()
+    lat = np.sort(np.array([q.done_s - q.arrival_s for q in recs]))
+    # sustained rate over the active window (first arrival -> last
+    # completion); compare against the REALIZED arrival rate of this
+    # finite Poisson draw, not the asymptotic --rate
+    window = max(1e-9, max(q.done_s for q in recs) - recs[0].arrival_s)
+    sustained = len(recs) / window
+    span = max(1e-9, recs[-1].arrival_s - recs[0].arrival_s)
+    offered = (len(recs) - 1) / span if len(recs) > 1 else args.rate
+    print(f"target={args.target} rate={args.rate:.2f} "
+          f"(realized {offered:.2f}) q/s queries={len(recs)} fanout="
+          f"{args.fanout if args.target == 'forecast' else 1}")
+    print(f"sustained={sustained:.2f} queries/s | "
+          f"rollouts/s={st.rollouts / window:.1f} | "
+          f"tokens={st.tokens} | wall={wall:.1f}s")
+    print(f"latency p50={np.percentile(lat, 50):.2f}s "
+          f"p95={np.percentile(lat, 95):.2f}s max={lat[-1]:.2f}s"
+          + ("" if sustained >= 0.9 * offered else
+             "  [engine saturated below the offered rate]"))
+
+
+if __name__ == "__main__":
+    main()

@@ -648,6 +648,102 @@ def prefix_fanout(args):
 
 
 # ---------------------------------------------------------------------------
+# Forecasting at fan-out scale: wave-scheduled rollouts -> BENCH_forecast.json
+# ---------------------------------------------------------------------------
+
+def forecast_fanout(args):
+    """``--only forecast``: the long-horizon forecasting workload — ONE
+    observed event history fanned into >= 1000 Monte-Carlo rollouts
+    through the serving engine in pool-sized waves (the paged pool is
+    deliberately sized to hold about one wave), reduced on device to
+    per-bin count quantiles. Headline metric: rollouts/s. A second
+    speculative row compares sd vs ar rollout throughput at equal
+    settings. Rows land in ``BENCH_forecast.json``."""
+    import json
+
+    from repro.forecast import build_forecaster
+    from repro.models import tpp as tppm
+    from repro.sampling import ForecastSpec
+
+    cfg_t = TPPConfig(name="fc-t", encoder="thp", num_layers=2,
+                      num_heads=2, d_model=32, d_ff=64, num_marks=5,
+                      num_mix=16)
+    cfg_d = cfg_t.replace(name="fc-d", num_layers=1, num_heads=1)
+    pt = tppm.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tppm.init_params(cfg_d, jax.random.PRNGKey(1))
+    r = np.random.default_rng(0)
+    hist_t = np.cumsum(r.exponential(0.5, size=8)).astype(np.float32)
+    hist_k = r.integers(0, 5, size=8).astype(np.int32)
+    horizon, bins, budget = 4.0, 8, 8
+    qs = (0.1, 0.5, 0.9)
+    bench: Dict = {}
+
+    def run(method, n_rollouts, gamma=4):
+        spec = SamplerSpec(
+            domain="tpp", method=method, gamma=gamma, batch=16,
+            max_events=budget,
+            max_len=len(hist_k) + budget + (gamma if method == "sd"
+                                            else 0),
+            forecast=ForecastSpec(horizon=horizon, n_rollouts=n_rollouts,
+                                  bins=bins, quantiles=qs))
+        # n_pages sized to hold roughly ONE wave: the executor must
+        # retire and re-fork to cover the fan-out
+        fc = build_forecaster(spec, cfg_t, pt,
+                              cfg_d if method == "sd" else None,
+                              pd if method == "sd" else None,
+                              page_size=4, n_pages=40)
+        fc(hist_t, hist_k, n_rollouts=min(32, n_rollouts))   # compile
+        return fc, fc(hist_t, hist_k, rng=jax.random.PRNGKey(7))
+
+    # --- headline: >= 1000 rollouts through waves (ar = densest rounds)
+    n_main = 1000
+    fc, res = run("ar", n_main)
+    assert res.n_waves > 1, "pool held the whole fan-out: no waves"
+    assert res.n_rollouts >= 1000
+    st = fc.engine.stats()
+    bench["forecast_waves"] = {
+        "method": "ar", "n_rollouts": res.n_rollouts,
+        "waves": res.n_waves, "wave_size_max": max(res.wave_sizes),
+        "history_len": int(len(hist_k)), "horizon": horizon,
+        "bins": bins, "events": res.events,
+        "rollouts_per_sec": res.rollouts_per_sec,
+        "quantile_levels": list(qs),
+        "bin_quantiles": res.quantiles.tolist(),
+        "bin_mean": res.mean.tolist(),
+        "prefix_hit_tokens": st.prefix_hit_tokens}
+    emit("forecast/waves", 1e6 / max(res.rollouts_per_sec, 1e-9),
+         f"rollouts={res.n_rollouts};waves={res.n_waves};"
+         f"rollouts_per_sec={res.rollouts_per_sec:.1f};"
+         f"events={res.events};bins={bins};"
+         f"q50_total={sum(res.quantiles[1])};"
+         f"prefix_hit_tokens={st.prefix_hit_tokens}")
+
+    # --- sd vs ar at equal settings: events/target-forward is where
+    # speculation pays
+    n_cmp = 128 if args.quick else 256
+    row = {}
+    for method in ("sd", "ar"):
+        fc, res = run(method, n_cmp)
+        st = fc.engine.stats()
+        row[method] = {
+            "rollouts_per_sec": res.rollouts_per_sec,
+            "events_per_fwd": res.events / max(1, st.target_forwards),
+            "alpha": st.acceptance_rate}
+        emit(f"forecast/{method}", 1e6 / max(res.rollouts_per_sec, 1e-9),
+             f"rollouts={n_cmp};rollouts_per_sec="
+             f"{res.rollouts_per_sec:.1f};"
+             f"events_per_fwd={row[method]['events_per_fwd']:.2f};"
+             f"alpha={st.acceptance_rate:.2f}")
+    bench["forecast_sd_vs_ar"] = {
+        "n_rollouts": n_cmp, "gamma": 4, **{
+            f"{m}_{k}": v for m, d in row.items() for k, v in d.items()}}
+
+    with open("BENCH_forecast.json", "w") as f:
+        json.dump(stamp_bench(bench), f, indent=2, sort_keys=True)
+    print("# wrote BENCH_forecast.json")
+
+
+# ---------------------------------------------------------------------------
 # Sharded fan-out: sequences/sec and tokens/sec vs device count
 # ---------------------------------------------------------------------------
 
@@ -761,6 +857,7 @@ TABLES = {
     "kernels": kernels_microbench,
     "serving": serving_throughput,
     "prefix": prefix_fanout,
+    "forecast": forecast_fanout,
     "sharded": sharded_scaling,
 }
 

@@ -1,0 +1,170 @@
+"""Wave-scheduled scenario fan-out for long-horizon forecasting.
+
+A forecast query wants ``n_rollouts`` Monte-Carlo continuations of ONE
+event history — thousands of rollouts, while the paged KV pool holds
+tens. The executor closes that gap with WAVES: admit the shared history
+once, fork a pool-sized group of siblings onto its copy-on-write pages,
+run the wave to retirement, fold its event times into the on-device
+aggregator, release every page, and fork the next wave — so the pool
+only ever holds one wave and the host only ever holds one wave's times.
+
+Wave sizing asks the engine (``fanout_headroom``) how many siblings the
+free list can back right now; the rng contract makes the split exact:
+wave w of size K submits with ``fanout_offset = sum of earlier waves``,
+so member j globally draws from ``fold_in(rng, j)`` regardless of wave
+boundaries — a forecast split into waves commits BITWISE the same
+rollouts a single fanout=n_rollouts submission would (the wave-parity
+test pins this), and between waves the radix prefix cache re-serves the
+history's pages to the next wave's source without re-prefilling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .aggregate import ForecastAggregator
+
+__all__ = ["ForecastRequest", "ForecastResult", "Forecaster"]
+
+
+@dataclass(frozen=True)
+class ForecastRequest:
+    """One forecast query over a shared event history.
+
+    history_times/history_marks : the observed [P] event history (may be
+        empty: forecast from the process start).
+    horizon     : forecast window length; rollouts run over
+        (t_last, t_last + horizon] where t_last is the last observed
+        event time (0 for an empty history).
+    n_rollouts  : Monte-Carlo continuations to sample.
+    bins        : time bins the horizon is split into.
+    quantiles   : per-bin count quantile levels to report.
+    max_events  : per-rollout event budget (also the aggregator's count
+        ceiling); a rollout stops at whichever of budget/horizon comes
+        first.
+    rng         : base PRNGKey or int seed; rollout j draws from
+        ``fold_in(rng, j)``.
+    """
+
+    history_times: Any
+    history_marks: Any
+    horizon: float
+    n_rollouts: int = 1000
+    bins: int = 20
+    quantiles: Tuple[float, ...] = (0.1, 0.25, 0.5, 0.75, 0.9)
+    max_events: int = 64
+    rng: Any = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "history_times",
+                           np.asarray(self.history_times,
+                                      np.float32).reshape(-1))
+        object.__setattr__(self, "history_marks",
+                           np.asarray(self.history_marks,
+                                      np.int32).reshape(-1))
+        if self.history_times.shape != self.history_marks.shape:
+            raise ValueError("history times/marks length mismatch")
+        if self.horizon <= 0 or self.n_rollouts < 1 or self.bins < 1:
+            raise ValueError("need horizon > 0, n_rollouts >= 1, "
+                             "bins >= 1")
+
+    @property
+    def t_last(self) -> float:
+        return float(self.history_times[-1]) \
+            if self.history_times.size else 0.0
+
+
+@dataclass(frozen=True)
+class ForecastResult:
+    """Per-bin count quantiles + fan-out throughput accounting."""
+
+    bin_edges: np.ndarray          # [bins+1] absolute times
+    quantile_levels: Tuple[float, ...]
+    quantiles: np.ndarray          # [len(levels), bins] count quantiles
+    mean: np.ndarray               # [bins] mean event count
+    n_rollouts: int
+    events: int                    # events sampled across all rollouts
+    wave_sizes: List[int]          # fan-out of each wave, in order
+    wall_s: float
+    rollouts_per_sec: float        # the workload's headline metric
+    rollouts: Optional[List[Tuple[np.ndarray, np.ndarray]]] = field(
+        default=None, repr=False)  # collect=True: [(marks, times)] per
+                                   # member index — tests only; defeats
+                                   # the on-device aggregation otherwise
+
+    @property
+    def n_waves(self) -> int:
+        return len(self.wave_sizes)
+
+    def describe(self) -> str:
+        return (f"rollouts={self.n_rollouts} waves={self.n_waves} "
+                f"(sizes {self.wave_sizes[:4]}"
+                f"{'...' if self.n_waves > 4 else ''}) "
+                f"events={self.events} "
+                f"rollouts/s={self.rollouts_per_sec:.1f}")
+
+
+class Forecaster:
+    """Drives a TPP ``ServingEngine`` through wave-scheduled fan-out.
+
+    The engine must be idle (no queued/active requests) when
+    ``forecast`` is called; the call owns the engine until it returns.
+    """
+
+    def __init__(self, engine):
+        if getattr(engine, "domain", None) != "tpp":
+            raise ValueError("Forecaster needs a TPP serving engine "
+                             "(built from a TPPConfig)")
+        self.engine = engine
+
+    def forecast(self, req: ForecastRequest,
+                 collect: bool = False) -> ForecastResult:
+        eng = self.engine
+        if eng.scheduler.has_work():
+            raise RuntimeError("engine busy: forecast() needs a drained "
+                               "engine")
+        t0 = req.t_last
+        t_end = t0 + float(req.horizon)
+        plen = int(req.history_marks.shape[0])
+        agg = ForecastAggregator(req.bins, t0, t_end, req.max_events)
+        rollouts: List[Optional[Tuple[np.ndarray, np.ndarray]]] = \
+            [None] * req.n_rollouts if collect else None
+        wave_sizes: List[int] = []
+        events = 0
+        done = 0
+        t_start = time.perf_counter()
+        while done < req.n_rollouts:
+            k = min(eng.fanout_headroom(plen, req.max_events),
+                    req.n_rollouts - done)
+            ids = eng.submit(prompt=req.history_marks,
+                             times=req.history_times, t_end=t_end,
+                             max_new_tokens=req.max_events, rng=req.rng,
+                             fanout=k, fanout_offset=done)
+            member = {rid: done + j for j, rid in enumerate(ids)}
+            results = eng.run()
+            # fold this wave and forget it: the host buffer is one wave
+            # ([K <= max_batch, budget]), never the full fan-out
+            buf = np.zeros((len(results), req.max_events), np.float32)
+            nv = np.zeros((len(results),), np.int32)
+            for i, r in enumerate(results):
+                buf[i, :r.n] = r.times
+                nv[i] = r.n
+                events += r.n
+                if collect:
+                    rollouts[member[r.request_id]] = (r.tokens, r.times)
+            agg.fold(buf, nv)
+            wave_sizes.append(k)
+            done += k
+        wall = time.perf_counter() - t_start
+        return ForecastResult(
+            bin_edges=agg.bin_edges,
+            quantile_levels=tuple(req.quantiles),
+            quantiles=agg.quantiles(req.quantiles),
+            mean=agg.mean(),
+            n_rollouts=req.n_rollouts, events=events,
+            wave_sizes=wave_sizes, wall_s=wall,
+            rollouts_per_sec=req.n_rollouts / max(1e-9, wall),
+            rollouts=rollouts)

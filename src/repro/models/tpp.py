@@ -274,6 +274,98 @@ def rollback(cache, new_len):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (the serving engine's block-table pool)
+# ---------------------------------------------------------------------------
+
+def init_kv_pages(cfg, n_pages: int, page_size: int):
+    """Paged KV pool for the TPP encoder: {k, v}: [L, P, page, H, Dh].
+
+    The TPP encoder has no GQA (every head keeps its own KV), so the KV
+    head axis equals ``cfg.num_heads`` and ``spec_verify_attention``
+    runs with group size 1.
+    """
+    dtype = cm.get_dtype(cfg.dtype)
+    L, H, Dh = cfg.num_layers, cfg.num_heads, cfg.head_dim
+    return {"k": jnp.zeros((L, n_pages, page_size, H, Dh), dtype),
+            "v": jnp.zeros((L, n_pages, page_size, H, Dh), dtype)}
+
+
+def extend_paged(cfg, params, pages, block_tables, lens, times, types, *,
+                 nvalid=None, policy: KernelPolicy = None, max_kv: int = 0):
+    """Batched TPP extend over a paged pool: append ``c`` events per
+    sequence and return (h [S, c, D], new pages).
+
+    times/types: [S, c] absolute event times / marks written at logical
+    positions lens[s]..lens[s]+c-1 through block_tables [S, NB]. This is
+    the TPP analogue of ``transformer.extend_paged`` — one entry point
+    for decode (c=1), the speculative verify (c=gamma+1) and chunked
+    prefill (``nvalid`` masks the tail of a partial chunk; masked
+    positions write to the reserved null page 0).
+
+    Restricted to the softmax encoders (thp/sahp): AttNHP's
+    +1-denominator attention has no paged-kernel form and stays on the
+    dense reference path.
+    """
+    if cfg.encoder == "attnhp":
+        raise ValueError("extend_paged supports the softmax encoders "
+                         "(thp/sahp); attnhp serves through the dense "
+                         "cache")
+    z = temporal_encoding(cfg, params, times)         # [S, c, D]
+    x = params["embed"][types].astype(z.dtype) + z
+    x = x.astype(cm.get_dtype(cfg.dtype))
+    S, c = types.shape
+    P, page = pages["k"].shape[1], pages["k"].shape[2]
+    NB = block_tables.shape[1]
+    H, Dh = pages["k"].shape[3], pages["k"].shape[4]
+
+    lens = lens.astype(jnp.int32)
+    positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)  # [S, c]
+    blk_idx = positions // page
+    blk = jnp.take_along_axis(block_tables.astype(jnp.int32),
+                              jnp.minimum(blk_idx, NB - 1), axis=1)
+    keep = blk_idx < NB
+    if nvalid is not None:
+        keep &= jnp.arange(c, dtype=jnp.int32)[None, :] < nvalid[:, None]
+    blk = jnp.where(keep, blk, 0)                     # null page 0
+    flat = (blk * page + positions % page).reshape(-1)
+
+    def body(x, layer_in):
+        lp, kp, vp = layer_in
+        xn = cm.rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dhe->bshe", xn, lp["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", xn, lp["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", xn, lp["wv"])
+        kp = kp.reshape(P * page, H, Dh).at[flat].set(
+            k.reshape(S * c, H, Dh).astype(kp.dtype)
+        ).reshape(P, page, H, Dh)
+        vp = vp.reshape(P * page, H, Dh).at[flat].set(
+            v.reshape(S * c, H, Dh).astype(vp.dtype)
+        ).reshape(P, page, H, Dh)
+        o = ops.spec_verify_attention(q, kp, vp, block_tables, lens,
+                                      max_kv=max_kv, policy=policy)
+        out = jnp.einsum("bchd,hdo->bco", o.astype(jnp.float32),
+                         lp["wo"].astype(jnp.float32)).astype(x.dtype)
+        x = x + out
+        xn2 = cm.rms_norm(x, lp["ln2"])
+        x = x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(
+            jnp.einsum("bsd,df->bsf", xn2, lp["w1"])), lp["w2"])
+        return x, (kp, vp)
+
+    x, (k_new, v_new) = lax.scan(body, x,
+                                 (params["layers"], pages["k"], pages["v"]))
+    h = cm.rms_norm(x, params["final_ln"])
+    return h, {"k": k_new, "v": v_new}
+
+
+def prefill_paged(cfg, params, pages, block_tables, lens, times, types,
+                  nvalid, *, policy: KernelPolicy = None, max_kv: int = 0):
+    """Chunked history prefill through the paged pool (= ``extend_paged``
+    with a per-sequence valid-length mask)."""
+    return extend_paged(cfg, params, pages, block_tables, lens, times,
+                        types, nvalid=nvalid, policy=policy, max_kv=max_kv)
+
+
+# ---------------------------------------------------------------------------
 # decoder heads (Sec. 4.2)
 # ---------------------------------------------------------------------------
 
@@ -359,3 +451,41 @@ def loglik(cfg, params, times, types, mask, t_end):
     mix_last = interval_params(cfg, params, h_last)
     tail = interval_logsf(mix_last, jnp.maximum(t_end - t_last, 1e-9))
     return ev_ll + tail
+
+
+# ---------------------------------------------------------------------------
+# forecasting helpers: per-time-bin event counts from sampled rollouts
+# ---------------------------------------------------------------------------
+
+def bin_counts(times, n_valid, t0, t1, bins: int):
+    """Count sampled events per time bin over (t0, t1].
+
+    times: [..., E] padded event-time buffers; n_valid: [...] number of
+    live entries per buffer. Returns int32 counts [..., bins] where bin b
+    covers (t0 + b*w, t0 + (b+1)*w] with w = (t1 - t0)/bins — the
+    half-open-on-the-left convention matches the samplers' ``t <= t_end``
+    horizon test, so an event exactly at t1 lands in the last bin and the
+    history's anchor event at t0 is excluded.
+
+    This is the device-side reduction the forecast aggregator folds each
+    wave through; it never materializes anything per-rollout beyond the
+    [..., bins] counts.
+    """
+    times = jnp.asarray(times, jnp.float32)
+    E = times.shape[-1]
+    width = (jnp.asarray(t1, jnp.float32) - t0) / bins
+    rel = times - t0
+    # ceil(rel/width) - 1 maps (t0, t0+w] -> 0 under the left-open rule
+    idx = jnp.ceil(rel / width).astype(jnp.int32) - 1
+    valid = (jnp.arange(E, dtype=jnp.int32) < n_valid[..., None])
+    valid &= (rel > 0) & (idx < bins)
+    idx = jnp.clip(idx, 0, bins - 1)
+    one = valid.astype(jnp.int32)
+
+    def scatter(i, o):
+        return jnp.zeros((bins,), jnp.int32).at[i].add(o)
+
+    flat_idx = idx.reshape((-1, E))
+    flat_one = one.reshape((-1, E))
+    out = jax.vmap(scatter)(flat_idx, flat_one)
+    return out.reshape(times.shape[:-1] + (bins,))

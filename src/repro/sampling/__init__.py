@@ -18,11 +18,12 @@ from .registry import (draft_policy_names, get_draft_policy, get_strategy,
                        register_draft_policy, register_strategy,
                        strategy_names)
 from .result import SampleBatch, SampleStats, SeqResult
-from .spec import SamplerSpec, SpecError
+from .spec import ForecastSpec, SamplerSpec, SpecError
 
 __all__ = [
     "ENGINE", "SamplingEngine", "build_sampler", "sample",
-    "SamplerSpec", "SpecError", "SampleBatch", "SampleStats", "SeqResult",
+    "SamplerSpec", "ForecastSpec", "SpecError",
+    "SampleBatch", "SampleStats", "SeqResult",
     "DraftPolicy", "FixedGamma", "AdaptiveGamma",
     "register_strategy", "get_strategy", "strategy_names",
     "register_draft_policy", "get_draft_policy", "draft_policy_names",

@@ -8,17 +8,54 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from typing import Optional
 
 METHODS = ("ar", "sd", "thinning")
 EXECUTIONS = ("host", "jit", "vmap", "sharded")
 DOMAINS = ("tpp", "token")
 KERNELS = ("auto", "pallas", "ref")
 KV_LAYOUTS = ("auto", "paged", "dense")
-SCHEDS = ("fifo", "priority", "sjf")
+SCHEDS = ("fifo", "priority", "sjf", "grouped")
 
 
 class SpecError(ValueError):
     """Invalid ``SamplerSpec`` combination."""
+
+
+@dataclass(frozen=True)
+class ForecastSpec:
+    """Long-horizon forecast workload riding a ``SamplerSpec``.
+
+    Attach via ``SamplerSpec(domain="tpp", forecast=ForecastSpec(...))``
+    and hand the spec to ``repro.forecast.build_forecaster``: the engine
+    samples ``n_rollouts`` continuations of one shared event history in
+    pool-sized waves and reduces them on device to per-time-bin event
+    count quantiles. ``horizon`` is the forecast window beyond the last
+    observed event; the per-rollout event budget and cutoff come from
+    the carrying spec's ``max_events``/``t_end`` machinery (the request
+    supplies its own absolute ``t_end = t_last + horizon``).
+    """
+
+    horizon: float = 10.0
+    n_rollouts: int = 1000
+    bins: int = 20
+    quantiles: tuple = (0.1, 0.25, 0.5, 0.75, 0.9)
+
+    def validate(self) -> "ForecastSpec":
+        if self.horizon <= 0:
+            raise SpecError(f"forecast horizon must be > 0, "
+                            f"got {self.horizon}")
+        if self.n_rollouts < 1:
+            raise SpecError(f"forecast n_rollouts must be >= 1, "
+                            f"got {self.n_rollouts}")
+        if self.bins < 1:
+            raise SpecError(f"forecast bins must be >= 1, got {self.bins}")
+        if not self.quantiles:
+            raise SpecError("forecast needs at least one quantile level")
+        for q in self.quantiles:
+            if not 0.0 <= q <= 1.0:
+                raise SpecError(f"forecast quantile {q} outside [0, 1]")
+        return self
 
 
 @dataclass(frozen=True)
@@ -95,6 +132,11 @@ class SamplerSpec:
     # stream prompts into the paged pool in chunks of this many tokens
     # (0 = disabled: the dense-staging admission prefill)
     prefill_chunk: int = 0
+    # long-horizon forecast workload: TPP-only, runs the request through
+    # the SERVING engine (wave-scheduled fan-out) instead of the batch
+    # samplers — which is why a forecast spec may also carry the serving
+    # knobs (sched/kv_layout/prefill_chunk) that plain TPP specs reject
+    forecast: Optional[ForecastSpec] = None
     # thinning-only knobs (App. D.1 adaptive bound)
     thinning_safety: float = 2.0
     thinning_grid: int = 8
@@ -120,9 +162,14 @@ class SamplerSpec:
         if self.kv_layout not in KV_LAYOUTS:
             raise SpecError(f"unknown kv_layout {self.kv_layout!r}; "
                             f"expected one of {KV_LAYOUTS}")
-        if self.kv_layout != "auto" and self.domain != "token":
-            raise SpecError("kv_layout only applies to domain='token' "
-                            "(the TPP samplers have no KV pool)")
+        if (self.kv_layout != "auto" and self.domain != "token"
+                and self.forecast is None):
+            raise SpecError("kv_layout only applies to domain='token' or "
+                            "forecast specs (the batch TPP samplers have "
+                            "no KV pool)")
+        if self.forecast is not None and self.kv_layout == "dense":
+            raise SpecError("forecasting forks rollouts onto shared KV "
+                            "pages; it requires the paged layout")
         if self.sched not in SCHEDS:
             raise SpecError(f"unknown sched {self.sched!r}; "
                             f"expected one of {SCHEDS}")
@@ -130,9 +177,19 @@ class SamplerSpec:
             raise SpecError("prefill_chunk must be >= 0 (0 disables "
                             "chunked admission)")
         if ((self.sched != "fifo" or self.prefill_chunk)
-                and self.domain != "token"):
+                and self.domain != "token" and self.forecast is None):
             raise SpecError("sched/prefill_chunk only apply to "
-                            "domain='token' (the serving scheduler)")
+                            "domain='token' or forecast specs (the "
+                            "serving scheduler)")
+        if self.forecast is not None:
+            if self.domain != "tpp":
+                raise SpecError("forecast is a TPP workload; set "
+                                "domain='tpp'")
+            if self.method not in ("ar", "sd"):
+                raise SpecError("forecast serves method='ar' or 'sd' "
+                                "rollouts (thinning is a host-loop "
+                                "baseline, not a serving path)")
+            self.forecast.validate()
         if self.prefill_chunk and self.kv_layout == "dense":
             raise SpecError("prefill_chunk streams prompts through the "
                             "paged pool; it cannot combine with "
@@ -149,12 +206,17 @@ class SamplerSpec:
                 raise SpecError("domain='token' serving is host-only today")
             if self.max_len < self.max_events:
                 raise SpecError("max_len must cover max_events new tokens")
-        if self.execution == "jit" and self.batch != 1:
+        # forecast specs hand batch/fanout to the SERVING engine (batch =
+        # max_batch slots, fan-out is wave-scheduled), so the batch-
+        # sampler execution constraints below don't apply to them
+        if (self.execution == "jit" and self.batch != 1
+                and self.forecast is None):
             raise SpecError("execution='jit' samples a single sequence; use "
                             "execution='vmap' or 'sharded' for batch > 1")
         if self.fanout < 1:
             raise SpecError(f"fanout must be >= 1, got {self.fanout}")
-        if self.execution == "jit" and self.fanout != 1:
+        if (self.execution == "jit" and self.fanout != 1
+                and self.forecast is None):
             raise SpecError("execution='jit' samples a single sequence; "
                             "use execution='vmap'/'sharded' (or 'host') "
                             "for fanout > 1")

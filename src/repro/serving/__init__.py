@@ -12,13 +12,15 @@ in beside them.
 from .engine import ServingEngine
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind)
+from .prefix_cache import PrefixCache, tpp_history_key
 from .request import EngineStats, ServeRequest, ServeResult
-from .scheduler import (FifoPolicy, PriorityPolicy, Scheduler,
-                        SchedulingPolicy, SJFPolicy, SlotState,
+from .scheduler import (FifoPolicy, GroupedPolicy, PriorityPolicy,
+                        Scheduler, SchedulingPolicy, SJFPolicy, SlotState,
                         resolve_sched_policy)
 
 __all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
            "Scheduler", "SlotState", "SchedulingPolicy", "FifoPolicy",
-           "PriorityPolicy", "SJFPolicy", "resolve_sched_policy",
-           "KVCachePool", "PagedKVCachePool", "paged_supported",
-           "rollback_kind"]
+           "PriorityPolicy", "SJFPolicy", "GroupedPolicy",
+           "resolve_sched_policy", "KVCachePool", "PagedKVCachePool",
+           "paged_supported", "rollback_kind", "PrefixCache",
+           "tpp_history_key"]

@@ -48,10 +48,12 @@ import numpy as np
 from ..core import speculative as sdp
 from ..kernels.policy import KernelPolicy
 from ..models import registry
+from ..models import tpp as tppm
 from ..models import transformer as tfm
+from . import tpp_rounds
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind, rollback_one, select_slots)
-from .prefix_cache import PrefixCache
+from .prefix_cache import PrefixCache, tpp_history_key
 from .request import EngineStats, ServeRequest, ServeResult, _as_key
 from .scheduler import DECODING, PREFILLING, Scheduler, SlotState
 
@@ -385,14 +387,37 @@ class ServingEngine:
         self.cfg_d, self.params_d = cfg_d, params_d
         self.method = method
         self.max_batch, self.max_len = max_batch, max_len
+        # event-sequence (TPP) domain: a config without a token-LM
+        # ``family`` attribute is a TPPConfig — the engine then commits
+        # (time, mark) events through the paged TPP rounds and "auto"
+        # follows the TPP kernel convention (reference off-TPU, like
+        # ``tpp.resolve_policy``)
+        self.domain = "tpp" if not hasattr(cfg_t, "family") else "token"
         pol = kernel if isinstance(kernel, KernelPolicy) \
             else KernelPolicy(backend=kernel)
-        self.policy = pol.resolve(default_backend="pallas")
+        self.policy = pol.resolve(
+            default_backend="ref" if self.domain == "tpp" else "pallas")
         if page_size is not None:
             self.policy = self.policy.replace(page_size=page_size)
         self.n_pages = n_pages
-        paged_ok = (mesh is None and paged_supported(cfg_t)
-                    and (method == "ar" or paged_supported(cfg_d)))
+        if self.domain == "tpp":
+            paged_ok = (mesh is None and cfg_t.encoder in ("thp", "sahp")
+                        and (method == "ar"
+                             or cfg_d.encoder in ("thp", "sahp")))
+            if kv_layout == "dense" or not paged_ok:
+                raise ValueError(
+                    "the TPP domain serves through the paged pool only: "
+                    "kv_layout 'auto'/'paged', softmax encoders "
+                    "(thp/sahp) and no mesh")
+            kv_layout = "paged"
+            if prefill_chunk is None:
+                # TPP admission is always chunked — the staging prefill
+                # is a token-LM path (it samples a first token from
+                # logits; TPP histories produce none)
+                prefill_chunk = 32
+        else:
+            paged_ok = (mesh is None and paged_supported(cfg_t)
+                        and (method == "ar" or paged_supported(cfg_d)))
         if kv_layout == "auto":
             kv_layout = "paged" if paged_ok else "dense"
         elif kv_layout == "paged" and not paged_ok:
@@ -467,15 +492,25 @@ class ServingEngine:
             self._policy_state = self.draft_policy.init_state()
         else:
             self.draft_policy = None
+        # TPP rounds keep the constructor's FIXED window (no adaptive or
+        # clamped gamma): a fixed window keeps every request's event
+        # stream bitwise independent of batch and wave composition — the
+        # forecast executor's reproducibility contract — and the
+        # admission-time reservation of prompt + budget + gamma
+        # positions is what guarantees the transient window always fits
+        self.tpp_gamma = gamma
+        self._tpp_margin = gamma if method == "sd" else 0
         self._stats = EngineStats()
         self._results: List[ServeResult] = []
 
     def _make_pool(self, cfg):
         if self.kv_layout == "paged":
+            init = tppm.init_kv_pages if self.domain == "tpp" else None
             return PagedKVCachePool(self.max_batch, cfg,
                                     page_size=self.policy.page_size,
                                     max_len=self.max_len,
-                                    n_pages=self.n_pages)
+                                    n_pages=self.n_pages,
+                                    init_pages=init)
         if self.rules is None:
             return KVCachePool(self.max_batch)
         return KVCachePool(self.max_batch, rules=self.rules,
@@ -512,7 +547,8 @@ class ServingEngine:
     # -- public API --------------------------------------------------------
     def submit(self, req: ServeRequest = None, *, prompt=None,
                max_new_tokens: int = 32, temperature: float = 1.0,
-               rng=0, extra=None, priority: int = 0, fanout: int = 1):
+               rng=0, extra=None, priority: int = 0, fanout: int = 1,
+               fanout_offset: int = 0, times=None, t_end=None):
         """Queue a request (either a ``ServeRequest`` or its fields).
 
         ``fanout=K`` queues K scenario rollouts of the request: one
@@ -522,21 +558,49 @@ class ServingEngine:
         members onto the same copy-on-write pages; each member's
         committed tokens are bitwise what K independent submissions
         with those rng keys would produce. Returns the list of K
-        request ids (a single id when fanout == 1)."""
+        request ids (a single id when fanout == 1 and no offset).
+
+        ``fanout_offset`` shifts the members' rng folds: member k draws
+        from ``fold_in(rng, fanout_offset + k)``, so successive WAVES
+        of submissions (the forecast executor's bounded-pool loop) tile
+        one contiguous stream — wave w submitting K rollouts at offset
+        w*K commits bitwise the same sequences a single
+        fanout=n_rollouts submission would at members [w*K, (w+1)*K).
+        A nonzero offset takes the group path even for K == 1.
+
+        TPP (event-sequence) requests pass ``times`` (+ optional
+        ``t_end``); their lifetime reservation additionally holds the
+        speculative window, so history + budget + gamma must fit
+        ``max_len``."""
         if req is None:
             req = ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                                temperature=temperature, rng=rng, extra=extra,
-                               priority=priority)
+                               priority=priority, times=times, t_end=t_end)
+        if req.is_tpp != (self.domain == "tpp"):
+            raise ValueError(
+                "request/engine domain mismatch: TPP engines (built from "
+                "a TPPConfig) take event-history requests (times=); "
+                "token engines take token prompts")
+        if req.is_tpp and (req.prompt_len + req.max_new_tokens
+                           + self._tpp_margin > self.max_len):
+            raise ValueError(
+                f"request {req.request_id}: history ({req.prompt_len}) + "
+                f"max events ({req.max_new_tokens}) + speculative window "
+                f"({self._tpp_margin}) exceeds the engine's max_len "
+                f"({self.max_len})")
         if fanout < 1:
             raise ValueError("fanout must be >= 1")
-        if fanout == 1:
+        if fanout_offset < 0:
+            raise ValueError("fanout_offset must be >= 0")
+        if fanout == 1 and fanout_offset == 0:
             return self.scheduler.submit(req)
         gid = next(self._group_ids)
         return [self.scheduler.submit(ServeRequest(
             prompt=req.prompt, max_new_tokens=req.max_new_tokens,
             temperature=req.temperature,
-            rng=jax.random.fold_in(req.rng, k),
-            extra=req.extra, priority=req.priority, prefix_group=gid))
+            rng=jax.random.fold_in(req.rng, fanout_offset + k),
+            extra=req.extra, priority=req.priority, prefix_group=gid,
+            times=req.times, t_end=req.t_end))
             for k in range(fanout)]
 
     def step(self) -> List[ServeResult]:
@@ -560,7 +624,8 @@ class ServingEngine:
                 continue
             blocked = not self._admit(slot, state)
         if self.prefill_chunk is not None:
-            self._prefill_step()
+            (self._tpp_prefill_step if self.domain == "tpp"
+             else self._prefill_step)()
         # requests whose whole budget was the prefill token
         alive: List[Tuple[int, SlotState]] = []
         for slot, state in self.scheduler.active():
@@ -571,7 +636,10 @@ class ServingEngine:
             else:
                 alive.append((slot, state))
         if alive:
-            if self.method == "sd":
+            if self.domain == "tpp":
+                (self._tpp_sd_step if self.method == "sd"
+                 else self._tpp_ar_step)(alive)
+            elif self.method == "sd":
                 (self._sd_step_paged if self.kv_layout == "paged"
                  else self._sd_step)(alive)
             else:
@@ -613,6 +681,8 @@ class ServingEngine:
         staging path runs: one dense batch-1 prefill scattered into the
         pool via ``write_prefill``."""
         req = state.request
+        if self.domain == "tpp":
+            return self._tpp_admit(slot, state)
         prefix = 0
         if req.extra and req.extra.get("vision_embeds") is not None:
             prefix = int(req.extra["vision_embeds"].shape[1])
@@ -623,7 +693,7 @@ class ServingEngine:
             # prompt pages instead of prefilling its own copy
             src = self._fork_source_for(req)
             if src is not None:
-                if src["logits"] is None:
+                if not src["ready"]:
                     # the group's source is still prefilling — wait for
                     # it rather than paying a duplicate prefill
                     self.scheduler.defer(slot)
@@ -717,19 +787,23 @@ class ServingEngine:
         return src
 
     def _register_fork_source(self, state: SlotState, slot: int,
-                              logits) -> None:
+                              logits, ready: Optional[bool] = None) -> None:
         """Make this slot its fan-out group's fork source (first
         admitted member wins; later members fork it). ``logits`` is the
         prompt's last-position TEMPERATURE-FREE logits row — what a
         forked sibling samples its first token from — or None while the
-        source is still prefilling (``_prefill_step`` fills it in)."""
+        source is still prefilling (``_prefill_step`` fills it in).
+        ``ready`` flags whether siblings may fork NOW; it defaults to
+        "logits are present" and is set explicitly by the TPP domain,
+        whose forks need the source's prefilled pages but no logits."""
         req = state.request
         if (req.prefix_group is None or req.extra
                 or self.kv_layout != "paged"
                 or req.prefix_group in self._fork_sources):
             return
         self._fork_sources[req.prefix_group] = {
-            "slot": slot, "state": state, "logits": logits}
+            "slot": slot, "state": state, "logits": logits,
+            "ready": (logits is not None) if ready is None else ready}
 
     def _admit_fork(self, slot: int, state: SlotState, src, total: int) -> bool:
         """Admit a fan-out sibling by FORKING the source's prompt pages:
@@ -771,6 +845,12 @@ class ServingEngine:
         self._stats.prefix_lookups += 1
         self._stats.prefix_hits += 1
         self._stats.prefix_hit_tokens += plen
+        if req.is_tpp:
+            # no first-token draw: the TPP pending event is the shared
+            # history's own last event
+            state.horizon = req.t_end
+            self._tpp_first_event(state)
+            return True
         lp = jax.nn.log_softmax(jnp.asarray(src["logits"])
                                 / req.temperature)
         tok0 = int(jax.random.categorical(
@@ -856,12 +936,302 @@ class ServingEngine:
                         # the group's siblings sample THEIR first token
                         # from this temperature-free row
                         src["logits"] = np.asarray(lg[slot, n - 1])
+                        src["ready"] = True
                     lp = jax.nn.log_softmax(
                         lg[slot, n - 1] / st.request.temperature)
                     tok0 = int(jax.random.categorical(
                         jax.random.fold_in(st.request.rng, 0), lp))
                     self._first_token(st, tok0)
         self._stats.prefill_s += time.perf_counter() - t0
+
+    # -- TPP (event-sequence) serving --------------------------------------
+    def _tpp_enc(self, req: ServeRequest):
+        """The encoder input a TPP request PREFILLS: [BOS@t=0] +
+        history[:-1] (length == prompt_len). The history's LAST event is
+        the pending event the first decode round ingests — the same
+        cache-trails-committed-by-one convention as the sampling loops,
+        so the cache length invariant ``len == prompt_len + len(out)``
+        holds from admission onward."""
+        n = req.prompt_len
+        enc_t = np.zeros((n,), np.float32)
+        enc_k = np.full((n,), int(self.cfg_t.num_marks), np.int32)
+        if n > 1:
+            enc_t[1:] = req.times[:-1]
+            enc_k[1:] = np.asarray(req.prompt)[:-1]
+        return enc_t, enc_k
+
+    def _tpp_admit(self, slot: int, state: SlotState) -> bool:
+        """Paged TPP admission: reserve history + budget + gamma, adopt
+        any ``tpp_history_key`` radix-cache match, then park the slot
+        PREFILLING (or straight to DECODING for an empty history —
+        there is nothing to prefill; the rollout starts at the BOS
+        sentinel event)."""
+        req = state.request
+        total = req.prompt_len + req.max_new_tokens + self._tpp_margin
+        src = self._fork_source_for(req)
+        if src is not None:
+            if not src["ready"]:
+                # the group's source history is still prefilling — wait
+                # for its pages rather than paying a duplicate prefill
+                self.scheduler.defer(slot)
+                return False
+            state.horizon = req.t_end
+            return self._admit_fork(slot, state, src, total)
+        hit, runs = 0, None
+        if self.prefix_cache is not None and req.prompt_len > 0:
+            enc_t, enc_k = self._tpp_enc(req)
+            hit, runs = self.prefix_cache.match(
+                tpp_history_key(enc_t, enc_k), req.prompt_len - 1)
+        adopted = hit // self.pool_t.page
+        ok = self.pool_t.can_admit(total, adopted_blocks=adopted)
+        if ok and self.method == "sd":
+            ok = self.pool_d.can_admit(total, adopted_blocks=adopted)
+        if not ok:
+            self.scheduler.defer(slot)
+            if not any(self.scheduler.active()):
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single request "
+                    f"(need {total} positions); raise n_pages")
+            return False
+        self.pool_t.reserve(slot, total)
+        if self.method == "sd":
+            self.pool_d.reserve(slot, total)
+        if self.prefix_cache is not None and req.prompt_len > 0:
+            self._stats.prefix_lookups += 1
+        if hit:
+            self.pool_t.adopt(slot, runs["t"])
+            if self.method == "sd":
+                self.pool_d.adopt(slot, runs["d"])
+            state.prefix_hit_tokens = hit
+            self._stats.prefix_hits += 1
+            self._stats.prefix_hit_tokens += hit
+        state.horizon = req.t_end
+        state.prefilled = hit
+        if req.prompt_len == 0:
+            self._tpp_first_event(state)
+            self._register_fork_source(state, slot, logits=None, ready=True)
+        else:
+            state.phase = PREFILLING
+            self._register_fork_source(state, slot, logits=None,
+                                       ready=False)
+        return True
+
+    def _tpp_first_event(self, state: SlotState) -> None:
+        """Flip a slot whose encoder history is in the pool to DECODING.
+        The TPP "first token" is the history's own last event (or the
+        BOS sentinel at t=0 for an empty history) — it becomes the
+        pending event round 1 ingests; nothing is sampled, so unlike
+        the LM path admission consumes no ``fold_in(rng, 0)`` draw
+        (round indices start at 1 on both domains either way)."""
+        req = state.request
+        if req.prompt_len > 0:
+            state.t_pend = float(req.times[-1])
+            state.pending = int(np.asarray(req.prompt)[-1])
+        else:
+            state.t_pend = 0.0
+            state.pending = int(self.cfg_t.num_marks)
+        state.phase = DECODING
+        state.ttft_rounds = self.scheduler.step_idx - state.submit_step
+        state.ttft_s = time.perf_counter() - state.submit_t
+        self._stats.prefills += 1
+
+    def _tpp_prefill_step(self) -> None:
+        """Chunked (time, mark) history prefill — ``_prefill_step`` with
+        a float time lane and no logits/first-token sampling: a slot
+        whose history completes flips to DECODING with its last history
+        event pending, and its fan-out group (if any) becomes forkable."""
+        budget = self.prefill_budget or (1 << 30)
+        chunk = self.prefill_chunk
+        t0 = time.perf_counter()
+        sd = self.method == "sd"
+        while budget > 0:
+            pref = [(s, st) for s, st in self.scheduler.active()
+                    if st.phase == PREFILLING]
+            if not pref:
+                break
+            S = self.max_batch
+            times = np.zeros((S, chunk), np.float32)
+            types = np.zeros((S, chunk), np.int32)
+            nvalid = np.zeros((S,), np.int32)
+            lens = np.zeros((S,), np.int32)
+            work = []
+            for slot, st in pref:
+                n = min(chunk, st.request.prompt_len - st.prefilled, budget)
+                if n <= 0:
+                    continue                     # budget spent this call
+                enc_t, enc_k = self._tpp_enc(st.request)
+                times[slot, :n] = enc_t[st.prefilled:st.prefilled + n]
+                types[slot, :n] = enc_k[st.prefilled:st.prefilled + n]
+                nvalid[slot] = n
+                lens[slot] = st.prefilled
+                budget -= n
+                self.pool_t.cow_for_append(slot)
+                self.pool_t.ensure_blocks(slot, st.prefilled + n)
+                if sd:
+                    self.pool_d.cow_for_append(slot)
+                    self.pool_d.ensure_blocks(slot, st.prefilled + n)
+                work.append((slot, st, n))
+            if not work:
+                break
+            fn = tpp_rounds.tpp_prefill_chunk_fn(
+                self.cfg_t, self.cfg_d if sd else None, chunk,
+                self.policy, self.max_len)
+            pg_t, pg_d = fn(
+                self.params_t, self.params_d, self.pool_t.pages,
+                self.pool_t.device_tables(),
+                self.pool_d.pages if sd else None,
+                self.pool_d.device_tables() if sd else None,
+                jnp.asarray(lens), jnp.asarray(times), jnp.asarray(types),
+                jnp.asarray(nvalid))
+            self.pool_t.pages = pg_t
+            if sd:
+                self.pool_d.pages = pg_d
+            for slot, st, n in work:
+                st.prefilled += n
+                self.pool_t.lens[slot] = st.prefilled
+                if sd:
+                    self.pool_d.lens[slot] = st.prefilled
+                self._stats.prefill_tokens += n
+                if st.prefilled == st.request.prompt_len:
+                    src = (self._fork_sources.get(st.request.prefix_group)
+                           if st.request.prefix_group is not None else None)
+                    if src is not None and src["state"] is st:
+                        src["ready"] = True
+                    self._tpp_first_event(st)
+        self._stats.prefill_s += time.perf_counter() - t0
+
+    def _tpp_round_inputs(self, alive):
+        S = self.max_batch
+        t_pend = np.zeros((S,), np.float32)
+        k_pend = np.zeros((S,), np.int32)
+        ridx = np.zeros((S,), np.int32)
+        keys = [jax.random.PRNGKey(0)] * S
+        for slot, st in alive:
+            t_pend[slot] = st.t_pend
+            k_pend[slot] = st.pending
+            ridx[slot] = st.round_idx
+            keys[slot] = _as_key(st.request.rng)
+        return (jnp.asarray(t_pend), jnp.asarray(k_pend), jnp.stack(keys),
+                jnp.asarray(ridx))
+
+    def _tpp_sd_step(self, alive) -> None:
+        """One paged TPP propose-verify round (fixed window — see the
+        constructor note). Commit is append + block-table truncation,
+        exactly like the token path, plus the float event-time lane."""
+        gamma = self.tpp_gamma
+        len0_t, len0_d = {}, {}
+        for slot, _ in alive:
+            len0_t[slot] = int(self.pool_t.lens[slot])
+            len0_d[slot] = int(self.pool_d.lens[slot])
+            self.pool_t.cow_for_append(slot)
+            self.pool_d.cow_for_append(slot)
+            self.pool_t.ensure_blocks(slot, len0_t[slot] + gamma + 1)
+            self.pool_d.ensure_blocks(slot, len0_d[slot] + gamma + 1)
+        t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
+        fn = tpp_rounds.tpp_sd_round_paged_fn(
+            self.cfg_t, self.cfg_d, gamma, self.policy, self.max_len)
+        pg_t, pg_d, d_t, d_k, A, new_t, new_k = fn(
+            self.params_t, self.params_d, self.pool_t.pages,
+            self.pool_d.pages, self.pool_t.device_tables(),
+            self.pool_t.device_lens(), self.pool_d.device_tables(),
+            self.pool_d.device_lens(), t_pend, k_pend, keys, ridx)
+        self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
+        d_t, d_k, A = np.asarray(d_t), np.asarray(d_k), np.asarray(A)
+        new_t, new_k = np.asarray(new_t), np.asarray(new_k)
+        delivered = 0
+        for slot, st in alive:
+            a = int(A[slot])
+            budget = st.request.max_new_tokens
+            before = min(len(st.out), budget)
+            st.out.extend(int(m) for m in d_k[slot, :a])
+            st.out_times.extend(float(t) for t in d_t[slot, :a])
+            st.out.append(int(new_k[slot]))
+            st.out_times.append(float(new_t[slot]))
+            st.pending = int(new_k[slot])
+            st.t_pend = float(new_t[slot])
+            st.round_idx += 1
+            st.drafted += gamma
+            st.accepted += a
+            st.rounds += 1
+            # the over-budget tail is trimmed at retire (out and
+            # out_times must stay aligned); count delivered within it
+            delivered += min(len(st.out), budget) - before
+            self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
+            self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
+        self._stats.tokens += delivered
+        self._stats.drafted += gamma * len(alive)
+        self._stats.accepted += int(sum(int(A[s]) for s, _ in alive))
+        self._stats.target_forwards += 1
+        self._stats.draft_forwards += gamma
+        self._note_group_round(alive)
+
+    def _tpp_ar_step(self, alive) -> None:
+        """One committed event per alive slot through the paged pool."""
+        len0 = {}
+        for slot, _ in alive:
+            len0[slot] = int(self.pool_t.lens[slot])
+            self.pool_t.cow_for_append(slot)
+            self.pool_t.ensure_blocks(slot, len0[slot] + 1)
+        t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
+        fn = tpp_rounds.tpp_ar_round_paged_fn(self.cfg_t, self.policy,
+                                              self.max_len)
+        pg_t, new_t, new_k = fn(
+            self.params_t, self.pool_t.pages, self.pool_t.device_tables(),
+            self.pool_t.device_lens(), t_pend, k_pend, keys, ridx)
+        self.pool_t.pages = pg_t
+        new_t, new_k = np.asarray(new_t), np.asarray(new_k)
+        for slot, st in alive:
+            self.pool_t.truncate(slot, len0[slot] + 1)
+            st.out.append(int(new_k[slot]))
+            st.out_times.append(float(new_t[slot]))
+            st.pending = int(new_k[slot])
+            st.t_pend = float(new_t[slot])
+            st.round_idx += 1
+            st.rounds += 1
+        self._stats.tokens += len(alive)
+        self._stats.target_forwards += 1
+        self._note_group_round(alive)
+
+    def fanout_headroom(self, prompt_len: int, max_new_tokens: int) -> int:
+        """How many members of ONE fan-out group over a shared
+        ``prompt_len`` history/prompt the pools could admit right now —
+        the wave size the forecast executor submits. Charges the first
+        member its full lifetime reservation, every further member only
+        the unshared tail past the forked prefix (+2 boundary
+        copy-on-write pages), against the free list plus synchronously
+        evictable cache pages net of standing reservations; capped at
+        ``max_batch``, floored at 1 (a single member is admissible by
+        construction, so a wave always makes progress — an optimistic
+        estimate merely defers its surplus members to the next steps)."""
+        if self.kv_layout != "paged":
+            return self.max_batch
+        total = prompt_len + max_new_tokens + (
+            self._tpp_margin if self.domain == "tpp" else 0)
+        k = self.max_batch
+        pools = [self.pool_t] + ([self.pool_d]
+                                 if self.pool_d is not None else [])
+        for pool in pools:
+            first = pool._blocks_for(min(total, pool.capacity))
+            sib = max(1, first - pool._blocks_for(prompt_len) + 2)
+            avail = pool._headroom() - pool._shortfall()
+            k_pool = 1 if avail < first else 1 + (avail - first) // sib
+            k = min(k, k_pool)
+        return max(1, min(k, self.max_batch))
+
+    def _note_group_round(self, alive) -> None:
+        """Per-group forward-sharing accounting: this round was ONE
+        batched target forward; credit it to every fan-out group with a
+        member aboard, and count the member-rounds it covered."""
+        counts: Dict[int, int] = {}
+        for _, st in alive:
+            g = st.request.prefix_group
+            if g is not None:
+                counts[g] = counts.get(g, 0) + 1
+        for g, c in counts.items():
+            self._stats.group_forwards[g] = \
+                self._stats.group_forwards.get(g, 0) + 1
+            self._stats.group_member_rounds[g] = \
+                self._stats.group_member_rounds.get(g, 0) + c
 
     def _round_inputs(self, alive):
         S = self.max_batch
@@ -980,6 +1350,7 @@ class ServingEngine:
         # host loops' `drafted` counter in sampling/loops.py, so for a
         # single-slot engine draft_forwards == drafted exactly)
         self._stats.draft_forwards += gamma
+        self._note_group_round(alive)
 
     def _sd_step_paged(self, alive) -> None:
         """One paged propose-verify round: grow block tables for the
@@ -1036,6 +1407,7 @@ class ServingEngine:
         self._stats.accepted += int(sum(int(A[s]) for s, _ in alive))
         self._stats.target_forwards += 1
         self._stats.draft_forwards += gamma
+        self._note_group_round(alive)
 
     def _ar_step_paged(self, alive) -> None:
         for slot, _ in alive:
@@ -1057,6 +1429,7 @@ class ServingEngine:
             st.rounds += 1
         self._stats.tokens += len(alive)
         self._stats.target_forwards += 1
+        self._note_group_round(alive)
 
     def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
         """Final pool for this round. Mask families were rolled back
@@ -1091,11 +1464,12 @@ class ServingEngine:
             st.rounds += 1
         self._stats.tokens += len(alive)
         self._stats.target_forwards += 1
+        self._note_group_round(alive)
 
     def _retire(self, slot: int) -> ServeResult:
         st = self.scheduler.retire(slot)
+        req = st.request
         if self.kv_layout == "paged":
-            req = st.request
             src = (self._fork_sources.get(req.prefix_group)
                    if req.prefix_group is not None else None)
             if src is not None and src["state"] is st:
@@ -1114,13 +1488,36 @@ class ServingEngine:
                     if self.pool_d is not None:
                         pages["d"] = [int(self.pool_d.tables[slot, b])
                                       for b in range(full)]
-                    self.prefix_cache.insert(np.asarray(req.prompt), pages)
+                    if req.is_tpp:
+                        keys_arr = tpp_history_key(*self._tpp_enc(req))
+                    else:
+                        keys_arr = np.asarray(req.prompt)
+                    self.prefix_cache.insert(keys_arr, pages)
             # finish returns the slot's (unshared) pages to the free
             # list; shared pages just drop one reference
             self.pool_t.free_slot(slot)
             if self.pool_d is not None:
                 self.pool_d.free_slot(slot)
         self._stats.requests_completed += 1
+        if req.is_tpp or req.prefix_group is not None:
+            self._stats.rollouts += 1
+        if req.is_tpp:
+            # trim to the budget, then to the horizon: event times are
+            # strictly increasing, so `t <= t_end` keeps a prefix (the
+            # samplers' finalize_seq convention)
+            marks = np.asarray(st.out[:req.max_new_tokens], np.int32)
+            etimes = np.asarray(st.out_times[:req.max_new_tokens],
+                                np.float32)
+            if req.t_end is not None:
+                keep = int(np.searchsorted(etimes, np.float32(req.t_end),
+                                           side="right"))
+                marks, etimes = marks[:keep], etimes[:keep]
+            return ServeResult(
+                request_id=req.request_id, tokens=marks,
+                prompt_len=req.prompt_len,
+                drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
+                ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s,
+                prefix_hit_tokens=st.prefix_hit_tokens, times=etimes)
         return ServeResult(
             request_id=st.request.request_id,
             tokens=np.asarray(st.out[:st.request.max_new_tokens], np.int32),

@@ -195,8 +195,9 @@ class PagedKVCachePool:
     """
 
     def __init__(self, n_slots: int, cfg, *, page_size: int = 16,
-                 max_len: int = 256, n_pages: Optional[int] = None):
-        if not paged_supported(cfg):
+                 max_len: int = 256, n_pages: Optional[int] = None,
+                 init_pages=None):
+        if init_pages is None and not paged_supported(cfg):
             raise ValueError(f"family {cfg.family!r} (window="
                              f"{cfg.sliding_window}) cannot use the paged "
                              "pool")
@@ -210,7 +211,11 @@ class PagedKVCachePool:
         if n_pages < self.blocks_per_slot + 1:
             raise ValueError("n_pages must cover at least one full slot")
         self.n_pages = n_pages
-        self.pages = tfm.init_kv_pages(cfg, n_pages, page_size)
+        # page-array factory: the transformer layout by default; other
+        # domains (the TPP encoder) pass their own ``init_pages`` — the
+        # host-side table/refcount machinery is layout-agnostic
+        factory = tfm.init_kv_pages if init_pages is None else init_pages
+        self.pages = factory(cfg, n_pages, page_size)
         self.tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
         self.lens = np.zeros((n_slots,), np.int32)
         self.n_blocks = np.zeros((n_slots,), np.int32)

@@ -36,7 +36,42 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["PrefixCache", "PrefixCacheStats"]
+__all__ = ["PrefixCache", "PrefixCacheStats", "tpp_history_key",
+           "TPP_DT_QUANTUM", "TPP_DT_LEVELS"]
+
+# TPP event-history key quantization: inter-event times are bucketed at
+# this resolution before entering the radix tree. Histories whose
+# inter-event gaps differ by less than a quantum collide onto the same
+# key — an approximation the engine never *relies* on for correctness
+# (forecast queries over the same history array produce identical keys,
+# which is the sharing the workload needs; a sub-quantum-different
+# history adopting the page reuses K/V of an epsilon-shifted twin).
+TPP_DT_QUANTUM = 1e-6
+TPP_DT_LEVELS = 1 << 21
+
+
+def tpp_history_key(times, marks, *, dt: float = TPP_DT_QUANTUM,
+                    levels: int = TPP_DT_LEVELS) -> np.ndarray:
+    """Radix-tree keys for a TPP event history.
+
+    The tree matches runs of ints, so the TPP domain keys each encoder
+    position by ``mark * levels + quantized inter-event gap``. Because
+    the encoder input anchors at the BOS sentinel (t = 0), the gap
+    sequence determines every absolute time: equal key runs => equal
+    (quantized) encoder inputs => equal K/V pages.
+
+    ``times``/``marks``: [N] absolute times / int marks of the ENCODER
+    input (BOS + history[:-1] in the serving engine's convention).
+    Returns [N] int64 keys.
+    """
+    t = np.asarray(times, np.float64).reshape(-1)
+    m = np.asarray(marks, np.int64).reshape(-1)
+    if t.shape != m.shape:
+        raise ValueError("times and marks must have matching lengths")
+    gaps = np.diff(t, prepend=0.0)
+    q = np.minimum(np.round(gaps / dt).astype(np.int64), levels - 1)
+    q = np.maximum(q, 0)
+    return m * np.int64(levels) + q
 
 
 class PrefixCacheStats:
@@ -82,6 +117,12 @@ class PrefixCache:
     ``pools`` maps a short key ("t" target, "d" draft) to the
     ``PagedKVCachePool`` whose pages the tree pins. All pools must use
     the same ``page_size`` (they prefill the same prompts in lockstep).
+
+    The tree is agnostic to what the ints MEAN: the token domain passes
+    prompt token ids, the TPP domain passes ``tpp_history_key`` outputs
+    (mark x quantized inter-event gap per encoder position), so
+    repeated forecast queries over a shared event history hit the same
+    nodes token prompts do.
     """
 
     def __init__(self, page_size: int, pools: Dict[str, object]):

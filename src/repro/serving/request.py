@@ -52,6 +52,16 @@ class ServeRequest:
                       onto the same copy-on-write KV pages. Never
                       affects the sampled tokens (each member keeps its
                       own rng stream) — only what prefill costs.
+    times           : TPP domain only — [P] float32 absolute event times
+                      of the history, one per ``prompt`` entry (the
+                      prompt holds the marks). Setting ``times`` flips
+                      the request into the event-sequence domain:
+                      ``max_new_tokens`` becomes the max-events budget
+                      and generation also stops once the pending event
+                      passes ``t_end``. An EMPTY history is legal here
+                      (the rollout starts from the BOS sentinel).
+    t_end           : TPP domain only — absolute forecast-horizon end;
+                      ``None`` leaves the budget as the only stop.
     """
 
     prompt: Any
@@ -61,14 +71,23 @@ class ServeRequest:
     extra: Optional[Dict[str, Any]] = None
     priority: int = 0
     prefix_group: Optional[int] = None
+    times: Optional[Any] = None
+    t_end: Optional[float] = None
     request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self):
         self.prompt = jnp.asarray(self.prompt, jnp.int32)
         if self.prompt.ndim != 1:
             raise ValueError("ServeRequest.prompt must be 1-D [P]")
-        if self.prompt.shape[0] < 1:
+        if self.times is not None:
+            self.times = np.asarray(self.times, np.float32).reshape(-1)
+            if self.times.shape[0] != self.prompt.shape[0]:
+                raise ValueError("ServeRequest.times must match the prompt "
+                                 "(one event time per mark)")
+        elif self.prompt.shape[0] < 1:
             raise ValueError("ServeRequest.prompt must hold >= 1 token")
+        if self.t_end is not None and self.times is None:
+            raise ValueError("t_end only applies to TPP requests (times=)")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         self.rng = _as_key(self.rng)
@@ -76,6 +95,10 @@ class ServeRequest:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def is_tpp(self) -> bool:
+        return self.times is not None
 
 
 @dataclass(frozen=True)
@@ -93,6 +116,9 @@ class ServeResult:
     prefix_hit_tokens: int = 0  # prompt tokens served from shared pages
                                 # (prefix-cache hit or fan-out fork)
                                 # instead of being prefilled
+    times: Optional[np.ndarray] = None  # TPP domain: [n] float32 absolute
+                                        # event times of the generated
+                                        # events (tokens holds the marks)
 
     @property
     def n(self) -> int:
@@ -120,6 +146,17 @@ class EngineStats:
     state (the radix cache, or a fan-out group's live source), hits are
     admissions that adopted at least one shared page, and hit tokens
     are the prompt tokens those admissions did NOT have to prefill.
+
+    ``rollouts`` counts completed scenario rollouts — TPP event
+    sequences and fan-out group members — the numerator of the
+    forecasting workload's headline ``rollouts_per_sec``.
+    ``group_forwards``/``group_member_rounds`` account forward sharing
+    per fan-out group: for group g, ``group_forwards[g]`` is the number
+    of batched target forwards that served >= 1 member and
+    ``group_member_rounds[g]`` the member-rounds those forwards covered,
+    so ``group_member_rounds[g] / group_forwards[g]`` is the average
+    number of siblings sharing each forward (the quantity the grouped
+    scheduling policy maximizes).
     """
 
     requests_completed: int = 0
@@ -135,6 +172,9 @@ class EngineStats:
     prefix_lookups: int = 0      # admissions that consulted shared state
     prefix_hits: int = 0         # ... that adopted shared pages
     prefix_hit_tokens: int = 0   # prompt tokens skipped via sharing
+    rollouts: int = 0            # completed scenario rollouts
+    group_forwards: Dict[int, int] = field(default_factory=dict)
+    group_member_rounds: Dict[int, int] = field(default_factory=dict)
 
     @property
     def acceptance_rate(self) -> float:
@@ -156,6 +196,15 @@ class EngineStats:
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(1, self.prefix_lookups)
+
+    @property
+    def rollouts_per_sec(self) -> float:
+        return self.rollouts / max(1e-9, self.wall_s)
+
+    def group_sharing(self, gid: int) -> float:
+        """Average members sharing each of group ``gid``'s forwards."""
+        return (self.group_member_rounds.get(gid, 0)
+                / max(1, self.group_forwards.get(gid, 0)))
 
     def describe(self) -> str:
         return (f"requests={self.requests_completed} tokens={self.tokens} "

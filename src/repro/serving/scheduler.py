@@ -69,11 +69,19 @@ class SlotState:
     submit_t: float = 0.0
     ttft_rounds: int = 0  # engine steps from submission to first token
     ttft_s: float = 0.0
+    # TPP (event-sequence) domain: the pending event is a (time, mark)
+    # pair and generation also stops once it passes the horizon
+    t_pend: float = 0.0   # absolute time of the pending event
+    horizon: Optional[float] = None   # request.t_end (None = budget only)
+    out_times: List[float] = field(default_factory=list)
 
     @property
     def done(self) -> bool:
-        return (self.phase == DECODING
-                and len(self.out) >= self.request.max_new_tokens)
+        if self.phase != DECODING:
+            return False
+        if len(self.out) >= self.request.max_new_tokens:
+            return True
+        return self.horizon is not None and self.t_pend > self.horizon
 
 
 @dataclass
@@ -101,6 +109,14 @@ class SchedulingPolicy:
 
     def key(self, entry: _QueueEntry, step: int) -> Tuple:
         raise NotImplementedError
+
+    def key_ctx(self, entry: _QueueEntry, step: int, ctx: dict) -> Tuple:
+        """Context-aware sort key. ``ctx`` carries what the plain key
+        cannot see: which ``prefix_group``s currently occupy slots
+        (``active_groups``) and each pending group's oldest seq stamp
+        (``anchors``). The default ignores it, so every existing policy
+        keeps its exact ordering."""
+        return self.key(entry, step)
 
 
 class FifoPolicy(SchedulingPolicy):
@@ -147,8 +163,39 @@ class SJFPolicy(SchedulingPolicy):
                 0 if entry.deferred else 1, entry.seq)
 
 
+class GroupedPolicy(SchedulingPolicy):
+    """Fan-out-aware admission: co-batch ``prefix_group`` siblings.
+
+    Orders the queue so group members land in the SAME decode rounds —
+    members of a group that already occupies slots jump the queue (they
+    fork live pages and their rounds share the group's target
+    forwards), and pending groups admit contiguously in arrival order
+    via their oldest member's seq stamp as a shared anchor. Ungrouped
+    traffic ranks by its own seq, so pure-ungrouped workloads reduce to
+    FIFO exactly (the fallback the policy tests pin). Like every
+    policy, it never changes any request's sampled events/tokens (the
+    per-request rng contract) — only which requests share a batch.
+    """
+
+    name = "grouped"
+
+    def key(self, entry: _QueueEntry, step: int) -> Tuple:
+        # context-free fallback: plain FIFO
+        return (0 if entry.deferred else 1, 0, entry.seq, entry.seq)
+
+    def key_ctx(self, entry: _QueueEntry, step: int, ctx: dict) -> Tuple:
+        g = entry.request.prefix_group
+        anchor = entry.seq
+        joins_active = False
+        if g is not None:
+            anchor = ctx.get("anchors", {}).get(g, entry.seq)
+            joins_active = g in ctx.get("active_groups", ())
+        return (0 if entry.deferred else 1, 0 if joins_active else 1,
+                anchor, entry.seq)
+
+
 POLICIES = {"fifo": FifoPolicy, "priority": PriorityPolicy,
-            "sjf": SJFPolicy}
+            "sjf": SJFPolicy, "grouped": GroupedPolicy}
 
 
 def resolve_sched_policy(
@@ -215,12 +262,22 @@ class Scheduler:
 
     def admit(self) -> List[Tuple[int, SlotState]]:
         """Fill free slots in policy order (one sort per call; the keys
-        only depend on the current step)."""
+        only depend on the current step and the slot/queue snapshot)."""
         placed = []
         free = self.free_slots()
         if not free or not self.pending:
             return placed
-        self.pending.sort(key=lambda e: self.policy.key(e, self.step_idx))
+        ctx = {"active_groups": {
+                   s.request.prefix_group for s in self.slots
+                   if s is not None and s.request.prefix_group is not None},
+               "anchors": {}}
+        for e in self.pending:
+            g = e.request.prefix_group
+            if g is not None:
+                prev = ctx["anchors"].get(g, e.seq)
+                ctx["anchors"][g] = min(prev, e.seq)
+        self.pending.sort(
+            key=lambda e: self.policy.key_ctx(e, self.step_idx, ctx))
         for i in free:
             if not self.pending:
                 break

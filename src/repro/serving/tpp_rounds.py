@@ -1,0 +1,184 @@
+"""Jitted TPP (event-sequence) rounds of the serving engine.
+
+The token engine's paged rounds commit integer tokens; the TPP domain
+commits (time, mark) events, so its round functions carry a float
+pending-time lane next to the pending-mark lane and route the decoder
+heads (log-normal mixture + type logits) instead of an LM head. The
+propose-verify math is ``sampling.loops.sd_round`` verbatim — drafted
+window, one c = gamma+1 target forward, ``spec.verify_events``,
+adjusted/bonus replacement event — re-hosted onto the paged KV pool and
+vmapped over slots, which is what lets thousands of forecast rollouts
+ride the same continuous batch.
+
+Per-request rng contract (the batch-composition-independence property
+the serving tests pin): every draw of round ``r`` of a request derives
+from ``split(fold_in(request.rng, r), 5)`` ->
+(r_draft, r_ver, r_new1, r_new2, r_new3); draft step ``i`` uses
+``split(fold_in(r_draft, i))``. Slot placement and batch neighbors
+never enter the stream.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import speculative as spec
+from ..models import tpp as tppm
+
+#: jit caches keyed by (kind, cfgs, gamma/chunk, policy, max_kv) — the
+#: same idiom as ``engine._FN_CACHE``, kept separate so resetting one
+#: domain's cache never evicts the other's.
+_FN_CACHE: Dict[Tuple, Any] = {}
+
+
+def clear_fn_cache() -> None:
+    _FN_CACHE.clear()
+
+
+def tpp_prefill_chunk_fn(cfg_t, cfg_d, chunk: int, policy, max_kv: int):
+    """Chunked event-history prefill into the paged pools.
+
+    Writes ``nvalid[s]`` of ``chunk`` (time, mark) pairs per sequence at
+    logical positions ``lens[s]..``; no hidden states leave the device —
+    the TPP first "token" is the history's own last event, so (unlike
+    the LM path) prefill produces no logits to sample from.
+    """
+    key = ("tpp_prefill", cfg_t, cfg_d, chunk, policy, max_kv)
+    if key not in _FN_CACHE:
+        def fn(params_t, params_d, pg_t, bt_t, pg_d, bt_d, lens, times,
+               types, nvalid):
+            _, pg_t = tppm.prefill_paged(cfg_t, params_t, pg_t, bt_t,
+                                         lens, times, types, nvalid,
+                                         policy=policy, max_kv=max_kv)
+            if cfg_d is not None:
+                _, pg_d = tppm.prefill_paged(cfg_d, params_d, pg_d, bt_d,
+                                             lens, times, types, nvalid,
+                                             policy=policy, max_kv=max_kv)
+            return pg_t, pg_d
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+def tpp_ar_round_paged_fn(cfg_t, policy, max_kv: int):
+    """One committed event per sequence: ingest the pending (t, k) pair,
+    sample the next from the target heads (``loops.sample_event``'s rng
+    order: r1 interval, r2 mark)."""
+    key = ("tpp_ar_round", cfg_t, policy, max_kv)
+    if key not in _FN_CACHE:
+        def fn(params_t, pg_t, bt_t, lens_t, t_pend, k_pend, keys, ridx):
+            h, pg_t = tppm.extend_paged(cfg_t, params_t, pg_t, bt_t,
+                                        lens_t, t_pend[:, None],
+                                        k_pend[:, None], policy=policy,
+                                        max_kv=max_kv)
+            h = h[:, 0]
+            r = jax.vmap(jax.random.fold_in)(keys, ridx)
+            rs = jax.vmap(lambda k: jax.random.split(k))(r)
+            mix = tppm.interval_params(cfg_t, params_t, h)
+            tau = jax.vmap(tppm.sample_interval)(rs[:, 0], mix)
+            logits = tppm.type_logits(cfg_t, params_t, h)
+            kk = jax.vmap(jax.random.categorical)(rs[:, 1], logits)
+            return pg_t, t_pend + tau, kk.astype(jnp.int32)
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]
+
+
+def tpp_sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy, max_kv: int):
+    """One batched propose-verify round (Algorithm 1 on the paged pool).
+
+    Returns (pg_t, pg_d, d_t [S,g], d_k [S,g], A [S], new_t [S],
+    new_k [S]); the host commits ``d_t/d_k[:A]`` plus the replacement
+    event and truncates both pools to ``len0 + 1 + A``.
+    """
+    key = ("tpp_sd_round", cfg_t, cfg_d, gamma, policy, max_kv)
+    if key not in _FN_CACHE:
+        def fn(params_t, params_d, pg_t, pg_d, bt_t, lens_t, bt_d, lens_d,
+               t_pend, k_pend, keys, ridx):
+            ks = jax.vmap(lambda k, r: jax.random.split(
+                jax.random.fold_in(k, r), 5))(keys, ridx)
+            r_draft, r_ver = ks[:, 0], ks[:, 1]
+            r_new1, r_new2, r_new3 = ks[:, 2], ks[:, 3], ks[:, 4]
+
+            # --- draft gamma events (pending ingested first: it is
+            # committed but not yet in either cache)
+            h, pg_d = tppm.extend_paged(cfg_d, params_d, pg_d, bt_d,
+                                        lens_d, t_pend[:, None],
+                                        k_pend[:, None], policy=policy,
+                                        max_kv=max_kv)
+            h = h[:, 0]
+            lens_cur = lens_d + 1
+            t_cur = t_pend
+            taus, marks, times, mixes, lgts = [], [], [], [], []
+            for i in range(gamma):
+                ri = jax.vmap(jax.random.fold_in, (0, None))(r_draft, i)
+                rs = jax.vmap(lambda k: jax.random.split(k))(ri)
+                mix = tppm.interval_params(cfg_d, params_d, h)
+                tau = jax.vmap(tppm.sample_interval)(rs[:, 0], mix)
+                logits = jax.nn.log_softmax(
+                    tppm.type_logits(cfg_d, params_d, h), axis=-1)
+                k_i = jax.vmap(jax.random.categorical)(rs[:, 1], logits)
+                k_i = k_i.astype(jnp.int32)
+                t_cur = t_cur + tau
+                taus.append(tau); marks.append(k_i); times.append(t_cur)
+                mixes.append(mix); lgts.append(logits)
+                h, pg_d = tppm.extend_paged(cfg_d, params_d, pg_d, bt_d,
+                                            lens_cur, t_cur[:, None],
+                                            k_i[:, None], policy=policy,
+                                            max_kv=max_kv)
+                h = h[:, 0]
+                lens_cur = lens_cur + 1
+            d_tau = jnp.stack(taus, 1)                        # [S, g]
+            d_k = jnp.stack(marks, 1)
+            d_t = jnp.stack(times, 1)
+            d_mix = tppm.MixParams(
+                jnp.stack([m.log_w for m in mixes], 1),
+                jnp.stack([m.mu for m in mixes], 1),
+                jnp.stack([m.sigma for m in mixes], 1))       # [S, g, M]
+            d_logits = jnp.stack(lgts, 1)                     # [S, g, K]
+
+            # --- verify: target processes pending + drafts in ONE
+            # c = gamma+1 parallel forward
+            ver_t = jnp.concatenate([t_pend[:, None], d_t], axis=1)
+            ver_k = jnp.concatenate([k_pend[:, None], d_k], axis=1)
+            h_t, pg_t = tppm.extend_paged(cfg_t, params_t, pg_t, bt_t,
+                                          lens_t, ver_t, ver_k,
+                                          policy=policy, max_kv=max_kv)
+            mix_t_all = tppm.interval_params(cfg_t, params_t, h_t)
+            logits_t_all = jax.nn.log_softmax(
+                tppm.type_logits(cfg_t, params_t, h_t), axis=-1)
+
+            # --- per-lane accept/reject + replacement event; the lane
+            # body is loops.sd_round's verify section verbatim (ref
+            # densities inside vmap; the attention above already ran
+            # under the engine's kernel policy)
+            def lane(rv, r1, r2, r3, dtau, dk, dmix, dlg, dt,
+                     mix_all, lg_all, tp):
+                mix_hist = jax.tree.map(lambda x: x[:gamma], mix_all)
+                res = spec.verify_events(
+                    rv, dtau, dk, tppm.interval_logpdf(dmix, dtau), dlg,
+                    mix_hist, lg_all[:gamma])
+                A, all_acc = res.num_accepted, res.all_accepted
+                Ac = jnp.minimum(A, gamma - 1)
+                mix_A = jax.tree.map(lambda x: x[A], mix_all)
+                logits_A = lg_all[A]
+                d_mix_A = jax.tree.map(lambda x: x[Ac], dmix)
+                tau_adj = spec.adjusted_continuous(r1, mix_A, d_mix_A)
+                tau_direct = tppm.sample_interval(r2, mix_A)
+                new_tau = jnp.where(
+                    all_acc, tau_direct,
+                    jnp.where(res.tau_rejected, tau_adj, dtau[Ac]))
+                k_adj = spec.adjusted_discrete(r3, logits_A, dlg[Ac])
+                k_direct = jax.random.categorical(
+                    jax.random.fold_in(r3, 1), logits_A).astype(jnp.int32)
+                new_k = jnp.where(all_acc | res.tau_rejected, k_direct,
+                                  k_adj.astype(jnp.int32))
+                base_t = jnp.where(A > 0, dt[jnp.maximum(A - 1, 0)], tp)
+                return A, base_t + new_tau, new_k
+
+            A, new_t, new_k = jax.vmap(lane)(
+                r_ver, r_new1, r_new2, r_new3, d_tau, d_k, d_mix,
+                d_logits, d_t, mix_t_all, logits_t_all, t_pend)
+            return pg_t, pg_d, d_t, d_k, A, new_t, new_k
+        _FN_CACHE[key] = jax.jit(fn)
+    return _FN_CACHE[key]

@@ -1,0 +1,292 @@
+"""``repro.forecast``: wave-scheduled fan-out + on-device aggregation.
+
+The contracts pinned here:
+
+  (i)   the on-device count-histogram aggregator is EXACT — its
+        quantiles/means equal numpy computed on the concatenated
+        rollouts (``inverted_cdf``), independent of wave splits;
+  (ii)  wave scheduling is invisible in the sampled events — a forecast
+        split into pool-bounded waves commits BITWISE the rollouts a
+        single fanout=n submission produces on a fully provisioned
+        pool (same max_batch; only n_pages differs);
+  (iii) the "grouped" admission policy makes fan-out siblings share
+        target forwards — strictly fewer forwards than the same
+        rollouts submitted ungrouped under FIFO, with identical
+        committed streams;
+  (iv)  the TPP event-history prefix cache serves hits bitwise equal
+        to cold misses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TPPConfig
+from repro.forecast import (ForecastAggregator, Forecaster, ForecastRequest,
+                            build_forecaster)
+from repro.models import registry, tpp
+from repro.sampling import ForecastSpec, SamplerSpec, SpecError
+from repro.serving import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tpp_pair():
+    cfg_t = TPPConfig(name="fc-t", encoder="thp", num_layers=2,
+                      num_heads=2, d_model=16, d_ff=32, num_marks=3,
+                      num_mix=4)
+    cfg_d = cfg_t.replace(name="fc-d", num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+def _history(n=4, seed=3):
+    r = np.random.default_rng(seed)
+    times = np.cumsum(r.exponential(0.5, size=n)).astype(np.float32)
+    marks = r.integers(0, 3, size=n).astype(np.int32)
+    return times, marks
+
+
+# ---------------------------------------------------------------------------
+# (i) aggregator == numpy on the concatenated rollouts
+# ---------------------------------------------------------------------------
+
+def _ref_counts(times, n_valid, t0, t1, bins):
+    """Per-rollout per-bin counts, left-open bins (t0, t1]."""
+    edges = np.linspace(t0, t1, bins + 1)
+    K = times.shape[0]
+    out = np.zeros((K, bins), np.int64)
+    for k in range(K):
+        ts = times[k, :n_valid[k]]
+        for b in range(bins):
+            out[k, b] = np.sum((ts > edges[b]) & (ts <= edges[b + 1]))
+    return out
+
+
+def test_aggregator_matches_numpy_quantiles():
+    """Streaming histogram quantiles == np.quantile(inverted_cdf) on the
+    full count matrix, regardless of how rollouts split into waves."""
+    rng = np.random.default_rng(0)
+    t0, t1, bins, max_count = 1.5, 9.5, 7, 10
+    waves = []
+    for n in (5, 8, 1, 6):                       # uneven wave sizes
+        nv = rng.integers(0, max_count + 1, size=n).astype(np.int32)
+        ts = np.zeros((n, max_count), np.float32)
+        for k in range(n):
+            ts[k, :nv[k]] = np.sort(
+                rng.uniform(t0 - 0.5, t1 + 0.5, size=nv[k]))
+        waves.append((ts, nv))
+
+    agg = ForecastAggregator(bins, t0, t1, max_count)
+    for ts, nv in waves:
+        agg.fold(ts, nv)
+
+    all_counts = np.concatenate(
+        [_ref_counts(ts, nv, t0, t1, bins) for ts, nv in waves])
+    assert agg.n_rollouts == all_counts.shape[0] == 20
+    # non-integer q*n everywhere (n=20): no interpolation-boundary
+    # ambiguity between conventions
+    qs = (0.11, 0.33, 0.52, 0.77, 0.94)
+    want = np.stack([np.quantile(all_counts, q, axis=0,
+                                 method="inverted_cdf") for q in qs])
+    np.testing.assert_array_equal(agg.quantiles(qs), want)
+    np.testing.assert_allclose(agg.mean(), all_counts.mean(axis=0),
+                               rtol=1e-12)
+    # histogram really is on device until asked
+    assert agg.counts().sum() == 20 * bins
+
+
+def test_aggregator_validation():
+    with pytest.raises(ValueError, match="bins"):
+        ForecastAggregator(0, 0.0, 1.0, 4)
+    agg = ForecastAggregator(2, 0.0, 1.0, 4)
+    with pytest.raises(ValueError, match="no rollouts"):
+        agg.quantiles((0.5,))
+    agg.fold(np.zeros((1, 4), np.float32), np.zeros((1,), np.int32))
+    with pytest.raises(ValueError, match="outside"):
+        agg.quantiles((1.5,))
+
+
+# ---------------------------------------------------------------------------
+# (ii) wave parity: pool-bounded waves == one fanout=n submission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,kernel", [("sd", "ref"), ("ar", "ref"),
+                                           ("sd", "pallas")])
+def test_waves_bitwise_equal_single_fanout(tpp_pair, method, kernel):
+    """n_rollouts > what one wave holds: the wave executor (starved
+    n_pages) commits bitwise the rollouts of a single fanout=n
+    submission on a fully provisioned pool with the SAME max_batch."""
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    times, marks = _history(4)
+    n_roll, budget, gamma = 5, 6, 2
+    kw = dict(method=method, max_batch=4, max_len=16, gamma=gamma,
+              kernel=kernel, sched="grouped", page_size=4,
+              prefix_cache=True)
+    if method == "ar":
+        cfg_d = pd = None
+
+    # starved pool: waves must be smaller than n_rollouts
+    eng_w = ServingEngine(cfg_t, pt, cfg_d, pd, n_pages=12, **kw)
+    req = ForecastRequest(history_times=times, history_marks=marks,
+                          horizon=6.0, n_rollouts=n_roll, bins=4,
+                          max_events=budget, rng=jax.random.PRNGKey(42))
+    res = Forecaster(eng_w).forecast(req, collect=True)
+    assert res.n_waves > 1, "pool was not starved enough to force waves"
+    assert sum(res.wave_sizes) == n_roll
+
+    # reference: one submission, fully provisioned pool, same max_batch
+    eng_1 = ServingEngine(cfg_t, pt, cfg_d, pd, **kw)
+    ids = eng_1.submit(prompt=marks, times=times, t_end=req.t_last + 6.0,
+                       max_new_tokens=budget, rng=jax.random.PRNGKey(42),
+                       fanout=n_roll)
+    ref = {r.request_id: r for r in eng_1.run()}
+    assert len(ref) == n_roll
+
+    for j, rid in enumerate(ids):
+        w_marks, w_times = res.rollouts[j]
+        np.testing.assert_array_equal(w_marks, np.asarray(ref[rid].tokens))
+        np.testing.assert_array_equal(w_times, np.asarray(ref[rid].times))
+
+    # and the on-device quantiles agree with numpy over the collected
+    # rollouts (executor -> aggregator wiring)
+    buf = np.zeros((n_roll, budget), np.float32)
+    nv = np.zeros((n_roll,), np.int32)
+    for j, (_, ts) in enumerate(res.rollouts):
+        buf[j, :len(ts)] = ts
+        nv[j] = len(ts)
+    counts = _ref_counts(buf, nv, req.t_last, req.t_last + 6.0, 4)
+    want = np.stack([np.quantile(counts, q, axis=0, method="inverted_cdf")
+                     for q in req.quantiles])
+    np.testing.assert_array_equal(res.quantiles, want)
+
+
+def test_forecaster_requires_tpp_and_idle_engine(tpp_pair):
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    tok = ModelConfig(name="tk", family="dense", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=11,
+                      dtype="float32", param_dtype="float32", remat=False)
+    ptok = registry.get_model(tok).init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="TPP"):
+        Forecaster(ServingEngine(tok, ptok, method="ar", max_batch=2,
+                                 max_len=32))
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=16,
+                        gamma=2)
+    times, marks = _history(3)
+    eng.submit(prompt=marks, times=times, t_end=10.0, max_new_tokens=4,
+               rng=0)
+    with pytest.raises(RuntimeError, match="busy"):
+        Forecaster(eng).forecast(ForecastRequest(
+            history_times=times, history_marks=marks, horizon=2.0,
+            n_rollouts=2, max_events=4))
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# (iii) grouped policy: siblings share target forwards
+# ---------------------------------------------------------------------------
+
+def test_grouped_policy_shares_forwards_vs_ungrouped_fifo():
+    """Under page pressure, fan-out groups admit ALL siblings (forks
+    reuse the prompt's pages) where ungrouped FIFO can only co-batch
+    two full-footprint copies — strictly fewer target forwards for
+    bitwise the same streams."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=31,
+                      dtype="float32", param_dtype="float32", remat=False)
+    pt = registry.get_model(cfg).init_params(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (16,), 0,
+                                31).astype(jnp.int32)
+    base = jax.random.PRNGKey(0)
+    kw = dict(method="ar", max_batch=3, max_len=32, kv_layout="paged",
+              page_size=4, n_pages=15)
+
+    eng_g = ServingEngine(cfg, pt, sched="grouped", **kw)
+    eng_g.submit(prompt=prompt, max_new_tokens=4, rng=base, fanout=3)
+    res_g = eng_g.run()
+
+    eng_u = ServingEngine(cfg, pt, sched="fifo", **kw)
+    for k in range(3):                # same streams, no group
+        eng_u.submit(prompt=prompt, max_new_tokens=4,
+                     rng=jax.random.fold_in(base, k))
+    res_u = eng_u.run()
+
+    st_g, st_u = eng_g.stats(), eng_u.stats()
+    assert st_g.target_forwards < st_u.target_forwards
+    sharing = (sum(st_g.group_member_rounds.values())
+               / max(1, sum(st_g.group_forwards.values())))
+    assert sharing > 1.0
+    assert st_g.rollouts == 3         # group members count as rollouts
+    toks_g = sorted(tuple(np.asarray(r.tokens)) for r in res_g)
+    toks_u = sorted(tuple(np.asarray(r.tokens)) for r in res_u)
+    assert toks_g == toks_u
+
+
+# ---------------------------------------------------------------------------
+# (iv) TPP event-history prefix cache: hit bitwise == cold miss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_tpp_prefix_cache_hit_bitwise_equal_cold(tpp_pair, kernel):
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    times, marks = _history(9, seed=11)
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd", max_batch=2,
+                        max_len=32, gamma=2, kernel=kernel, page_size=4,
+                        prefix_cache=True)
+
+    def go():
+        eng.submit(prompt=marks, times=times, t_end=float(times[-1]) + 8.0,
+                   max_new_tokens=6, rng=jax.random.PRNGKey(5))
+        (r,) = eng.run()
+        return np.asarray(r.tokens), np.asarray(r.times)
+
+    cold_marks, cold_times = go()
+    assert eng.stats().prefix_hits == 0
+    warm_marks, warm_times = go()
+    st = eng.stats()
+    assert st.prefix_hits == 1 and st.prefix_hit_tokens > 0
+    np.testing.assert_array_equal(cold_marks, warm_marks)
+    np.testing.assert_array_equal(cold_times, warm_times)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_forecast_spec_validation():
+    ok = SamplerSpec(domain="tpp", forecast=ForecastSpec(horizon=2.0))
+    ok.validate()
+    SamplerSpec(domain="tpp", sched="grouped",
+                forecast=ForecastSpec()).validate()
+    with pytest.raises(SpecError, match="domain='tpp'"):
+        SamplerSpec(domain="token", forecast=ForecastSpec()).validate()
+    with pytest.raises(SpecError, match="thinning"):
+        SamplerSpec(domain="tpp", method="thinning", execution="host",
+                    forecast=ForecastSpec()).validate()
+    with pytest.raises(SpecError, match="horizon"):
+        SamplerSpec(domain="tpp",
+                    forecast=ForecastSpec(horizon=-1.0)).validate()
+    with pytest.raises(SpecError, match="paged"):
+        SamplerSpec(domain="tpp", kv_layout="dense",
+                    forecast=ForecastSpec()).validate()
+    # serving knobs stay token/forecast-only for plain TPP specs
+    with pytest.raises(SpecError, match="sched"):
+        SamplerSpec(domain="tpp", sched="grouped").validate()
+    with pytest.raises(SpecError, match="needs a spec"):
+        build_forecaster(SamplerSpec(domain="tpp"), None, None)
+
+
+def test_build_forecaster_runs_spec(tpp_pair):
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    spec = SamplerSpec(domain="tpp", method="sd", gamma=2, batch=2,
+                       max_events=5, max_len=24,
+                       forecast=ForecastSpec(horizon=4.0, n_rollouts=3,
+                                             bins=3,
+                                             quantiles=(0.25, 0.75)))
+    fc = build_forecaster(spec, cfg_t, pt, cfg_d, pd)
+    times, marks = _history(4)
+    res = fc(times, marks, rng=jax.random.PRNGKey(1))
+    assert res.n_rollouts == 3 and res.quantiles.shape == (2, 3)
+    assert res.rollouts_per_sec > 0
+    assert fc.engine.stats().rollouts == 3
+    assert fc.engine.scheduler.policy.name == "grouped"
