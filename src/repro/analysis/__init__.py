@@ -1,0 +1,31 @@
+"""``repro.analysis`` — repo-native static analysis.
+
+An AST lint pass for the invariants the test suite can only sample:
+RNG-stream discipline (one fold_in/split per consumer, no raw root
+keys in the library), trace safety (no Python control flow on tracers
+inside jitted rounds, no host syncs in the hot path), Pallas kernel
+hygiene (block shapes and grid arity on the shared
+``kernels.alignment`` table), and refcounted-page ownership pairing.
+
+Run it::
+
+    python -m repro.analysis src tests benchmarks examples
+
+Suppress an intentional exception ON the offending line (the reason is
+mandatory)::
+
+    x = jax.random.PRNGKey(0)  # repro: ignore[rng-raw-prngkey] -- why
+
+See ``repro.analysis.config.DEFAULT_CONFIG`` for where each rule runs.
+"""
+from .config import AnalysisConfig, DEFAULT_CONFIG, RulePaths, \
+    unrestricted_config
+from .core import (RULES, AnalysisReport, FileContext, Finding, Rule,
+                   register, run_analysis)
+from .output import render_json, render_sarif, render_text
+
+__all__ = [
+    "AnalysisConfig", "AnalysisReport", "DEFAULT_CONFIG", "FileContext",
+    "Finding", "RULES", "Rule", "RulePaths", "register", "run_analysis",
+    "render_json", "render_sarif", "render_text", "unrestricted_config",
+]

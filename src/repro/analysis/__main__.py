@@ -1,0 +1,52 @@
+"""CLI: ``python -m repro.analysis <paths> [--format text|json|sarif]``.
+
+Exit code 0 iff there are zero unsuppressed findings (and every file
+parsed) — the CI ``lint`` job's pass condition.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .core import RULES, run_analysis
+from .output import RENDERERS
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-native static analysis: RNG-stream discipline, "
+                    "trace safety, Pallas kernel hygiene.")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--format", choices=sorted(RENDERERS),
+                    default="text", help="output format (default: text)")
+    ap.add_argument("--output", default=None,
+                    help="write the report to this file instead of stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    from . import rules as _rules  # noqa: F401  (register)
+    if args.list_rules:
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid:24s} {rule.description}")
+        return 0
+
+    rules = ([r.strip() for r in args.rules.split(",") if r.strip()]
+             if args.rules else None)
+    report = run_analysis(args.paths or ["src"], rules=rules)
+    rendered = RENDERERS[args.format](report)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(rendered + "\n")
+        print(report.summary())
+    else:
+        print(rendered)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

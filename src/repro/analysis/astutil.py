@@ -1,0 +1,80 @@
+"""Small AST helpers shared by the rules."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+__all__ = ["dotted_name", "call_name", "unwrap_transform", "const_int",
+           "literal_int_tuple", "func_defs", "lambda_arity",
+           "FunctionLike"]
+
+FunctionLike = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """"jax.random.fold_in" for the matching attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def unwrap_transform(call: ast.Call) -> Tuple[Optional[str], ast.Call]:
+    """Resolve ``jax.vmap(jax.random.X)(args)`` / ``partial(f, ...)``
+    wrappers one level: returns (innermost dotted name, the call whose
+    args are the data args). For a plain call returns (name, call)."""
+    name = call_name(call)
+    if name is not None:
+        return name, call
+    if isinstance(call.func, ast.Call):
+        inner = call.func
+        inner_name = call_name(inner)
+        if inner_name in ("jax.vmap", "vmap", "jax.pmap", "functools.partial",
+                          "partial", "jax.jit", "jit"):
+            if inner.args:
+                return dotted_name(inner.args[0]), call
+    return None, call
+
+
+def const_int(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand)
+        return -v if v is not None else None
+    return None
+
+
+def literal_int_tuple(node: ast.AST) -> Optional[List[Optional[int]]]:
+    """For a Tuple/List literal: each element's int value, or None for a
+    non-literal element. None if the node is not a tuple/list at all."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    return [const_int(e) for e in node.elts]
+
+
+def lambda_arity(node: ast.AST) -> Optional[int]:
+    """Positional-arg count of a lambda / local def (None if unknown or
+    it takes *args, which absorbs any grid arity)."""
+    if not isinstance(node, FunctionLike):
+        return None
+    a = node.args
+    if a.vararg is not None:
+        return None
+    return len(a.posonlyargs) + len(a.args)
+
+
+def func_defs(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every def/lambda in the file, outermost first."""
+    for node in ast.walk(tree):
+        if isinstance(node, FunctionLike):
+            yield node

@@ -1,0 +1,86 @@
+"""Per-file configuration: which rules run where.
+
+Patterns are ``fnmatch`` globs matched against the file's posix path
+relative to the analysis root (the CWD for the CLI). ``*`` crosses
+``/`` in fnmatch, so ``tests/*`` covers the whole subtree.
+
+``DEFAULT_CONFIG`` encodes the repo policy:
+
+- ``rng-raw-prngkey`` sanctions the entry-point surfaces — tests,
+  examples, benchmarks and ``repro.launch`` — where constructing a root
+  ``PRNGKey`` is the point. Everything in the library proper must
+  derive keys from a caller's stream (``ServeRequest.rng`` +
+  ``fold_in``); the handful of intentional exceptions (the seed->key
+  boundary in ``serving.request``, shape-only dummies for
+  ``eval_shape``) carry inline justifications instead.
+- ``host-sync-in-hot-path`` runs only where "hot path" is defined:
+  the jitted round/step functions of ``serving/`` and ``sampling/``.
+- ``refcount-pairing`` runs where refcounted pages live (``serving/``).
+- ``pallas-block-align`` runs over ``src/`` only: interpret-mode tests
+  deliberately use tiny unaligned pages/blocks to exercise rollback and
+  deferral on small pools, which a compiled TPU run would reject but
+  the interpreter accepts — shipping code must stay on the table.
+- ``tests/analysis_fixtures/`` is the rule corpus: its *bad* snippets
+  exist to violate the rules, so the default config excludes it
+  everywhere (the analysis tests run it with an explicit config).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fnmatch import fnmatch
+from typing import Dict, Tuple
+
+__all__ = ["RulePaths", "AnalysisConfig", "DEFAULT_CONFIG",
+           "unrestricted_config"]
+
+
+@dataclass(frozen=True)
+class RulePaths:
+    """Include/exclude globs for one rule. Empty include = everywhere."""
+
+    include: Tuple[str, ...] = ()
+    exclude: Tuple[str, ...] = ()
+
+    def applies(self, path: str) -> bool:
+        if self.include and not any(fnmatch(path, g) for g in self.include):
+            return False
+        return not any(fnmatch(path, g) for g in self.exclude)
+
+
+@dataclass(frozen=True)
+class AnalysisConfig:
+    """Maps rule id -> path filter; unlisted rules run everywhere except
+    ``global_exclude``."""
+
+    rule_paths: Dict[str, RulePaths] = field(default_factory=dict)
+    global_exclude: Tuple[str, ...] = ()
+    #: methods that legitimately transfer page ownership instead of
+    #: releasing (consumed by refcount-pairing)
+    ownership_transfer_methods: Tuple[str, ...] = ("insert", "adopt",
+                                                   "donate", "fork")
+
+    def applies(self, rule_id: str, path: str) -> bool:
+        if any(fnmatch(path, g) for g in self.global_exclude):
+            return False
+        rp = self.rule_paths.get(rule_id)
+        return rp.applies(path) if rp is not None else True
+
+
+_ENTRY_POINTS = ("tests/*", "examples/*", "benchmarks/*",
+                 "src/repro/launch/*")
+
+DEFAULT_CONFIG = AnalysisConfig(
+    rule_paths={
+        "rng-raw-prngkey": RulePaths(exclude=_ENTRY_POINTS),
+        "host-sync-in-hot-path": RulePaths(
+            include=("src/repro/serving/*", "src/repro/sampling/*")),
+        "refcount-pairing": RulePaths(include=("src/repro/serving/*",)),
+        "pallas-block-align": RulePaths(include=("src/*",)),
+    },
+    global_exclude=("tests/analysis_fixtures/*",),
+)
+
+
+def unrestricted_config() -> AnalysisConfig:
+    """Every rule everywhere — what the fixture tests run with."""
+    return AnalysisConfig()

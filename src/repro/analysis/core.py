@@ -1,0 +1,254 @@
+"""Core of the repo-native static-analysis pass.
+
+The analyzer is an AST-walking lint framework specialised to THIS
+codebase's invariants — the ones every bitwise-parity pin hangs off
+(one ``fold_in``/``split`` per consumer, no Python control flow on
+tracers inside jitted rounds, Pallas block shapes on the shared
+alignment table, refcounted pages never retained without a release
+path). Rules register themselves into ``RULES``; ``run_analysis``
+parses each file once and hands a ``FileContext`` to every rule whose
+per-file config admits the path.
+
+Suppressions are inline comments::
+
+    pool.retain(pid)  # repro: ignore[refcount-pairing] -- donated to cache
+
+The rule id goes in brackets (comma-separate several), and the reason
+after ``--`` is MANDATORY: an ignore without a written justification is
+itself reported (rule ``analysis-bare-ignore``). A suppression comment
+on its own line applies to the next code line.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+from .config import AnalysisConfig, DEFAULT_CONFIG
+
+__all__ = ["Finding", "Suppression", "FileContext", "Rule", "RULES",
+           "register", "AnalysisReport", "run_analysis", "iter_py_files",
+           "BARE_IGNORE"]
+
+BARE_IGNORE = "analysis-bare-ignore"
+
+_IGNORE_RE = re.compile(
+    r"#\s*repro:\s*ignore\[(?P<ids>[a-z0-9_,\s-]+)\]"
+    r"(?:\s*--\s*(?P<reason>\S.*))?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    severity: str = "error"      # "error" | "warning"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule}: {self.message}")
+
+
+@dataclass
+class Suppression:
+    """A parsed ``# repro: ignore[...]`` comment."""
+
+    path: str
+    line: int                    # line the suppression APPLIES to
+    comment_line: int            # line the comment sits on
+    rules: Tuple[str, ...]
+    reason: Optional[str]
+    used: bool = False
+
+
+class FileContext:
+    """One parsed file, shared by every rule that runs on it."""
+
+    def __init__(self, path: str, source: str,
+                 config: Optional[AnalysisConfig] = None):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.config = config if config is not None else DEFAULT_CONFIG
+        self.suppressions = _parse_suppressions(path, source)
+
+    def finding(self, rule: str, node, message: str,
+                severity: str = "error") -> Finding:
+        return Finding(rule=rule, path=self.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, severity=severity)
+
+
+def _code_line_after(comment_line: int, source_lines: List[str]) -> int:
+    """A standalone suppression comment governs the next code line."""
+    for i in range(comment_line, len(source_lines)):
+        text = source_lines[i].strip()        # i is 0-based line i+1
+        if text and not text.startswith("#"):
+            return i + 1
+    return comment_line
+
+
+def _parse_suppressions(path: str, source: str) -> List[Suppression]:
+    out: List[Suppression] = []
+    lines = source.splitlines()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenizeError:
+        comments = [(i + 1, ln[ln.index("#"):]) for i, ln in
+                    enumerate(lines) if "#" in ln]
+    for lineno, text in comments:
+        m = _IGNORE_RE.search(text)
+        if not m:
+            continue
+        ids = tuple(s.strip() for s in m.group("ids").split(",") if s.strip())
+        standalone = lines[lineno - 1].lstrip().startswith("#")
+        applies = (_code_line_after(lineno, lines) if standalone else lineno)
+        out.append(Suppression(path=path, line=applies, comment_line=lineno,
+                               rules=ids, reason=m.group("reason")))
+    return out
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``description`` and implement
+    ``check``. Registration is explicit via ``@register``."""
+
+    id: str = ""
+    description: str = ""
+    severity: str = "error"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if cls.id in RULES:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    RULES[cls.id] = cls()
+    return cls
+
+
+@dataclass
+class AnalysisReport:
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Tuple[Finding, Suppression]] = field(
+        default_factory=list)
+    files: List[str] = field(default_factory=list)
+    errors: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.errors
+
+    def summary(self) -> str:
+        return (f"{len(self.findings)} finding(s), "
+                f"{len(self.suppressed)} suppressed, "
+                f"{len(self.files)} file(s) analyzed"
+                + (f", {len(self.errors)} file error(s)" if self.errors
+                   else ""))
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[Path]:
+    seen = set()
+    for p in paths:
+        path = Path(p)
+        files = (sorted(path.rglob("*.py")) if path.is_dir() else [path])
+        for f in files:
+            if f.suffix == ".py" and f not in seen:
+                seen.add(f)
+                yield f
+
+
+def _relpath(f: Path) -> str:
+    try:
+        return f.resolve().relative_to(Path.cwd().resolve()).as_posix()
+    except ValueError:
+        return f.as_posix()
+
+
+def _apply_suppressions(ctx: FileContext, found: List[Finding],
+                        report: AnalysisReport,
+                        rule_ids: List[str]) -> None:
+    by_line: Dict[int, List[Suppression]] = {}
+    for sup in ctx.suppressions:
+        by_line.setdefault(sup.line, []).append(sup)
+    for f in found:
+        sup = next((s for s in by_line.get(f.line, ())
+                    if f.rule in s.rules), None)
+        if sup is not None and sup.reason:
+            sup.used = True
+            report.suppressed.append((f, sup))
+        elif sup is not None:
+            # a reasonless ignore does NOT suppress — it surfaces both
+            # the original finding and the bare-ignore one below
+            report.findings.append(f)
+        else:
+            report.findings.append(f)
+    if BARE_IGNORE in rule_ids and ctx.config.applies(BARE_IGNORE, ctx.path):
+        for sup in ctx.suppressions:
+            if not sup.reason:
+                report.findings.append(Finding(
+                    rule=BARE_IGNORE, path=ctx.path, line=sup.comment_line,
+                    col=1, severity="warning",
+                    message="suppression without a written justification: "
+                            "use '# repro: ignore[rule-id] -- reason'"))
+            elif not set(sup.rules) & set(RULES):
+                unknown = ", ".join(sorted(set(sup.rules) - set(RULES)))
+                report.findings.append(Finding(
+                    rule=BARE_IGNORE, path=ctx.path, line=sup.comment_line,
+                    col=1, severity="warning",
+                    message=f"suppression names unknown rule(s): {unknown}"))
+
+
+def run_analysis(paths: Iterable[str],
+                 config: Optional[AnalysisConfig] = None,
+                 rules: Optional[Iterable[str]] = None) -> AnalysisReport:
+    """Run every registered rule over ``paths`` (files or directories).
+
+    ``config`` defaults to the repo policy (``config.DEFAULT_CONFIG``);
+    ``rules`` restricts to a subset of rule ids.
+    """
+    from . import rules as _rules_pkg  # noqa: F401  (registers rules)
+
+    config = config if config is not None else DEFAULT_CONFIG
+    rule_ids = (list(rules) if rules is not None
+                else list(RULES) + [BARE_IGNORE])
+    unknown = [r for r in rule_ids if r != BARE_IGNORE and r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule id(s): {unknown}")
+    report = AnalysisReport()
+    for f in iter_py_files(paths):
+        rel = _relpath(f)
+        try:
+            ctx = FileContext(rel, f.read_text(encoding="utf-8"),
+                              config=config)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            report.errors.append(f"{rel}: {e}")
+            continue
+        report.files.append(rel)
+        found: List[Finding] = []
+        for rid in rule_ids:
+            if rid == BARE_IGNORE:
+                continue
+            if not config.applies(rid, rel):
+                continue
+            found.extend(RULES[rid].check(ctx))
+        _apply_suppressions(ctx, found, report, rule_ids)
+    report.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return report

@@ -1,0 +1,103 @@
+"""Report renderers: human text, JSON, and SARIF 2.1.0.
+
+SARIF is what the CI ``lint`` job uploads — GitHub's code-scanning UI
+and most editors ingest it directly, so a rule hit lands as an
+annotation on the PR line that introduced it.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict
+
+from .core import RULES, AnalysisReport
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def render_text(report: AnalysisReport) -> str:
+    lines = [f.render() for f in report.findings]
+    for err in report.errors:
+        lines.append(f"error: {err}")
+    if report.suppressed:
+        lines.append("")
+        lines.append("suppressed:")
+        for f, sup in report.suppressed:
+            lines.append(f"  {f.render()}  [reason: {sup.reason}]")
+    lines.append("")
+    lines.append(report.summary())
+    return "\n".join(lines)
+
+
+def render_json(report: AnalysisReport) -> str:
+    def fdict(f) -> Dict:
+        return {"rule": f.rule, "path": f.path, "line": f.line,
+                "col": f.col, "severity": f.severity, "message": f.message}
+
+    return json.dumps({
+        "findings": [fdict(f) for f in report.findings],
+        "suppressed": [{**fdict(f), "reason": s.reason,
+                        "suppressed_at": s.comment_line}
+                       for f, s in report.suppressed],
+        "files": report.files,
+        "errors": report.errors,
+        "summary": report.summary(),
+    }, indent=2)
+
+
+def render_sarif(report: AnalysisReport) -> str:
+    rules = [{
+        "id": rid,
+        "shortDescription": {"text": rule.description or rid},
+        "defaultConfiguration": {
+            "level": "error" if rule.severity == "error" else "warning"},
+    } for rid, rule in sorted(RULES.items())]
+    # the meta-rule (bare ignore) is emitted by the framework itself
+    rules.append({
+        "id": "analysis-bare-ignore",
+        "shortDescription": {
+            "text": "suppression comment without a written justification"},
+        "defaultConfiguration": {"level": "warning"},
+    })
+    results = [{
+        "ruleId": f.rule,
+        "level": f.severity,
+        "message": {"text": f.message},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": f.path},
+                "region": {"startLine": f.line, "startColumn": f.col},
+            },
+        }],
+    } for f in report.findings]
+    results += [{
+        "ruleId": f.rule,
+        "level": "note",
+        "message": {"text": f"[suppressed: {s.reason}] {f.message}"},
+        "suppressions": [{"kind": "inSource",
+                          "justification": s.reason or ""}],
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": f.path},
+                "region": {"startLine": f.line, "startColumn": f.col},
+            },
+        }],
+    } for f, s in report.suppressed]
+    doc = {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {"driver": {
+                "name": "repro.analysis",
+                "informationUri": "https://example.invalid/repro-analysis",
+                "rules": rules,
+            }},
+            "results": results,
+        }],
+    }
+    return json.dumps(doc, indent=2)
+
+
+RENDERERS = {"text": render_text, "json": render_json,
+             "sarif": render_sarif}

@@ -1,0 +1,2 @@
+"""Rule modules — importing this package registers every rule."""
+from . import pallas, refcount, rng, trace  # noqa: F401

@@ -1,0 +1,133 @@
+"""``pallas-block-align``: static checking of Pallas kernel hygiene
+against the SAME alignment table the runtime validator uses.
+
+``kernels.alignment.BLOCK_PARAM_ALIGN`` is the single source of truth:
+``kernels.policy.validate_block_size`` rounds misaligned requests at
+runtime (warn-once), and this rule catches them at lint time — plus the
+shapes the runtime path can't see until lowering:
+
+- literal ``BlockSpec`` block shapes whose second-to-last dim is not a
+  sublane multiple (Mosaic fails on these deep inside lowering);
+- ``grid`` arity vs ``index_map`` arity, including the
+  ``num_scalar_prefetch`` operands a ``PrefetchScalarGridSpec``
+  appends to every index map's signature;
+- literal ``bq``/``bk``/``bn``/``page_size`` keyword arguments anywhere
+  in shipping code (``KernelPolicy(...)``, op entry points, engine
+  constructors) that violate the table.
+
+The table import is LIVE (module attribute lookup at check time), so a
+test monkeypatching ``BLOCK_PARAM_ALIGN`` moves this rule and the
+runtime validator together — the shared-spec pin in the test suite.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ...kernels import alignment
+from ..astutil import const_int, dotted_name, lambda_arity, literal_int_tuple
+from ..core import FileContext, Finding, Rule, register
+
+_GRID_SPECS = ("PrefetchScalarGridSpec", "GridSpec")
+
+
+def _ends_with(name: Optional[str], leaf: str) -> bool:
+    return name is not None and (name == leaf or name.endswith("." + leaf))
+
+
+@register
+class PallasBlockAlign(Rule):
+    id = "pallas-block-align"
+    description = ("BlockSpec shapes, grid arity and bq/bk/bn/page_size "
+                   "literals checked against kernels.alignment — the "
+                   "table validate_block_size enforces at runtime")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        grid_parents = set()
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if _ends_with(name, "pallas_call") or any(
+                    _ends_with(name, g) for g in _GRID_SPECS):
+                grid_parents.add(id(node))
+                yield from self._check_grid(ctx, node)
+            if _ends_with(name, "BlockSpec"):
+                yield from self._check_blockspec(ctx, node)
+            yield from self._check_knob_literals(ctx, node, name)
+
+    # -- literal knob kwargs ----------------------------------------------
+    def _check_knob_literals(self, ctx, call: ast.Call,
+                             name: Optional[str]) -> Iterator[Finding]:
+        for kw in call.keywords:
+            if kw.arg not in alignment.BLOCK_PARAM_ALIGN:
+                continue
+            v = const_int(kw.value)
+            if v is None or v < 1:
+                continue
+            align = alignment.alignment_for(kw.arg)
+            if v % align != 0:
+                yield ctx.finding(
+                    self.id, kw.value,
+                    f"block-size knob {kw.arg}={v} is not a multiple of "
+                    f"{align} (kernels.alignment.BLOCK_PARAM_ALIGN"
+                    f"[{kw.arg!r}]); validate_block_size would round it "
+                    f"up to {alignment.round_up(v, align)} at runtime — "
+                    "use an aligned value so the compiled block shape is "
+                    "what you asked for")
+
+    # -- BlockSpec literal shapes -----------------------------------------
+    def _check_blockspec(self, ctx, call: ast.Call) -> Iterator[Finding]:
+        if not call.args:
+            return
+        dims = literal_int_tuple(call.args[0])
+        if dims is None or len(dims) < 2:
+            return
+        v = dims[-2]
+        # size-1 dims are squeezed by Mosaic and legal at any position
+        if v is not None and v > 1 and v % alignment.SUBLANE != 0:
+            yield ctx.finding(
+                self.id, call.args[0],
+                f"BlockSpec second-to-last block dim {v} is not a "
+                f"multiple of the sublane quantum "
+                f"{alignment.SUBLANE} (kernels.alignment.SUBLANE); "
+                "Mosaic rejects this block shape during lowering")
+
+    # -- grid arity vs index_map arity ------------------------------------
+    def _check_grid(self, ctx, call: ast.Call) -> Iterator[Finding]:
+        grid_n: Optional[int] = None
+        prefetch = 0
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    grid_n = len(kw.value.elts)
+                elif const_int(kw.value) is not None:
+                    grid_n = 1
+            elif kw.arg == "num_scalar_prefetch":
+                p = const_int(kw.value)
+                prefetch = p if p is not None else 0
+        if grid_n is None:
+            return
+        want = grid_n + prefetch
+        for sub in ast.walk(call):
+            if not isinstance(sub, ast.Call):
+                continue
+            if not _ends_with(dotted_name(sub.func), "BlockSpec"):
+                continue
+            index_map = None
+            if len(sub.args) > 1:
+                index_map = sub.args[1]
+            else:
+                index_map = next((k.value for k in sub.keywords
+                                  if k.arg == "index_map"), None)
+            if index_map is None:
+                continue
+            arity = lambda_arity(index_map)
+            if arity is not None and arity != want:
+                yield ctx.finding(
+                    self.id, index_map,
+                    f"index_map takes {arity} arg(s) but the grid has "
+                    f"{grid_n} dim(s)"
+                    + (f" plus {prefetch} scalar-prefetch operand(s)"
+                       if prefetch else "")
+                    + f" — expected {want}")

@@ -1,0 +1,137 @@
+"""``refcount-pairing``: page-ownership discipline in the serving tier.
+
+``PagedKVCachePool`` pages are refcounted; the PR 6 fuzz suite pins the
+global invariant (refcounts == actual owners, free list exact) but only
+for the schedules it generates. Statically, the bug shape that slips
+through review is a NEW ``retain`` call site with no path that ever
+gives the reference back — the page leaks until reset.
+
+A ``.retain(...)`` call site is considered paired when its enclosing
+scope (the class that contains it, else the module) also contains a
+release path — a ``.release(...)``, ``.free_slot(...)`` or
+``.truncate(...)`` call or a method of one of those names — or when the
+enclosing function is a sanctioned ownership-transfer point
+(``AnalysisConfig.ownership_transfer_methods``: ``insert``/``adopt``/
+``donate``/``fork`` hand the reference to a new owner whose own
+lifecycle releases it).
+
+The rule also flags direct ``refcount`` array mutation outside the
+class that owns the counter (the one defining both ``retain`` and
+``release``): bypassing the API skips the free-list bookkeeping the
+fuzz invariants are stated over.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from ..astutil import dotted_name
+from ..core import FileContext, Finding, Rule, register
+
+_RELEASERS = {"release", "free_slot", "truncate"}
+
+
+def _enclosing(stack: List[ast.AST], kinds) -> Optional[ast.AST]:
+    for node in reversed(stack):
+        if isinstance(node, kinds):
+            return node
+    return None
+
+
+def _attr_calls(tree: ast.AST, names) -> List[ast.Call]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+            and n.func.attr in names]
+
+
+def _defines_method(scope: ast.AST, names) -> bool:
+    return any(isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+               and n.name in names for n in ast.walk(scope))
+
+
+class _Stacker(ast.NodeVisitor):
+    """Walk with an ancestor stack (class/function nesting)."""
+
+    def __init__(self):
+        self.stack: List[ast.AST] = []
+        self.hits: List[tuple] = []     # (node, stack snapshot)
+
+    def visit(self, node):
+        self.stack.append(node)
+        try:
+            self.inspect(node)
+            super().generic_visit(node)
+        finally:
+            self.stack.pop()
+
+    def inspect(self, node):
+        raise NotImplementedError
+
+
+class _RetainFinder(_Stacker):
+    def inspect(self, node):
+        if isinstance(node, ast.Call) and isinstance(
+                node.func, ast.Attribute) and node.func.attr == "retain":
+            self.hits.append((node, list(self.stack[:-1])))
+
+
+class _RefcountMutFinder(_Stacker):
+    def inspect(self, node):
+        target = None
+        if isinstance(node, ast.AugAssign):
+            target = node.target
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            target = node.targets[0]
+        if target is None:
+            return
+        if isinstance(target, ast.Subscript):
+            target = target.value
+        name = dotted_name(target)
+        if name is not None and name.split(".")[-1] == "refcount":
+            self.hits.append((node, list(self.stack[:-1])))
+
+
+@register
+class RefcountPairing(Rule):
+    id = "refcount-pairing"
+    description = ("retain without a reachable release/free_slot/"
+                   "ownership-transfer; direct refcount mutation "
+                   "outside the owning class")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        transfers = set(ctx.config.ownership_transfer_methods)
+
+        finder = _RetainFinder()
+        finder.visit(ctx.tree)
+        for call, stack in finder.hits:
+            fn = _enclosing(stack, (ast.FunctionDef, ast.AsyncFunctionDef))
+            if fn is not None and fn.name in transfers:
+                continue
+            scope = _enclosing(stack, ast.ClassDef) or ctx.tree
+            paired = (_attr_calls(scope, _RELEASERS)
+                      or _defines_method(scope, _RELEASERS))
+            if not paired:
+                where = ("class " + scope.name
+                         if isinstance(scope, ast.ClassDef) else "module")
+                yield ctx.finding(
+                    self.id, call,
+                    f".retain() call with no release path in the same "
+                    f"{where}: no .release()/.free_slot()/.truncate() "
+                    "call or method — the page reference leaks until "
+                    "pool reset. Release it, or do the retain inside a "
+                    f"sanctioned transfer method ({sorted(transfers)})")
+
+        mut = _RefcountMutFinder()
+        mut.visit(ctx.tree)
+        for node, stack in mut.hits:
+            scope = _enclosing(stack, ast.ClassDef)
+            owner = (scope is not None
+                     and _defines_method(scope, {"retain"})
+                     and _defines_method(scope, {"release"}))
+            if not owner:
+                yield ctx.finding(
+                    self.id, node,
+                    "direct refcount mutation outside the class that "
+                    "defines retain()/release(): bypassing the API "
+                    "skips free-list bookkeeping (the fuzz-suite "
+                    "invariants are stated over retain/release)")

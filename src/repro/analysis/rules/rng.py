@@ -1,0 +1,276 @@
+"""RNG-stream discipline rules.
+
+Every bitwise-parity pin in this repo (batched == single, paged ==
+dense, fork == independent, wave == single-submit) is a statement about
+WHICH ``jax.random`` stream each consumer draws from. Two invariants
+keep those statements true:
+
+- a key value feeds exactly ONE consuming ``jax.random.*`` call;
+  further draws come from ``split``/``fold_in`` derivations
+  (``rng-key-reuse``);
+- the library never manufactures root keys: engines derive every
+  stream from the caller's request key, so the same request replays the
+  same tokens no matter how it is batched, paged, forked or waved
+  (``rng-raw-prngkey`` — root construction is sanctioned only at entry
+  points: tests, examples, benchmarks, ``repro.launch``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..astutil import FunctionLike, const_int, dotted_name, unwrap_transform
+from ..core import FileContext, Finding, Rule, register
+
+#: jax.random.* callees that DERIVE or construct keys rather than
+#: consuming a stream — fold_in(key, i) over distinct data is the
+#: sanctioned many-streams-from-one-parent pattern.
+NON_CONSUMING = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "clone", "key_impl", "bits"}
+
+#: expressions whose value is a fresh key (or batch of keys)
+KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in"}
+
+#: parameter names assumed to carry a PRNG key
+KEY_PARAM_NAMES = {"rng", "key", "rng_key", "prng_key", "base_key",
+                   "subkey", "sub_key"}
+
+_RANDOM_PREFIXES = ("jax.random.", "jrandom.", "jr.")
+
+
+def _random_callee(name: Optional[str]) -> Optional[str]:
+    """"categorical" for "jax.random.categorical", else None."""
+    if name is None:
+        return None
+    for p in _RANDOM_PREFIXES:
+        if name.startswith(p):
+            return name[len(p):]
+    return None
+
+
+def _key_ref(node: ast.AST) -> Optional[str]:
+    """A trackable reference: a bare name or a constant-indexed name."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        idx = const_int(node.slice)
+        if idx is not None:
+            return f"{node.value.id}[{idx}]"
+    return None
+
+
+def _is_key_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Subscript):
+        return _is_key_expr(node.value)
+    if isinstance(node, ast.Call):
+        name, _ = unwrap_transform(node)
+        fn = _random_callee(name)
+        return fn in KEY_PRODUCERS
+    return False
+
+
+class _KeyState:
+    """Per-scope abstract state: ref -> (line, consumer) | None."""
+
+    def __init__(self):
+        self.refs: Dict[str, Optional[Tuple[int, str]]] = {}
+
+    def copy(self) -> "_KeyState":
+        out = _KeyState()
+        out.refs = dict(self.refs)
+        return out
+
+    def merge(self, other: "_KeyState") -> None:
+        for ref, c in other.refs.items():
+            if c is not None:
+                self.refs[ref] = c
+            elif ref not in self.refs:
+                self.refs[ref] = None
+
+
+@register
+class RngKeyReuse(Rule):
+    id = "rng-key-reuse"
+    description = ("a PRNG key value flows into two consuming "
+                   "jax.random.* calls without an intervening "
+                   "split/fold_in")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        self._out: List[Finding] = []
+        self._seen: set = set()
+        self._ctx = ctx
+        # module top-level statements form one scope (nested defs are
+        # their own scopes, visited below)
+        self._run_scope(ctx.tree.body, params=())
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, FunctionLike) and not isinstance(
+                    node, ast.Lambda):
+                self._run_scope(node.body, params=_param_names(node))
+        return iter(self._out)
+
+    # -- scope driver ------------------------------------------------------
+    def _run_scope(self, body, params: Tuple[str, ...]) -> None:
+        state = _KeyState()
+        for p in params:
+            if p.lower() in KEY_PARAM_NAMES:
+                state.refs[p] = None
+        self._exec_block(body, state)
+
+    def _exec_block(self, stmts, state: _KeyState) -> None:
+        for st in stmts:
+            self._exec_stmt(st, state)
+
+    def _exec_stmt(self, st, state: _KeyState) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return                      # separate scope
+        if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = st.value
+            if value is not None:
+                self._scan_expr(value, state)
+            targets = (st.targets if isinstance(st, ast.Assign)
+                       else [st.target])
+            for t in targets:
+                self._bind(t, value, state,
+                           aug=isinstance(st, ast.AugAssign))
+            return
+        if isinstance(st, ast.If):
+            self._scan_expr(st.test, state)
+            s1, s2 = state.copy(), state.copy()
+            self._exec_block(st.body, s1)
+            self._exec_block(st.orelse, s2)
+            # a branch that terminates (return/raise/...) contributes
+            # nothing to the fall-through state: `if flag: return
+            # normal(rng)` followed by `return uniform(rng)` is one
+            # consumer per path, not a reuse
+            state.refs = {}
+            if not _terminates(st.body):
+                state.merge(s1)
+            if not _terminates(st.orelse):
+                state.merge(s2)
+            return
+        if isinstance(st, (ast.For, ast.While)):
+            self._scan_expr(st.iter if isinstance(st, ast.For) else st.test,
+                            state)
+            if isinstance(st, ast.For):
+                self._bind(st.target, None, state)
+            # two passes: the second catches keys consumed once per
+            # iteration without being re-derived inside the loop body
+            self._exec_block(st.body, state)
+            self._exec_block(st.body, state)
+            self._exec_block(st.orelse, state)
+            return
+        if isinstance(st, ast.With):
+            for item in st.items:
+                self._scan_expr(item.context_expr, state)
+            self._exec_block(st.body, state)
+            return
+        if isinstance(st, ast.Try):
+            self._exec_block(st.body, state)
+            for h in st.handlers:
+                self._exec_block(h.body, state)
+            self._exec_block(st.orelse, state)
+            self._exec_block(st.finalbody, state)
+            return
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child, state)
+
+    def _bind(self, target, value, state: _KeyState, aug=False) -> None:
+        if isinstance(target, ast.Name):
+            fresh = value is not None and not aug and _is_key_expr(value)
+            # rebinding clears the name and any tracked elements of it
+            for ref in [r for r in state.refs
+                        if r == target.id
+                        or r.startswith(target.id + "[")]:
+                del state.refs[ref]
+            if fresh:
+                state.refs[target.id] = None
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            fresh = value is not None and not aug and _is_key_expr(value)
+            for el in target.elts:
+                self._bind(el, value if fresh else None, state)
+        elif isinstance(target, ast.Subscript):
+            ref = _key_ref(target)
+            if ref is not None and ref in state.refs:
+                del state.refs[ref]
+
+    # -- expression scan ---------------------------------------------------
+    def _scan_expr(self, node: ast.AST, state: _KeyState) -> None:
+        if isinstance(node, ast.Lambda):
+            return                      # separate scope
+        if isinstance(node, ast.Call):
+            name, call = unwrap_transform(node)
+            fn = _random_callee(name)
+            if fn is not None and fn not in NON_CONSUMING:
+                arg = None
+                if call.args:
+                    arg = call.args[0]
+                else:
+                    arg = next((kw.value for kw in call.keywords
+                                if kw.arg == "key"), None)
+                ref = _key_ref(arg) if arg is not None else None
+                if ref is not None and ref in state.refs:
+                    self._consume(ref, fn, arg, state)
+            for child in ast.iter_child_nodes(node):
+                self._scan_expr(child, state)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.expr, ast.keyword, ast.arguments)):
+                self._scan_expr(child, state)
+
+    def _consume(self, ref: str, fn: str, node, state: _KeyState) -> None:
+        prev = state.refs[ref]
+        if prev is None:
+            state.refs[ref] = (node.lineno, fn)
+            return
+        key = (ref, node.lineno, fn)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        p_line, p_fn = prev
+        where = (f"already consumed by jax.random.{p_fn} at line {p_line}"
+                 if p_line != node.lineno else
+                 f"consumed once per loop iteration by jax.random.{p_fn}")
+        self._out.append(self._ctx.finding(
+            self.id, node,
+            f"PRNG key {ref!r} reused by jax.random.{fn} ({where}); "
+            f"split() or fold_in() a fresh key per consumer"))
+
+
+def _terminates(stmts) -> bool:
+    """True if control never falls off the end of this block."""
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _param_names(fn) -> Tuple[str, ...]:
+    a = fn.args
+    return tuple(p.arg for p in
+                 (*a.posonlyargs, *a.args, *a.kwonlyargs))
+
+
+@register
+class RngRawPRNGKey(Rule):
+    id = "rng-raw-prngkey"
+    description = ("raw PRNGKey construction outside sanctioned entry "
+                   "points (tests, launchers, examples, benchmarks)")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            is_raw = (name.endswith(".PRNGKey") or name == "PRNGKey"
+                      or name in ("jax.random.key", "jrandom.key",
+                                  "jr.key"))
+            if is_raw:
+                yield ctx.finding(
+                    self.id, node,
+                    f"{name}(...) constructs a root PRNG key inside the "
+                    "library; engines must derive streams from the "
+                    "request key (ServeRequest.rng + fold_in) — root "
+                    "keys are sanctioned only in tests/, examples/, "
+                    "benchmarks/ and repro.launch")

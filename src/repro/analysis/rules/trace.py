@@ -1,0 +1,471 @@
+"""Trace-safety rules.
+
+``trace-unsafe-branch``: Python ``if``/``while``/``assert`` (or
+``bool()``/``int()``/``float()``/``.item()``) on a likely-tracer value
+inside a function that jax traces — the classic shape of the pre-PR-3
+host-vs-vmap RNG mismatch, where host-only control flow silently
+diverged from the compiled program.
+
+``host-sync-in-hot-path``: ``np.*`` coercion, ``time.*``, printing or
+``.block_until_ready()`` inside the jitted round/step functions —
+each one either breaks tracing outright or forces a device sync in the
+middle of the serving hot loop. (``jax.debug.print`` is trace-safe and
+not flagged.)
+
+Traced-function detection is shared, module-local and intraprocedural:
+
+- defs decorated with ``jax.jit``/``vmap``/``partial(jax.jit, ...)``;
+- defs/lambdas passed to ``jit``/``vmap``/``pmap``/``grad``/``scan``/
+  ``while_loop``/``cond``/``fori_loop``/``switch``/``pallas_call``/
+  ``checkpoint``/``shard_map`` (incl. through ``functools.partial``);
+- defs nested inside a traced function;
+- module-local functions CALLED from a traced function (one closure:
+  the shared ``_draft_tokens``/``_sd_verdict`` helpers are traced
+  because the jitted rounds call them).
+
+Static (non-tracer) values: params named like configs
+(cfg/config/spec/policy/...), params in ``static_argnums``/
+``static_argnames``, keyword-only params (the Pallas-kernel
+convention: grid/scale statics are bound keyword-only via partial),
+and anything derived only from ``.shape``/``.ndim``/``.dtype``/
+``len()``/``isinstance()``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..astutil import FunctionLike, dotted_name
+from ..core import FileContext, Finding, Rule, register
+
+#: transform callables that trace their function argument(s); the value
+#: is the positional index/indices of the traced function argument.
+_TRANSFORM_FN_ARGS = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+    "pallas_call": (0,), "shard_map": (0,),
+    "scan": (0,), "while_loop": (0, 1), "fori_loop": (2,),
+    "cond": (1, 2), "switch": (),       # switch: list arg handled apart
+}
+
+_TRANSFORM_PREFIXES = ("jax.", "jax.lax.", "lax.", "pl.", "pltpu.",
+                       "pallas.", "jax.experimental.pallas.", "")
+
+#: parameter names that are configs/hosts, never tracers — including the
+#: repo's kernel-knob convention (block sizes / window / softcap are
+#: always static python ints threaded from KernelPolicy)
+_STATIC_PARAM_NAMES = {"self", "cls", "cfg", "config", "spec", "policy",
+                       "mesh", "rules", "model", "models", "tcfg",
+                       "optim", "cfg_t", "cfg_d",
+                       "interpret", "window", "softcap", "scale",
+                       "bn", "bq", "bk", "nb", "page", "page_size",
+                       "kernel", "gamma", "chunk"}
+
+#: attributes whose access yields a static (python) value
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+
+#: builtins whose result is static regardless of the argument
+_STATIC_CALLS = {"len", "isinstance", "issubclass", "getattr", "hasattr",
+                 "type", "callable", "id", "repr", "str"}
+
+
+def _transform_name(name: Optional[str]) -> Optional[str]:
+    """"scan" for "jax.lax.scan" etc., None for non-transform calls."""
+    if name is None:
+        return None
+    for prefix in _TRANSFORM_PREFIXES:
+        if name.startswith(prefix):
+            tail = name[len(prefix):]
+            if tail in _TRANSFORM_FN_ARGS:
+                return tail
+    return None
+
+
+class TracedInfo:
+    __slots__ = ("node", "static", "why")
+
+    def __init__(self, node, why: str, static: Optional[Set[str]] = None):
+        self.node = node
+        self.static: Set[str] = set(static or ())
+        self.why = why
+
+
+def _param_list(fn) -> List[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _kwonly_params(fn) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        return {p.arg for p in fn.args.kwonlyargs}
+    return {p.arg for p in fn.args.kwonlyargs}
+
+
+def _statics_from_jit_kwargs(keywords, fn) -> Set[str]:
+    """static_argnums / static_argnames of a jit(...) call, resolved to
+    parameter names of ``fn`` when possible."""
+    out: Set[str] = set()
+    params = _param_list(fn) if isinstance(fn, FunctionLike) else []
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    out.add(el.value)
+        elif kw.arg == "static_argnums":
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(
+                        el.value, int) and 0 <= el.value < len(params):
+                    out.add(params[el.value])
+    return out
+
+
+def find_traced_functions(ctx: FileContext) -> Dict[int, TracedInfo]:
+    """id(node) -> TracedInfo for every function the module traces."""
+    tree = ctx.tree
+    by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+
+    traced: Dict[int, TracedInfo] = {}
+
+    def mark(fn_expr, why: str, jit_keywords=()) -> None:
+        """Mark the function an expression refers to as traced."""
+        statics: Set[str] = set()
+        if isinstance(fn_expr, ast.Call):
+            # functools.partial(f, **static_kw) -> f with kw static
+            name = dotted_name(fn_expr.func)
+            if name in ("functools.partial", "partial") and fn_expr.args:
+                statics = {kw.arg for kw in fn_expr.keywords
+                           if kw.arg is not None}
+                mark_with_statics(fn_expr.args[0], why, statics,
+                                  jit_keywords)
+            return
+        mark_with_statics(fn_expr, why, statics, jit_keywords)
+
+    def mark_with_statics(fn_expr, why, statics, jit_keywords) -> None:
+        nodes: List[ast.AST] = []
+        if isinstance(fn_expr, ast.Lambda):
+            nodes = [fn_expr]
+        elif isinstance(fn_expr, ast.Name):
+            nodes = by_name.get(fn_expr.id, [])
+        for n in nodes:
+            info = traced.setdefault(id(n), TracedInfo(n, why))
+            info.static |= statics | _kwonly_params(n)
+            info.static |= _statics_from_jit_kwargs(jit_keywords, n)
+
+    # ---- pass 1: decorators + transform call sites
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                tname = _transform_name(dotted_name(dec))
+                kws = ()
+                if tname is None and isinstance(dec, ast.Call):
+                    inner = dotted_name(dec.func)
+                    if inner in ("functools.partial", "partial") and dec.args:
+                        tname = _transform_name(dotted_name(dec.args[0]))
+                        kws = dec.keywords
+                    else:
+                        tname = _transform_name(inner)
+                        kws = dec.keywords
+                if tname is not None:
+                    info = traced.setdefault(
+                        id(node), TracedInfo(node, f"@{tname}"))
+                    info.static |= _kwonly_params(node)
+                    info.static |= _statics_from_jit_kwargs(kws, node)
+        if isinstance(node, ast.Call):
+            tname = _transform_name(dotted_name(node.func))
+            if tname is None:
+                continue
+            for idx in _TRANSFORM_FN_ARGS[tname]:
+                if idx < len(node.args):
+                    mark(node.args[idx], f"passed to {tname}",
+                         node.keywords if tname == "jit" else ())
+            if tname == "switch" and len(node.args) > 1 and isinstance(
+                    node.args[1], (ast.Tuple, ast.List)):
+                for el in node.args[1].elts:
+                    mark(el, "passed to switch")
+
+    # ---- pass 2: fixpoint over nesting + module-local calls
+    def body_calls(fn) -> Set[str]:
+        return {n.func.id for n in ast.walk(fn)
+                if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)}
+
+    def nested_defs(fn) -> List[ast.AST]:
+        out = []
+        for n in ast.walk(fn):
+            if n is not fn and isinstance(
+                    n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append(n)
+        return out
+
+    changed = True
+    while changed:
+        changed = False
+        for info in list(traced.values()):
+            fn = info.node
+            if isinstance(fn, ast.Lambda):
+                continue
+            for sub in nested_defs(fn):
+                if id(sub) not in traced:
+                    traced[id(sub)] = TracedInfo(
+                        sub, f"nested in traced '{getattr(fn, 'name', '?')}'",
+                        _kwonly_params(sub))
+                    changed = True
+            for called in body_calls(fn):
+                for n in by_name.get(called, []):
+                    if id(n) not in traced:
+                        traced[id(n)] = TracedInfo(
+                            n, f"called from traced "
+                               f"'{getattr(fn, 'name', '?')}'",
+                            _kwonly_params(n))
+                        changed = True
+    return traced
+
+
+def _dyn_names(node: ast.AST) -> Set[str]:
+    """Names whose runtime VALUE the expression depends on — names that
+    only appear under static accessors (.shape, len(), isinstance(),
+    `is None` tests) are excluded."""
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return set()
+        return _dyn_names(node.value)
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name in _STATIC_CALLS:
+            return set()
+        out: Set[str] = set()
+        for child in ast.iter_child_nodes(node):
+            out |= _dyn_names(child)
+        return out
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return set()
+        out = _dyn_names(node.left)
+        for c in node.comparators:
+            out |= _dyn_names(c)
+        return out
+    if isinstance(node, ast.Name):
+        return {node.id}
+    if isinstance(node, ast.Lambda):
+        return set()
+    out = set()
+    for child in ast.iter_child_nodes(node):
+        out |= _dyn_names(child)
+    return out
+
+
+class _TaintWalker:
+    """One traced function: propagate param taint through assignments,
+    flag dynamic control flow / host coercions on tainted names."""
+
+    def __init__(self, rule, ctx: FileContext, info: TracedInfo,
+                 inherited: Set[str]):
+        self.rule = rule
+        self.ctx = ctx
+        self.info = info
+        fn = info.node
+        params = set(_param_list(fn)) if not isinstance(fn, ast.Lambda) \
+            else {p.arg for p in fn.args.args}
+        self.tainted: Set[str] = (params - info.static
+                                  - _STATIC_PARAM_NAMES) | set(inherited)
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        body = (self.info.node.body
+                if not isinstance(self.info.node, ast.Lambda)
+                else [ast.Expr(value=self.info.node.body)])
+        self._block(body)
+        return self.findings
+
+    def _block(self, stmts) -> None:
+        for st in stmts:
+            self._stmt(st)
+
+    def _tainted_in(self, expr) -> Set[str]:
+        return _dyn_names(expr) & self.tainted
+
+    def _stmt(self, st) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return      # visited as its own traced function (nested)
+        if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if st.value is not None:
+                self._expr(st.value)
+                hot = self._tainted_in(st.value)
+                targets = (st.targets if isinstance(st, ast.Assign)
+                           else [st.target])
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            if hot:
+                                self.tainted.add(n.id)
+                            else:
+                                self.tainted.discard(n.id)
+            return
+        if isinstance(st, (ast.If, ast.While)):
+            hot = self._tainted_in(st.test)
+            if hot:
+                kind = "if" if isinstance(st, ast.If) else "while"
+                self.findings.append(self.ctx.finding(
+                    self.rule.id, st,
+                    f"Python `{kind}` on likely-tracer value(s) "
+                    f"{_fmt(hot)} inside traced function "
+                    f"{_fname(self.info)} ({self.info.why}); use lax.cond/"
+                    "lax.while_loop/jnp.where or hoist the decision to a "
+                    "static argument"))
+            self._expr(st.test)
+            self._block(st.body)
+            self._block(st.orelse)
+            return
+        if isinstance(st, ast.Assert):
+            hot = self._tainted_in(st.test)
+            if hot:
+                self.findings.append(self.ctx.finding(
+                    self.rule.id, st,
+                    f"`assert` on likely-tracer value(s) {_fmt(hot)} "
+                    f"inside traced function {_fname(self.info)} "
+                    f"({self.info.why}); asserts on tracers either fail "
+                    "at trace time or silently vanish — use "
+                    "checkify/debug.check or assert on static shapes"))
+            return
+        if isinstance(st, ast.For):
+            self._expr(st.iter)
+            self._block(st.body)
+            self._block(st.orelse)
+            return
+        for child in ast.iter_child_nodes(st):
+            if isinstance(child, ast.expr):
+                self._expr(child)
+            elif isinstance(child, ast.stmt):
+                self._stmt(child)
+            elif isinstance(child, (ast.withitem, ast.excepthandler)):
+                for sub in ast.iter_child_nodes(child):
+                    if isinstance(sub, ast.stmt):
+                        self._stmt(sub)
+                    elif isinstance(sub, ast.expr):
+                        self._expr(sub)
+
+    def _expr(self, node) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = dotted_name(sub.func)
+            if name in ("bool", "int", "float") and sub.args:
+                hot = self._tainted_in(sub.args[0])
+                if hot:
+                    self.findings.append(self.ctx.finding(
+                        self.rule.id, sub,
+                        f"`{name}()` forces concretization of "
+                        f"likely-tracer value(s) {_fmt(hot)} inside "
+                        f"traced function {_fname(self.info)} "
+                        f"({self.info.why})"))
+            elif isinstance(sub.func, ast.Attribute) \
+                    and sub.func.attr == "item":
+                hot = self._tainted_in(sub.func.value)
+                if hot:
+                    self.findings.append(self.ctx.finding(
+                        self.rule.id, sub,
+                        f"`.item()` on likely-tracer value(s) {_fmt(hot)} "
+                        f"inside traced function {_fname(self.info)} "
+                        f"({self.info.why})"))
+
+
+def _fname(info: TracedInfo) -> str:
+    return repr(getattr(info.node, "name", "<lambda>"))
+
+
+def _fmt(names: Set[str]) -> str:
+    return ", ".join(sorted(names))
+
+
+def _walk_traced(ctx: FileContext):
+    """(info, inherited_taint) pairs, outer functions before nested, so
+    nested closures inherit the parent's tainted names."""
+    traced = find_traced_functions(ctx)
+    inherited: Dict[int, Set[str]] = {}
+    order: List[TracedInfo] = []
+
+    def visit(node, parent_taint: Set[str]):
+        for child in ast.iter_child_nodes(node):
+            info = traced.get(id(child)) if isinstance(
+                child, FunctionLike) else None
+            if info is not None:
+                w = _TaintWalker.__new__(_TaintWalker)  # taint preview only
+                _TaintWalker.__init__(w, _NULL_RULE, ctx, info, parent_taint)
+                inherited[id(child)] = set(parent_taint)
+                order.append(info)
+                visit(child, set(w.tainted))
+            else:
+                visit(child, parent_taint)
+
+    visit(ctx.tree, set())
+    for info in order:
+        yield info, inherited[id(info.node)]
+
+
+class _NullRule:
+    id = "null"
+
+
+_NULL_RULE = _NullRule()
+
+
+@register
+class TraceUnsafeBranch(Rule):
+    id = "trace-unsafe-branch"
+    description = ("Python control flow or concretization on "
+                   "likely-tracer values inside jit/vmap/scan/"
+                   "pallas_call bodies")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        seen = set()
+        for info, inherited in _walk_traced(ctx):
+            for f in _TaintWalker(self, ctx, info, inherited).run():
+                if (f.line, f.col) not in seen:
+                    seen.add((f.line, f.col))
+                    yield f
+
+
+@register
+class HostSyncInHotPath(Rule):
+    id = "host-sync-in-hot-path"
+    description = ("numpy coercion / time.* / print / "
+                   "block_until_ready inside jitted round or step "
+                   "functions")
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        traced = find_traced_functions(ctx)
+        seen = set()
+        for info in traced.values():
+            for node in ast.walk(info.node):
+                if id(node) in seen:
+                    continue
+                seen.add(id(node))
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                bad = None
+                if name.startswith(("np.", "numpy.")):
+                    bad = (f"{name}() coerces a tracer to a host numpy "
+                           "value")
+                elif name.startswith("time."):
+                    bad = (f"{name}() measures host time inside the "
+                           "compiled program (it times tracing, not "
+                           "compute)")
+                elif name == "print":
+                    bad = ("print() runs at trace time only; use "
+                           "jax.debug.print for runtime values")
+                elif name.endswith(".block_until_ready"):
+                    bad = (".block_until_ready() forces a device sync "
+                           "inside the hot path")
+                elif name in ("jax.device_get", "device_get"):
+                    bad = (f"{name}() pulls device values to the host "
+                           "inside the hot path")
+                if bad is not None:
+                    yield ctx.finding(
+                        self.id, node,
+                        f"{bad} — inside traced function "
+                        f"{_fname(info)} ({info.why})")

@@ -1,0 +1,56 @@
+"""Hardware block-size alignment spec — the ONE table both the runtime
+validator (``kernels.policy.validate_block_size``) and the static
+analyzer (``repro.analysis`` rule ``pallas-block-align``) consume.
+
+Keeping the table here, import-free, is deliberate: the analyzer must
+be able to read the spec without pulling in jax, and the runtime must
+not drift from what the lint rule enforces. Changing an entry changes
+BOTH checkers — the analysis test suite pins that property.
+
+TPU tiling background: Mosaic tiles the last two dims of every block as
+(sublane, lane) = (8, 128) for f32. A BlockSpec whose second-to-last
+dim is not a sublane multiple fails deep inside lowering with an
+opaque Mosaic error; ``validate_block_size`` rounds the request up and
+warns instead, and the lint rule catches misaligned literals before
+they ever reach a device.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+#: TPU sublane quantum: the second-to-last dim of an f32 block tile.
+SUBLANE = 8
+
+#: TPU lane quantum: the last dim of a block tile.
+LANE = 128
+
+#: Alignment required of each ``KernelPolicy`` block-size knob.
+#: ``bq``/``bk`` tile the attention query/key axes, ``bn`` the
+#: log-normal-mixture row axis — all land as the second-to-last block
+#: dim of some kernel operand. ``page_size`` is the paged pools' KV
+#: block: inside ``spec_verify_attention`` the page axis is the
+#: sublane dim of the [page, Dh] K/V tile, so compiled TPU runs need it
+#: sublane-aligned too (interpret-mode tests may use smaller pages; the
+#: lint rule's default config scopes the check to ``src/``).
+BLOCK_PARAM_ALIGN = {
+    "bq": SUBLANE,
+    "bk": SUBLANE,
+    "bn": SUBLANE,
+    "page_size": SUBLANE,
+}
+
+
+def alignment_for(name: str, default: Optional[int] = None) -> int:
+    """Required alignment of block-size knob ``name`` (live lookup, so
+    tests monkeypatching ``BLOCK_PARAM_ALIGN`` move every consumer)."""
+    if default is None:
+        default = SUBLANE
+    return int(BLOCK_PARAM_ALIGN.get(name, default))
+
+
+def round_up(value: int, align: int) -> int:
+    return ((value + align - 1) // align) * align
+
+
+def is_aligned(name: str, value: int) -> bool:
+    return value % alignment_for(name) == 0

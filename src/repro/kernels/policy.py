@@ -33,10 +33,10 @@ from typing import Optional
 
 import jax
 
-BACKENDS = ("auto", "pallas", "ref")
+from . import alignment
+from .alignment import SUBLANE  # noqa: F401  (re-export: historical home)
 
-#: TPU sublane alignment for the second-to-last block dim (f32).
-SUBLANE = 8
+BACKENDS = ("auto", "pallas", "ref")
 
 
 def on_tpu() -> bool:
@@ -117,18 +117,22 @@ def _warn_once(key, msg):
 
 def validate_block_size(op: str, name: str, value: int, *,
                         total: Optional[int] = None,
-                        align: int = SUBLANE) -> int:
+                        align: Optional[int] = None) -> int:
     """Round a requested block size to a usable one, warning once.
 
-    - rounds UP to a multiple of ``align`` (the TPU sublane quantum; a
-      misaligned second-minor block dim fails inside Mosaic otherwise);
+    - rounds UP to a multiple of ``align`` (default: the knob's entry in
+      ``kernels.alignment.BLOCK_PARAM_ALIGN`` — the same table the
+      ``pallas-block-align`` lint rule enforces statically; a misaligned
+      second-minor block dim fails inside Mosaic otherwise);
     - clamps to ``total`` rounded up to ``align`` (callers pad the array
       to the returned block size, so a block larger than the padded
       extent is just the whole array).
     """
+    if align is None:
+        align = alignment.alignment_for(name)
     if value < 1:
         raise ValueError(f"{op}: block size {name}={value} must be >= 1")
-    rounded = ((value + align - 1) // align) * align
+    rounded = alignment.round_up(value, align)
     if rounded != value:
         _warn_once((op, name, value),
                    f"{op}: block size {name}={value} is not "
@@ -138,6 +142,6 @@ def validate_block_size(op: str, name: str, value: int, *,
     if total is not None:
         # capping to the (aligned) array extent is the normal small-input
         # case — silent, like the kernels' own min(b, S) clamp
-        cap = ((max(total, 1) + align - 1) // align) * align
+        cap = alignment.round_up(max(total, 1), align)
         rounded = min(rounded, cap)
     return rounded

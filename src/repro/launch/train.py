@@ -23,14 +23,19 @@ from ..train.trainer import make_train_step
 
 
 def synthetic_batch(cfg, rng, batch, seq):
-    toks = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    # distinct fold_in stream per draw: reusing one key would correlate
+    # the vision/encoder noise with the token stream
+    toks = jax.random.randint(
+        jax.random.fold_in(rng, 0), (batch, seq), 0, cfg.vocab_size)
     out = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
     if cfg.family == "vlm":
         out["vision_embeds"] = jax.random.normal(
-            rng, (batch, cfg.vision_prefix_len, cfg.d_model))
+            jax.random.fold_in(rng, 1),
+            (batch, cfg.vision_prefix_len, cfg.d_model))
     if cfg.family == "encdec":
         out["enc_frames"] = jax.random.normal(
-            rng, (batch, max(4, seq // cfg.enc_seq_divisor), cfg.d_model))
+            jax.random.fold_in(rng, 2),
+            (batch, max(4, seq // cfg.enc_seq_divisor), cfg.d_model))
     return out
 
 

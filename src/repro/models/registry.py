@@ -51,5 +51,6 @@ def get_model(cfg) -> ModelApi:
 def abstract_params(cfg, rng=None):
     """Shape/dtype tree of the params without allocating (for dry-run)."""
     mod = _FAMILIES[cfg.family]
+    # repro: ignore[rng-raw-prngkey] -- eval_shape dry-run fallback; the key is abstract and never consumed for randomness
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     return jax.eval_shape(lambda r: mod.init_params(cfg, r), rng)

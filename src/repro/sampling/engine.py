@@ -194,7 +194,8 @@ class SamplingEngine:
         # — the seed batch (and therefore every per-lane buffer) is
         # partitioned over the mesh's data axis; params keep the logical
         # placement applied above.
-        rng_struct = jax.eval_shape(lane_keys, jax.random.PRNGKey(0))
+        key0 = jax.random.PRNGKey(0)  # repro: ignore[rng-raw-prngkey] -- shape-only dummy under eval_shape; no random bits are ever drawn from it
+        rng_struct = jax.eval_shape(lane_keys, key0)
         in_sh = rules.sharding(
             ("batch",) + (None,) * (len(rng_struct.shape) - 1),
             dims=tuple(rng_struct.shape))

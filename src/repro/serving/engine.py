@@ -1105,7 +1105,7 @@ class ServingEngine:
         t_pend = np.zeros((S,), np.float32)
         k_pend = np.zeros((S,), np.int32)
         ridx = np.zeros((S,), np.int32)
-        keys = [jax.random.PRNGKey(0)] * S
+        keys = [_as_key(0)] * S
         for slot, st in alive:
             t_pend[slot] = st.t_pend
             k_pend[slot] = st.pending
@@ -1239,7 +1239,7 @@ class ServingEngine:
         ridx = np.zeros((S,), np.int32)
         temps = np.ones((S,), np.float32)
         active = np.zeros((S,), bool)
-        keys = [jax.random.PRNGKey(0)] * S
+        keys = [_as_key(0)] * S
         for slot, st in alive:
             pending[slot] = st.pending
             ridx[slot] = st.round_idx

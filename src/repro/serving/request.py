@@ -25,6 +25,7 @@ _REQUEST_IDS = itertools.count()
 def _as_key(rng) -> jax.Array:
     """Accept a PRNGKey or a plain int seed."""
     if isinstance(rng, (int, np.integer)):
+        # repro: ignore[rng-raw-prngkey] -- THE sanctioned seed->key boundary: every request-supplied int seed enters the key space here
         return jax.random.PRNGKey(int(rng))
     return rng
 

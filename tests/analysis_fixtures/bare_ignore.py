@@ -1,0 +1,4 @@
+"""A reasonless ignore suppresses nothing and is itself flagged."""
+import jax
+
+KEY = jax.random.PRNGKey(0)  # repro: ignore[rng-raw-prngkey]

@@ -1,0 +1,14 @@
+"""BAD: host round-trips inside a jitted hot-path function."""
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def round_fn(x):
+    t0 = time.perf_counter()
+    y = np.asarray(x)
+    print("round took", t0)
+    x.block_until_ready()
+    return y

@@ -1,0 +1,15 @@
+"""GOOD: device-side math only; host staging stays outside jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def round_fn(x):
+    jax.debug.print("round {}", x)
+    return jnp.tanh(x)
+
+
+def driver(x):
+    # not traced: host staging here is fine
+    return np.asarray(round_fn(x))

@@ -1,0 +1,15 @@
+"""BAD: misaligned block shape, bad knob literal, grid-arity mismatch."""
+from jax.experimental import pallas as pl
+
+
+def misaligned(x, kernel):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((12, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((16, 128), lambda i, j: (i, 0)),
+    )(x)
+
+
+def bad_knob(policy_cls):
+    return policy_cls(bq=100, bk=48)

@@ -1,0 +1,27 @@
+"""GOOD: aligned shapes, arity matches grid + scalar prefetch."""
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def aligned(x, kernel):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((16, 128), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((1, 128), lambda i, j: (i, 0)),
+    )(x)
+
+
+def prefetch(x, kernel):
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(8,),
+            in_specs=[pl.BlockSpec((8, 128), lambda s, i: (i, 0))],
+        ),
+    )(x)
+
+
+def good_knob(policy_cls):
+    return policy_cls(bq=128, page_size=8)

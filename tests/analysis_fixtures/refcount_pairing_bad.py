@@ -1,0 +1,14 @@
+"""BAD: retain with no release path; refcount poked from outside."""
+
+
+class LeakyHolder:
+    def __init__(self):
+        self.pages = []
+
+    def grab(self, pool, pid):
+        pool.retain(pid)
+        self.pages.append(pid)
+
+
+def poke(pool, pid):
+    pool.refcount[pid] += 1

@@ -1,0 +1,26 @@
+"""GOOD: retain paired with release in the same class; the counter is
+only mutated by the class that defines retain()/release()."""
+
+
+class Cache:
+    def __init__(self):
+        self.pages = []
+
+    def insert(self, pool, pid):
+        pool.retain(pid)
+        self.pages.append(pid)
+
+    def evict(self, pool, pid):
+        self.pages.remove(pid)
+        pool.release(pid)
+
+
+class Pool:
+    def __init__(self, n):
+        self.refcount = [0] * n
+
+    def retain(self, pid):
+        self.refcount[pid] += 1
+
+    def release(self, pid):
+        self.refcount[pid] -= 1

@@ -1,0 +1,15 @@
+"""BAD: one PRNG key feeds two consumers without split/fold_in."""
+import jax
+
+
+def sample_pair(rng):
+    a = jax.random.normal(rng, (4,))
+    b = jax.random.uniform(rng, (4,))
+    return a + b
+
+
+def loop_reuse(rng, n):
+    total = 0.0
+    for _ in range(n):
+        total = total + jax.random.normal(rng, ())
+    return total

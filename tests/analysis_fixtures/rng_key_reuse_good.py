@@ -1,0 +1,23 @@
+"""GOOD: every consumer gets its own split/fold_in stream."""
+import jax
+
+
+def sample_pair(rng):
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def loop_fold(rng, n):
+    total = 0.0
+    for i in range(n):
+        total = total + jax.random.normal(jax.random.fold_in(rng, i), ())
+    return total
+
+
+def branch_either(rng, flag):
+    # mutually exclusive branches: each consumes the key at most once
+    if flag:
+        return jax.random.normal(rng, ())
+    return jax.random.uniform(rng, ())

@@ -1,0 +1,11 @@
+"""BAD: root-key construction inside library code."""
+import jax
+
+
+def make_noise(shape):
+    key = jax.random.PRNGKey(0)
+    return jax.random.normal(key, shape)
+
+
+def new_style(seed):
+    return jax.random.key(seed)

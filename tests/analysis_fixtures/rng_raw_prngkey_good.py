@@ -1,0 +1,6 @@
+"""GOOD: streams derived from a caller-provided key."""
+import jax
+
+
+def make_noise(rng, shape):
+    return jax.random.normal(jax.random.fold_in(rng, 7), shape)

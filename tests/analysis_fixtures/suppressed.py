@@ -1,0 +1,8 @@
+"""Suppressions with written reasons: findings move to the suppressed
+list (trailing-comment and standalone-comment forms)."""
+import jax
+
+KEY = jax.random.PRNGKey(0)  # repro: ignore[rng-raw-prngkey] -- fixture: demonstrates a justified trailing suppression
+
+# repro: ignore[rng-raw-prngkey] -- fixture: a standalone comment governs the next code line
+KEY2 = jax.random.PRNGKey(1)

@@ -1,0 +1,29 @@
+"""BAD: Python control flow / coercion on tracer values inside jit."""
+import jax
+
+
+@jax.jit
+def relu_branch(x):
+    if x > 0:
+        return x
+    return 0.0 * x
+
+
+@jax.jit
+def count_down(x):
+    n = 0
+    while x > 0:
+        x = x - 1
+        n = n + 1
+    return n
+
+
+@jax.jit
+def checked(x):
+    assert x >= 0
+    return x
+
+
+@jax.jit
+def to_host(x):
+    return float(x.item())

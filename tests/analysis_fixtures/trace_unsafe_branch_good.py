@@ -1,0 +1,33 @@
+"""GOOD: shape-derived branching, lax select, static knobs."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_where(x):
+    return jnp.where(x > 0, x, 0.0)
+
+
+@jax.jit
+def pad_if_ragged(x):
+    if x.shape[0] % 8:
+        x = jnp.pad(x, (0, 8 - x.shape[0] % 8))
+    return x
+
+
+@jax.jit
+def rank_branch(x):
+    if len(x.shape) == 1:
+        x = x[None, :]
+    return x
+
+
+@partial(jax.jit, static_argnames=("n",))
+def repeat(x, n):
+    if n > 2:
+        x = x * 2.0
+    for _ in range(n):
+        x = x + 1.0
+    return x

@@ -1,0 +1,2 @@
+"""Suppressing a rule id that does not exist is flagged."""
+X = 1  # repro: ignore[no-such-rule] -- typo'd rule ids must not pass silently

@@ -8,3 +8,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+#: fuzz suites that silently vanish from the run when hypothesis is absent
+_FUZZ_SUITES = ("test_property", "test_prefix_fuzz")
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not _HAVE_HYPOTHESIS:
+        terminalreporter.write_line(
+            "repro: hypothesis not installed — fuzz suites skipped: "
+            + ", ".join(_FUZZ_SUITES)
+            + " (pip install -e .[dev] to enable)",
+            yellow=True)

@@ -1,0 +1,194 @@
+"""Tests for the repo-native static-analysis pass (``repro.analysis``).
+
+Every rule is exercised against a bad fixture (must flag) and a good
+fixture (must stay clean); suppression semantics, the SARIF renderer,
+the CLI exit codes, and the shared-alignment-spec pin (the lint rule and
+``validate_block_size`` move together when the table changes) each get
+their own test. Fixtures live in ``tests/analysis_fixtures/`` and are
+globally excluded from the repo's default analysis config — the bad
+snippets are lint violations ON PURPOSE.
+"""
+import json
+import pathlib
+
+import pytest
+
+import repro.analysis.rules  # noqa: F401  (populate the registry)
+from repro.analysis import (RULES, render_sarif, run_analysis,
+                            unrestricted_config)
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.core import BARE_IGNORE
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "analysis_fixtures"
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+#: (rule id, fixture stem) — one bad + one good file per rule
+PAIRS = [
+    ("rng-key-reuse", "rng_key_reuse"),
+    ("rng-raw-prngkey", "rng_raw_prngkey"),
+    ("trace-unsafe-branch", "trace_unsafe_branch"),
+    ("host-sync-in-hot-path", "host_sync"),
+    ("pallas-block-align", "pallas_block_align"),
+    ("refcount-pairing", "refcount_pairing"),
+]
+
+
+def _run(name, rules=None):
+    return run_analysis([str(FIXTURES / name)],
+                        config=unrestricted_config(), rules=rules)
+
+
+def test_every_rule_has_a_fixture_pair():
+    assert sorted(r for r, _ in PAIRS) == sorted(RULES)
+
+
+@pytest.mark.parametrize("rule,stem", PAIRS)
+def test_bad_fixture_flags(rule, stem):
+    rep = _run(f"{stem}_bad.py", rules=[rule])
+    hits = [f for f in rep.findings if f.rule == rule]
+    assert hits, f"{stem}_bad.py produced no {rule} findings"
+    for f in hits:
+        assert f.line >= 1 and f.col >= 1 and f.message
+
+
+@pytest.mark.parametrize("rule,stem", PAIRS)
+def test_good_fixture_clean(rule, stem):
+    rep = _run(f"{stem}_good.py", rules=[rule])
+    assert not rep.findings, [f.render() for f in rep.findings]
+
+
+def test_bad_fixtures_flag_multiple_sites():
+    # the bad fixtures each contain several distinct violations; the
+    # rules must report every site, not bail after the first
+    rep = _run("trace_unsafe_branch_bad.py", rules=["trace-unsafe-branch"])
+    assert len(rep.findings) >= 4          # if / while / assert / float-item
+    rep = _run("pallas_block_align_bad.py", rules=["pallas-block-align"])
+    kinds = {("BlockSpec" in f.message, "index_map" in f.message,
+              "knob" in f.message) for f in rep.findings}
+    assert len(rep.findings) >= 3 and len(kinds) >= 3
+
+
+# -- suppression semantics --------------------------------------------------
+
+def test_suppression_with_reason_moves_finding():
+    rep = _run("suppressed.py")
+    assert rep.ok and not rep.findings
+    assert len(rep.suppressed) == 2        # trailing + standalone comment
+    for f, sup in rep.suppressed:
+        assert f.rule == "rng-raw-prngkey"
+        assert sup.reason and sup.used
+
+
+def test_bare_ignore_does_not_suppress():
+    rep = _run("bare_ignore.py")
+    rules = sorted(f.rule for f in rep.findings)
+    assert "rng-raw-prngkey" in rules      # original finding survives
+    assert BARE_IGNORE in rules            # and the bare ignore is flagged
+    assert not rep.suppressed
+
+
+def test_unknown_rule_id_in_suppression_flagged():
+    rep = _run("unknown_rule.py")
+    assert [f.rule for f in rep.findings] == [BARE_IGNORE]
+    assert "no-such-rule" in rep.findings[0].message
+
+
+def test_fixture_corpus_excluded_by_default_config(monkeypatch):
+    # the repo config must skip the corpus entirely, or CI's clean-tree
+    # gate would trip over the intentionally-bad snippets
+    monkeypatch.chdir(REPO_ROOT)
+    rep = run_analysis(["tests/analysis_fixtures"])
+    assert rep.ok and not rep.suppressed
+
+
+def test_repo_src_tree_is_clean(monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+    rep = run_analysis(["src"])
+    assert rep.ok, [f.render() for f in rep.findings]
+    # intentional exceptions exist and every one carries a reason
+    assert rep.suppressed
+    assert all(sup.reason for _, sup in rep.suppressed)
+
+
+# -- output formats ---------------------------------------------------------
+
+def test_sarif_schema_and_suppressions():
+    rep = _run("suppressed.py", rules=["rng-raw-prngkey"])
+    doc = json.loads(render_sarif(rep))
+    assert doc["version"] == "2.1.0"
+    assert "sarif-schema-2.1.0" in doc["$schema"]
+    run = doc["runs"][0]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro.analysis"
+    ids = {r["id"] for r in driver["rules"]}
+    assert set(RULES) <= ids and BARE_IGNORE in ids
+    notes = [r for r in run["results"] if r["level"] == "note"]
+    assert len(notes) == 2
+    for n in notes:
+        assert n["suppressions"][0]["kind"] == "inSource"
+        assert n["suppressions"][0]["justification"]
+        region = n["locations"][0]["physicalLocation"]["region"]
+        assert region["startLine"] >= 1 and region["startColumn"] >= 1
+
+
+def test_sarif_findings_carry_locations():
+    rep = _run("rng_raw_prngkey_bad.py", rules=["rng-raw-prngkey"])
+    doc = json.loads(render_sarif(rep))
+    results = doc["runs"][0]["results"]
+    assert results and all(r["level"] == "error" for r in results)
+    uris = {r["locations"][0]["physicalLocation"]["artifactLocation"]["uri"]
+            for r in results}
+    assert all(u.endswith("rng_raw_prngkey_bad.py") for u in uris)
+
+
+# -- CLI --------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\nKEY = jax.random.PRNGKey(0)\n")
+    good = tmp_path / "good.py"
+    good.write_text("import jax\n\n\ndef f(rng):\n"
+                    "    return jax.random.normal(rng, (2,))\n")
+    assert cli_main([str(bad), "--rules", "rng-raw-prngkey"]) == 1
+    assert cli_main([str(good), "--rules", "rng-raw-prngkey"]) == 0
+    out = capsys.readouterr().out
+    assert "rng-raw-prngkey" in out
+
+
+def test_cli_sarif_output_file(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\nKEY = jax.random.PRNGKey(0)\n")
+    report_path = tmp_path / "report.sarif"
+    rc = cli_main([str(bad), "--format", "sarif",
+                   "--output", str(report_path)])
+    assert rc == 1
+    doc = json.loads(report_path.read_text())
+    assert doc["version"] == "2.1.0"
+    assert any(r["ruleId"] == "rng-raw-prngkey"
+               for r in doc["runs"][0]["results"])
+
+
+# -- shared alignment spec (tentpole acceptance pin) ------------------------
+
+def test_alignment_table_is_shared(monkeypatch, tmp_path):
+    """Changing kernels.alignment.BLOCK_PARAM_ALIGN must move BOTH the
+    runtime validator and the lint rule — one spec, two consumers."""
+    from repro.kernels import alignment
+    from repro.kernels.policy import validate_block_size
+
+    knob = tmp_path / "knob.py"
+    knob.write_text("def build(attn):\n    return attn(bq=8)\n")
+
+    # default table: bq aligns to the sublane quantum, 8 is fine
+    assert validate_block_size("t", "bq", 8) == 8
+    rep = run_analysis([str(knob)], config=unrestricted_config(),
+                       rules=["pallas-block-align"])
+    assert not rep.findings
+
+    monkeypatch.setitem(alignment.BLOCK_PARAM_ALIGN, "bq", 32)
+    with pytest.warns(UserWarning):
+        assert validate_block_size("t2", "bq", 8) == 32
+    rep = run_analysis([str(knob)], config=unrestricted_config(),
+                       rules=["pallas-block-align"])
+    assert [f.rule for f in rep.findings] == ["pallas-block-align"]
+    assert "32" in rep.findings[0].message
