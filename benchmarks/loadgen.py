@@ -14,11 +14,19 @@ Each arrival is one QUERY: a fanout-K scenario group for the forecast
 target (K rollouts of a shared event history through the wave-serving
 TPP engine) or a prompt completion for the token serving target. The
 report is sustained queries/s + rollouts/s against the offered rate,
-with completion-latency percentiles.
+with completion-latency percentiles (p50/p95/p99), per-status counts,
+and GOODPUT (tokens delivered by in-deadline "ok" requests per second
+of the active window) — under ``--deadline``/``--shed-queue`` overload
+the engine trades completions for latency, and goodput is the number
+that shows whether the trade paid.
 
   PYTHONPATH=src python -m benchmarks.loadgen --target forecast \
       --rate 2 --queries 12 --fanout 8
   PYTHONPATH=src python -m benchmarks.loadgen --target serving --rate 4
+  # overload leg: offered rate far above capacity, bounded queue —
+  # sheds the tail, keeps serving the head
+  PYTHONPATH=src python -m benchmarks.loadgen --target serving \
+      --rate 50 --queries 24 --shed-queue 2 --deadline 30 --bench-json
 """
 from __future__ import annotations
 
@@ -60,9 +68,11 @@ class _Query:
 
 def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
     """Open-loop drive: submit query i at its Poisson arrival offset,
-    stepping the engine in between; returns (per-query records, wall)."""
+    stepping the engine in between; returns (per-query records,
+    per-status result counts, wall)."""
     arrivals = poisson_arrivals(rate, len(queries), seed)
     recs: List[_Query] = []
+    statuses: Dict[str, int] = {}
     next_q = 0
     t0 = time.perf_counter()
     while next_q < len(queries) or engine.scheduler.has_work():
@@ -76,6 +86,7 @@ def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
             next_q += 1
         if engine.scheduler.has_work():
             for res in engine.step():
+                statuses[res.status] = statuses.get(res.status, 0) + 1
                 for q in recs:
                     if res.request_id in q.pending:
                         q.pending.discard(res.request_id)
@@ -84,7 +95,7 @@ def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
         elif next_q < len(queries):
             # idle gap until the next scheduled arrival
             time.sleep(min(0.01, max(0.0, arrivals[next_q] - now)))
-    return recs, time.perf_counter() - t0
+    return recs, statuses, time.perf_counter() - t0
 
 
 def build_forecast_engine(args):
@@ -101,14 +112,16 @@ def build_forecast_engine(args):
     eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
                         max_batch=args.max_batch, gamma=2,
                         max_len=8 + args.budget + 2, page_size=4,
-                        sched="grouped", prefix_cache=True)
+                        sched="grouped", prefix_cache=True,
+                        shed_queue=_shed(args))
     r = np.random.default_rng(args.seed)
     hist_t = np.cumsum(r.exponential(0.5, size=8)).astype(np.float32)
     hist_k = r.integers(0, 5, size=8).astype(np.int32)
     queries = [dict(prompt=hist_k, times=hist_t,
                     t_end=float(hist_t[-1]) + 4.0,
                     max_new_tokens=args.budget,
-                    rng=jax.random.PRNGKey(100 + i), fanout=args.fanout)
+                    rng=jax.random.PRNGKey(100 + i), fanout=args.fanout,
+                    deadline_s=args.deadline or None)
                for i in range(args.queries)]
     return eng, queries
 
@@ -123,11 +136,17 @@ def build_serving_engine(args):
     pt = registry.get_model(cfg_t).init_params(jax.random.PRNGKey(0))
     pd = registry.get_model(cfg_d).init_params(jax.random.PRNGKey(1))
     eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
-                        max_batch=args.max_batch, max_len=64, gamma=2)
+                        max_batch=args.max_batch, max_len=64, gamma=2,
+                        shed_queue=_shed(args))
     queries = [dict(prompt=jnp.arange(8, dtype=jnp.int32),
-                    max_new_tokens=args.budget, rng=100 + i)
+                    max_new_tokens=args.budget, rng=100 + i,
+                    deadline_s=args.deadline or None)
                for i in range(args.queries)]
     return eng, queries
+
+
+def _shed(args):
+    return args.shed_queue if args.shed_queue >= 0 else None
 
 
 def main():
@@ -143,16 +162,29 @@ def main():
                     help="events/tokens per rollout")
     ap.add_argument("--max-batch", dest="max_batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-query deadline_s (0 = none): queries the "
+                         "engine cannot finish in time retire "
+                         "status='deadline' and drop out of goodput")
+    ap.add_argument("--shed-queue", dest="shed_queue", type=int,
+                    default=-1,
+                    help="bound the pending queue: after each step's "
+                         "admissions the backlog past this depth is "
+                         "shed (status='shed'); -1 = never shed")
+    ap.add_argument("--bench-json", dest="bench_json",
+                    action="store_true",
+                    help="merge an overload row into BENCH_serving.json")
     args = ap.parse_args()
 
     eng, queries = (build_forecast_engine(args) if args.target == "forecast"
                     else build_serving_engine(args))
     # warm the compile caches outside the timed window, then reset
-    eng.submit(**queries[0])
+    # (deadline stripped: the warm-up must run to completion)
+    eng.submit(**{**queries[0], "deadline_s": None})
     eng.run()
     eng.reset()
 
-    recs, wall = drive(eng, queries, args.rate, args.seed)
+    recs, statuses, wall = drive(eng, queries, args.rate, args.seed)
     st = eng.stats()
     lat = np.sort(np.array([q.done_s - q.arrival_s for q in recs]))
     # sustained rate over the active window (first arrival -> last
@@ -162,16 +194,38 @@ def main():
     sustained = len(recs) / window
     span = max(1e-9, recs[-1].arrival_s - recs[0].arrival_s)
     offered = (len(recs) - 1) / span if len(recs) > 1 else args.rate
+    goodput = st.goodput_tokens / window
+    p50, p95, p99 = (float(np.percentile(lat, q)) for q in (50, 95, 99))
     print(f"target={args.target} rate={args.rate:.2f} "
           f"(realized {offered:.2f}) q/s queries={len(recs)} fanout="
           f"{args.fanout if args.target == 'forecast' else 1}")
     print(f"sustained={sustained:.2f} queries/s | "
           f"rollouts/s={st.rollouts / window:.1f} | "
           f"tokens={st.tokens} | wall={wall:.1f}s")
-    print(f"latency p50={np.percentile(lat, 50):.2f}s "
-          f"p95={np.percentile(lat, 95):.2f}s max={lat[-1]:.2f}s"
+    print(f"latency p50={p50:.2f}s p95={p95:.2f}s p99={p99:.2f}s "
+          f"max={lat[-1]:.2f}s"
           + ("" if sustained >= 0.9 * offered else
              "  [engine saturated below the offered rate]"))
+    print("statuses " + " ".join(
+        f"{k}={statuses.get(k, 0)}"
+        for k in ("ok", "failed", "cancelled", "deadline", "shed"))
+        + f" | goodput_tok_s={goodput:.1f}")
+    if args.bench_json:
+        from benchmarks.run import _merge_bench_serving  # heavy: lazy
+        row = {"offered_rate_qps": round(offered, 3),
+               "sustained_qps": round(sustained, 3),
+               "p50_s": round(p50, 4), "p95_s": round(p95, 4),
+               "p99_s": round(p99, 4),
+               "goodput_tok_s": round(goodput, 1),
+               "deadline_s": args.deadline or None,
+               "shed_queue": args.shed_queue
+               if args.shed_queue >= 0 else None}
+        row.update({f"n_{k}": statuses.get(k, 0)
+                    for k in ("ok", "deadline", "shed")})
+        _merge_bench_serving(
+            {f"loadgen_{args.target}_overload"
+             if (args.shed_queue >= 0 or args.deadline) else
+             f"loadgen_{args.target}": row})
 
 
 if __name__ == "__main__":

@@ -90,6 +90,10 @@ class ForecastResult:
     wave_sizes: List[int]          # fan-out of each wave, in order
     wall_s: float
     rollouts_per_sec: float        # the workload's headline metric
+    failed_rollouts: int = 0       # members that stayed failed after the
+                                   # executor's per-member retries (their
+                                   # streams are absent from the
+                                   # aggregate; ``collect`` leaves None)
     rollouts: Optional[List[Tuple[np.ndarray, np.ndarray]]] = field(
         default=None, repr=False)  # collect=True: [(marks, times)] per
                                    # member index — tests only; defeats
@@ -104,7 +108,9 @@ class ForecastResult:
                 f"(sizes {self.wave_sizes[:4]}"
                 f"{'...' if self.n_waves > 4 else ''}) "
                 f"events={self.events} "
-                f"rollouts/s={self.rollouts_per_sec:.1f}")
+                f"rollouts/s={self.rollouts_per_sec:.1f}"
+                + (f" failed={self.failed_rollouts}"
+                   if self.failed_rollouts else ""))
 
 
 class Forecaster:
@@ -114,11 +120,20 @@ class Forecaster:
     ``forecast`` is called; the call owns the engine until it returns.
     """
 
-    def __init__(self, engine):
+    def __init__(self, engine, max_retries: int = 2):
         if getattr(engine, "domain", None) != "tpp":
             raise ValueError("Forecaster needs a TPP serving engine "
                              "(built from a TPPConfig)")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         self.engine = engine
+        #: per-member resubmission budget: a rollout the engine retired
+        #: non-"ok" (injected fault, quarantined lane, cancellation) is
+        #: resubmitted alone with ``fanout_offset = member``, which
+        #: reproduces its exact ``fold_in(rng, member)`` stream — a
+        #: retried rollout folds bitwise what the failure-free wave
+        #: would have folded
+        self.max_retries = max_retries
 
     def forecast(self, req: ForecastRequest,
                  collect: bool = False) -> ForecastResult:
@@ -135,6 +150,7 @@ class Forecaster:
         wave_sizes: List[int] = []
         events = 0
         done = 0
+        failed: List[int] = []     # member indices retired non-"ok"
         t_start = time.perf_counter()
         while done < req.n_rollouts:
             k = min(eng.fanout_headroom(plen, req.max_events),
@@ -146,18 +162,50 @@ class Forecaster:
             member = {rid: done + j for j, rid in enumerate(ids)}
             results = eng.run()
             # fold this wave and forget it: the host buffer is one wave
-            # ([K <= max_batch, budget]), never the full fan-out
-            buf = np.zeros((len(results), req.max_events), np.float32)
-            nv = np.zeros((len(results),), np.int32)
-            for i, r in enumerate(results):
-                buf[i, :r.n] = r.times
-                nv[i] = r.n
-                events += r.n
-                if collect:
-                    rollouts[member[r.request_id]] = (r.tokens, r.times)
-            agg.fold(buf, nv)
+            # ([K <= max_batch, budget]), never the full fan-out. Only
+            # "ok" retirements enter the buffer — the aggregator counts
+            # every row as a rollout, so a failed lane's row (even
+            # empty) would bias the count distribution; failed members
+            # are re-run by the retry pass below instead
+            good = [r for r in results if r.ok]
+            failed.extend(member[r.request_id]
+                          for r in results if not r.ok)
+            if good:
+                buf = np.zeros((len(good), req.max_events), np.float32)
+                nv = np.zeros((len(good),), np.int32)
+                for i, r in enumerate(good):
+                    buf[i, :r.n] = r.times
+                    nv[i] = r.n
+                    events += r.n
+                    if collect:
+                        rollouts[member[r.request_id]] = (r.tokens, r.times)
+                agg.fold(buf, nv)
             wave_sizes.append(k)
             done += k
+        # per-member retry: resubmitting member j alone at offset j
+        # re-derives fold_in(rng, j) — the retried rollout is bitwise
+        # the one the failed wave lost
+        for _ in range(self.max_retries):
+            if not failed:
+                break
+            still: List[int] = []
+            for j in failed:
+                ids = eng.submit(prompt=req.history_marks,
+                                 times=req.history_times, t_end=t_end,
+                                 max_new_tokens=req.max_events,
+                                 rng=req.rng, fanout=1, fanout_offset=j)
+                results = eng.run()
+                r = results[0] if results else None
+                if r is None or not r.ok:
+                    still.append(j)
+                    continue
+                buf = np.zeros((1, req.max_events), np.float32)
+                buf[0, :r.n] = r.times
+                agg.fold(buf, np.asarray([r.n], np.int32))
+                events += r.n
+                if collect:
+                    rollouts[j] = (r.tokens, r.times)
+            failed = still
         wall = time.perf_counter() - t_start
         return ForecastResult(
             bin_edges=agg.bin_edges,
@@ -167,4 +215,4 @@ class Forecaster:
             n_rollouts=req.n_rollouts, events=events,
             wave_sizes=wave_sizes, wall_s=wall,
             rollouts_per_sec=req.n_rollouts / max(1e-9, wall),
-            rollouts=rollouts)
+            failed_rollouts=len(failed), rollouts=rollouts)

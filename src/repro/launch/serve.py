@@ -45,7 +45,8 @@ def build_engine(args):
         page_size=args.page_size, sched=args.sched,
         prefill_chunk=args.prefill_chunk or None,
         prefill_budget=args.prefill_budget or None,
-        prefix_cache=args.prefix_cache == "on")
+        prefix_cache=args.prefix_cache == "on",
+        shed_queue=args.shed if args.shed >= 0 else None)
 
 
 def main():
@@ -99,6 +100,21 @@ def main():
                          "and prefill only the tail (requires the paged "
                          "KV layout; implies --prefill-chunk 32 when "
                          "chunking is off)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request wall-clock deadline in seconds "
+                         "(0 = none): requests the engine cannot finish "
+                         "in time retire status='deadline' with their "
+                         "partial stream")
+    ap.add_argument("--cancel-after", dest="cancel_after", type=int,
+                    default=0,
+                    help="after N engine steps, cancel the youngest "
+                         "still-incomplete request mid-flight (0 = "
+                         "never) — frees its slot and refcounted pages "
+                         "immediately")
+    ap.add_argument("--shed", type=int, default=-1,
+                    help="bound the pending queue: after each step's "
+                         "admissions, backlog past this depth is shed "
+                         "(status='shed'); -1 = never shed")
     ap.add_argument("--priorities", default="0",
                     help="CSV of request priorities, cycled across "
                          "--requests (ranked by --sched priority)")
@@ -118,23 +134,35 @@ def main():
           f"prefill_chunk={args.prefill_chunk or 'off'}, "
           f"prefix_cache={args.prefix_cache}, fanout={args.fanout}, "
           f"max_batch={args.max_batch}, requests={args.requests})")
+    submitted = []
     for r in range(args.requests):
         prompt = jax.random.randint(
             jax.random.PRNGKey(10 + r), (args.prompt_len,), 0,
             cfg_t.vocab_size).astype(jnp.int32)
-        engine.submit(ServeRequest(prompt=prompt,
-                                   max_new_tokens=args.new_tokens,
-                                   rng=100 + r,
-                                   priority=prios[r % len(prios)]),
-                      fanout=args.fanout)
+        ids = engine.submit(ServeRequest(
+            prompt=prompt, max_new_tokens=args.new_tokens, rng=100 + r,
+            priority=prios[r % len(prios)],
+            deadline_s=args.deadline or None), fanout=args.fanout)
+        submitted.extend(ids if isinstance(ids, list) else [ids])
     results = []
+    steps = 0
     while engine.scheduler.has_work():
         for res in engine.step():
             results.append(res)
             print(f"request {res.request_id}: {res.n} tokens, "
                   f"{res.rounds} rounds, alpha={res.acceptance_rate:.2f}, "
                   f"ttft={res.ttft_s * 1e3:.0f}ms/"
-                  f"{res.ttft_rounds}r")
+                  f"{res.ttft_rounds}r"
+                  + (f" [{res.status}]" if res.status != "ok" else ""))
+        steps += 1
+        if args.cancel_after and steps == args.cancel_after:
+            done_ids = {r.request_id for r in results}
+            live = [rid for rid in submitted if rid not in done_ids]
+            if live:
+                res = engine.cancel(live[-1])
+                results.append(res)
+                print(f"request {res.request_id}: cancelled mid-flight "
+                      f"after step {steps} ({res.n} tokens kept)")
     st = engine.stats()
     ttfts = sorted(r.ttft_s for r in results)
     p50 = ttfts[len(ttfts) // 2] if ttfts else 0.0
@@ -151,6 +179,14 @@ def main():
     print(f"prefix sharing: hit_rate={st.prefix_hit_rate:.2f} "
           f"({st.prefix_hits}/{st.prefix_lookups} admissions) "
           f"prefix_hit_tokens={st.prefix_hit_tokens}")
+    counts = {}
+    for r in results:
+        counts[r.status] = counts.get(r.status, 0) + 1
+    print("failure semantics: " + " ".join(
+        f"{k}={counts.get(k, 0)}"
+        for k in ("ok", "failed", "cancelled", "deadline", "shed"))
+        + f" | retries={st.retries} deadline_misses={st.deadline_misses} "
+          f"goodput_tok_s={st.goodput:.1f}")
 
 
 if __name__ == "__main__":

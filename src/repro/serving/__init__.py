@@ -8,17 +8,28 @@ budget, and every engine step runs ONE batched draft+verify round for
 all decoding slots — so a single target forward verifies gamma drafted
 tokens for every request in flight while newly admitted prompts stream
 in beside them.
+
+Failure semantics: every request retires with a structured
+``ServeResult.status`` (``RESULT_STATUSES``) — failures, deadline
+expiries, cancellations (``ServingEngine.cancel``) and overload shedding
+are per-request results, never exceptions out of ``run()``. The
+``faults`` module is the deterministic chaos harness that exercises
+those paths in CI.
 """
-from .engine import ServingEngine
+from .engine import AdmissionImpossible, ServingEngine
+from .faults import FAULT_KINDS, FaultPlan, FaultSpec, InjectedFault
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind)
 from .prefix_cache import PrefixCache, tpp_history_key
-from .request import EngineStats, ServeRequest, ServeResult
+from .request import (RESULT_STATUSES, EngineStats, ServeRequest,
+                      ServeResult)
 from .scheduler import (FifoPolicy, GroupedPolicy, PriorityPolicy,
                         Scheduler, SchedulingPolicy, SJFPolicy, SlotState,
                         resolve_sched_policy)
 
 __all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
+           "RESULT_STATUSES", "AdmissionImpossible",
+           "FaultPlan", "FaultSpec", "InjectedFault", "FAULT_KINDS",
            "Scheduler", "SlotState", "SchedulingPolicy", "FifoPolicy",
            "PriorityPolicy", "SJFPolicy", "GroupedPolicy",
            "resolve_sched_policy", "KVCachePool", "PagedKVCachePool",

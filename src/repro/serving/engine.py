@@ -51,11 +51,20 @@ from ..models import registry
 from ..models import tpp as tppm
 from ..models import transformer as tfm
 from . import tpp_rounds
+from .faults import FaultPlan
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
                       rollback_kind, rollback_one, select_slots)
 from .prefix_cache import PrefixCache, tpp_history_key
 from .request import EngineStats, ServeRequest, ServeResult, _as_key
 from .scheduler import DECODING, PREFILLING, Scheduler, SlotState
+
+
+class AdmissionImpossible(RuntimeError):
+    """The paged pool can never hold this request (an EMPTY engine's
+    free list is too small for its lifetime reservation). Unlike a
+    transient out-of-pages condition this is not retryable: the engine
+    fails the request (``status="failed"``) instead of deferring it
+    forever."""
 
 # Jitted closures cached per (role, cfg..., static dims). Configs are
 # frozen dataclasses (hashable), so the cache survives across engine
@@ -110,7 +119,10 @@ def _ar_round_fn(cfg_t):
             lp = jax.nn.log_softmax(logits[:, -1] / temps[:, None], axis=-1)
             rks = jax.vmap(jax.random.fold_in)(keys, ridx)
             tok = jax.vmap(jax.random.categorical)(rks, lp).astype(jnp.int32)
-            return select_slots(active, pt2, pt_tree), tok
+            # per-lane health: NaN (inf logits go NaN through
+            # log_softmax; -inf alone is a legal zero-probability)
+            ok = ~jnp.any(jnp.isnan(lp), axis=-1)
+            return select_slots(active, pt2, pt_tree), tok, ok
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -204,6 +216,8 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
             # ---- acceptance tests (same streams as the batch-1 path)
             A, extra = _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps,
                                    lp_t_all)
+            ok = ~(jnp.any(jnp.isnan(lp_t_all), axis=(1, 2))
+                   | jnp.any(jnp.isnan(d_logps), axis=(1, 2)))
 
             # ---- rollback to committed prefix (mask families, in-jit)
             if kind_t == "replay":
@@ -218,7 +232,7 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
                 rolled = jax.vmap(lambda c, n: rollback_one(cfg_d, c, n))(
                     pd2, len0_d + 1 + A)
                 pd_out = select_slots(active, rolled, pd_tree)
-            return pt_out, pd_out, d_toks, A, extra
+            return pt_out, pd_out, d_toks, A, extra, ok
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -268,7 +282,9 @@ def _sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy: KernelPolicy,
 
             A, extra = _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps,
                                    lp_t_all)
-            return pg_t, pg_d, d_toks, A, extra
+            ok = ~(jnp.any(jnp.isnan(lp_t_all), axis=(1, 2))
+                   | jnp.any(jnp.isnan(d_logps), axis=(1, 2)))
+            return pg_t, pg_d, d_toks, A, extra, ok
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -312,7 +328,8 @@ def _ar_round_paged_fn(cfg_t, policy: KernelPolicy, max_kv: int):
             lp = jax.nn.log_softmax(logits[:, -1] / temps[:, None], axis=-1)
             rks = jax.vmap(jax.random.fold_in)(keys, ridx)
             tok = jax.vmap(jax.random.categorical)(rks, lp).astype(jnp.int32)
-            return pg_t, tok
+            ok = ~jnp.any(jnp.isnan(lp), axis=-1)
+            return pg_t, tok, ok
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -339,7 +356,12 @@ class ServingEngine:
                  n_pages: Optional[int] = None,
                  sched="fifo", prefill_chunk: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 max_round_retries: int = 3,
+                 retry_backoff_s: float = 0.0,
+                 shed_queue: Optional[int] = None,
+                 fixed_window: bool = False):
         """``kv_layout``: "paged" (block-table pool + spec-verify Pallas
         attention — the production hot path), "dense" (per-slot dense
         caches + vmapped extend), or "auto" (paged whenever the families
@@ -377,7 +399,30 @@ class ServingEngine:
         the staging path. Cache-hit admissions are token-bitwise equal
         to cold ones: adopted pages hold exactly the K/V the skipped
         prefill would have written, and every sampled draw still comes
-        from ``fold_in(request.rng, round_idx)``."""
+        from ``fold_in(request.rng, round_idx)``.
+
+        Failure semantics (see ``serving/faults.py`` for the chaos
+        harness that exercises them):
+        ``faults``: a ``FaultPlan`` to inject deterministically.
+        ``max_round_retries``: bounded per-request retry budget — a
+        failed round/prefill/admission is rolled back (block-table
+        truncation; replay-family checkpoints) and re-run next step
+        with the SAME ``round_idx``, so a retried round commits bitwise
+        identical tokens; past the budget the request retires
+        ``status="failed"``. ``retry_backoff_s``: base of the
+        exponential (2**n, capped) backoff sleep between consecutive
+        failed steps (0 = none — the deterministic-test default).
+        ``shed_queue``: overload control — after each step's
+        admissions the still-pending queue is trimmed to this depth,
+        shedding the policy-ranked tail (``status="shed"``); None =
+        never shed.
+        ``fixed_window``: pin the sd draft window to the constructor's
+        ``gamma`` (requires a static draft policy) and reserve
+        prompt + budget + gamma positions per request, exactly like the
+        TPP domain. Removes the one batch-composition-dependent knob
+        (the budget/page-pressure gamma clamp), making every request's
+        token stream bitwise independent of WHO shares its rounds —
+        the survivor-bitwise contract the chaos tests pin."""
         if method not in ("ar", "sd"):
             raise ValueError(f"method must be 'ar' or 'sd', got {method!r}")
         if method == "sd" and (cfg_d is None or params_d is None):
@@ -500,6 +545,27 @@ class ServingEngine:
         # positions is what guarantees the transient window always fits
         self.tpp_gamma = gamma
         self._tpp_margin = gamma if method == "sd" else 0
+        if max_round_retries < 0:
+            raise ValueError("max_round_retries must be >= 0")
+        if retry_backoff_s < 0:
+            raise ValueError("retry_backoff_s must be >= 0")
+        if shed_queue is not None and shed_queue < 0:
+            raise ValueError("shed_queue must be >= 0 (or None)")
+        self.faults = faults
+        self.max_round_retries = max_round_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.shed_queue = shed_queue
+        self.fixed_window = bool(fixed_window)
+        self._margin = 0
+        if self.fixed_window and self.domain == "token" and method == "sd":
+            if not getattr(self.draft_policy, "is_static", False):
+                raise ValueError(
+                    "fixed_window pins the draft window, so it needs a "
+                    "static draft policy (e.g. 'fixed'); adaptive "
+                    "policies resize by batch history")
+            self._margin = gamma
+        self._retries: Dict[int, int] = {}   # request_id -> failed steps
+        self._round_fail_streak = 0          # consecutive failed steps
         self._stats = EngineStats()
         self._results: List[ServeResult] = []
 
@@ -541,6 +607,10 @@ class ServingEngine:
             self.pool_d.reset()
         if self.draft_policy is not None:
             self._policy_state = self.draft_policy.init_state()
+        self._retries = {}
+        self._round_fail_streak = 0
+        if self.faults is not None:
+            self.faults.reset()
         self._stats = EngineStats()
         self._results = []
 
@@ -548,7 +618,9 @@ class ServingEngine:
     def submit(self, req: ServeRequest = None, *, prompt=None,
                max_new_tokens: int = 32, temperature: float = 1.0,
                rng=0, extra=None, priority: int = 0, fanout: int = 1,
-               fanout_offset: int = 0, times=None, t_end=None):
+               fanout_offset: int = 0, times=None, t_end=None,
+               deadline_s: Optional[float] = None,
+               max_wall_rounds: Optional[int] = None):
         """Queue a request (either a ``ServeRequest`` or its fields).
 
         ``fanout=K`` queues K scenario rollouts of the request: one
@@ -575,7 +647,9 @@ class ServingEngine:
         if req is None:
             req = ServeRequest(prompt=prompt, max_new_tokens=max_new_tokens,
                                temperature=temperature, rng=rng, extra=extra,
-                               priority=priority, times=times, t_end=t_end)
+                               priority=priority, times=times, t_end=t_end,
+                               deadline_s=deadline_s,
+                               max_wall_rounds=max_wall_rounds)
         if req.is_tpp != (self.domain == "tpp"):
             raise ValueError(
                 "request/engine domain mismatch: TPP engines (built from "
@@ -588,6 +662,14 @@ class ServingEngine:
                 f"max events ({req.max_new_tokens}) + speculative window "
                 f"({self._tpp_margin}) exceeds the engine's max_len "
                 f"({self.max_len})")
+        if (not req.is_tpp and self._margin
+                and req.prompt_len + req.max_new_tokens + self._margin
+                > self.max_len):
+            raise ValueError(
+                f"request {req.request_id}: prompt ({req.prompt_len}) + "
+                f"max_new_tokens ({req.max_new_tokens}) + fixed "
+                f"speculative window ({self._margin}) exceeds the "
+                f"engine's max_len ({self.max_len})")
         if fanout < 1:
             raise ValueError("fanout must be >= 1")
         if fanout_offset < 0:
@@ -600,7 +682,8 @@ class ServingEngine:
             temperature=req.temperature,
             rng=jax.random.fold_in(req.rng, fanout_offset + k),
             extra=req.extra, priority=req.priority, prefix_group=gid,
-            times=req.times, t_end=req.t_end))
+            times=req.times, t_end=req.t_end, deadline_s=req.deadline_s,
+            max_wall_rounds=req.max_wall_rounds))
             for k in range(fanout)]
 
     def step(self) -> List[ServeResult]:
@@ -611,46 +694,232 @@ class ServingEngine:
         ONE batched draft+verify (or decode) round for the DECODING
         slots. Slots that finish prefilling inside this step join the
         same step's decode round — with no budget the schedule is
-        exactly the staging engine's."""
+        exactly the staging engine's.
+
+        A failed phase never raises out of here: admission, prefill and
+        the decode round each run under the retry wrapper, which rolls
+        the failed phase back (the slots re-run it NEXT step with the
+        same ``round_idx`` streams — bitwise the un-failed round) and
+        retires requests whose retry budget is spent as
+        ``status="failed"``. The deadline sweep runs first (a doomed
+        request costs no device work in the step that expires it); the
+        shed sweep runs right after admission, trimming only the
+        backlog the slots could not absorb."""
         t0 = time.perf_counter()
-        self.scheduler.tick()
+        step_idx = self.scheduler.tick()
         done: List[ServeResult] = []
-        blocked = False
-        for slot, state in self.scheduler.admit():
-            if blocked:
-                # admission-order under page pressure: once one
-                # admission defers, later placements wait behind it
-                self.scheduler.defer(slot)
-                continue
-            blocked = not self._admit(slot, state)
-        if self.prefill_chunk is not None:
-            (self._tpp_prefill_step if self.domain == "tpp"
-             else self._prefill_step)()
-        # requests whose whole budget was the prefill token
-        alive: List[Tuple[int, SlotState]] = []
-        for slot, state in self.scheduler.active():
-            if state.phase == PREFILLING:
-                continue        # still consuming chunk budget
-            if state.done:
-                done.append(self._retire(slot))
-            else:
-                alive.append((slot, state))
-        if alive:
-            if self.domain == "tpp":
-                (self._tpp_sd_step if self.method == "sd"
-                 else self._tpp_ar_step)(alive)
-            elif self.method == "sd":
-                (self._sd_step_paged if self.kv_layout == "paged"
-                 else self._sd_step)(alive)
-            else:
-                (self._ar_step_paged if self.kv_layout == "paged"
-                 else self._ar_step)(alive)
-            for slot, state in alive:
+        if self.faults is not None:
+            self.faults.begin_step(self, step_idx)
+        try:
+            done.extend(self._sweep_lifecycle())
+            blocked = False
+            for slot, state in self.scheduler.admit():
+                if blocked:
+                    # admission-order under page pressure: once one
+                    # admission defers, later placements wait behind it
+                    self.scheduler.defer(slot)
+                    continue
+                try:
+                    blocked = not self._admit(slot, state)
+                except Exception as e:
+                    blocked = True
+                    done.extend(self._on_admit_failure(slot, state, e))
+            done.extend(self._shed_sweep())
+            if self.prefill_chunk is not None:
+                pref = [(s, st) for s, st in self.scheduler.active()
+                        if st.phase == PREFILLING]
+                if pref:
+                    try:
+                        (self._tpp_prefill_step if self.domain == "tpp"
+                         else self._prefill_step)()
+                    except Exception as e:
+                        done.extend(self._on_phase_failure(
+                            pref, e, phase="prefill"))
+                    else:
+                        for _, st in pref:
+                            self._retries.pop(st.request.request_id, None)
+            # requests whose whole budget was the prefill token
+            alive: List[Tuple[int, SlotState]] = []
+            for slot, state in self.scheduler.active():
+                if state.phase == PREFILLING:
+                    continue        # still consuming chunk budget
                 if state.done:
                     done.append(self._retire(slot))
+                else:
+                    alive.append((slot, state))
+            if alive:
+                try:
+                    quarantined = self._dispatch_round(alive)
+                except Exception as e:
+                    done.extend(self._on_phase_failure(
+                        alive, e, phase="round"))
+                else:
+                    done.extend(quarantined)
+                    self._round_fail_streak = 0
+                    for _, st in alive:
+                        self._retries.pop(st.request.request_id, None)
+                    for slot, state in alive:
+                        # quarantined slots are already gone; only
+                        # still-seated states retire here
+                        if (self.scheduler.slots[slot] is state
+                                and state.done):
+                            done.append(self._retire(slot))
+        finally:
+            if self.faults is not None:
+                self.faults.end_step(self, step_idx)
         self._stats.wall_s += time.perf_counter() - t0
         self._results.extend(done)
         return done
+
+    def _dispatch_round(self, alive) -> List[ServeResult]:
+        """Route the step's decode round; returns the round's
+        quarantined (non-finite-lane) retirements."""
+        if self.domain == "tpp":
+            return (self._tpp_sd_step if self.method == "sd"
+                    else self._tpp_ar_step)(alive)
+        if self.method == "sd":
+            return (self._sd_step_paged if self.kv_layout == "paged"
+                    else self._sd_step)(alive)
+        return (self._ar_step_paged if self.kv_layout == "paged"
+                else self._ar_step)(alive)
+
+    def _fault_barrier(self) -> None:
+        """Chaos hook, called after a round's device work synchronized
+        and BEFORE any host commit: a ``step_error`` fault raises here,
+        so the retry re-runs the round with the same ``round_idx``
+        streams and commits bitwise what the un-failed round would."""
+        if self.faults is not None:
+            self.faults.maybe_raise_step_error(self.scheduler.step_idx,
+                                               self)
+
+    def _sweep_lifecycle(self) -> List[ServeResult]:
+        """Deadline expiry (queued AND active)."""
+        out: List[ServeResult] = []
+        now = time.perf_counter()
+        for e in self.scheduler.take_expired(now):
+            self._stats.deadline_misses += 1
+            out.append(self._queue_result(e.request, "deadline"))
+        for slot, st in self.scheduler.active():
+            req = st.request
+            expired = (req.deadline_s is not None
+                       and now - st.submit_t > req.deadline_s)
+            if not expired and req.max_wall_rounds is not None:
+                expired = (self.scheduler.step_idx - st.submit_step
+                           > req.max_wall_rounds)
+            if expired:
+                self._stats.deadline_misses += 1
+                out.append(self._retire(slot, status="deadline"))
+        return out
+
+    def _shed_sweep(self) -> List[ServeResult]:
+        """Overload control, run AFTER this step's admissions: whatever
+        the slots could not absorb is the backlog, and entries past
+        ``shed_queue`` of it (lowest scheduling priority first) are
+        dropped as ``status="shed"`` — so shed_queue=0 means "serve
+        what fits, queue nothing"."""
+        out: List[ServeResult] = []
+        if self.shed_queue is not None:
+            for e in self.scheduler.shed_over(self.shed_queue):
+                self._stats.shed += 1
+                out.append(self._queue_result(e.request, "shed"))
+        return out
+
+    def _queue_result(self, req: ServeRequest, status: str,
+                      error: Optional[str] = None) -> ServeResult:
+        """A terminal result for a request that never held a slot."""
+        return ServeResult(
+            request_id=req.request_id, tokens=np.zeros((0,), np.int32),
+            prompt_len=req.prompt_len, drafted=0, accepted=0, rounds=0,
+            times=np.zeros((0,), np.float32) if req.is_tpp else None,
+            status=status, error=error)
+
+    def _on_admit_failure(self, slot: int, state: SlotState,
+                          exc: Exception) -> List[ServeResult]:
+        """An admission raised mid-backing (page exhaustion inside the
+        staging prefill, an injected fault, an impossible fit): release
+        whatever the slot already holds, then retry-or-fail."""
+        if self.kv_layout == "paged":
+            self.pool_t.free_slot(slot)
+            if self.pool_d is not None:
+                self.pool_d.free_slot(slot)
+        req = state.request
+        src = (self._fork_sources.get(req.prefix_group)
+               if req.prefix_group is not None else None)
+        if src is not None and src["state"] is state:
+            del self._fork_sources[req.prefix_group]
+        if isinstance(exc, AdmissionImpossible):
+            return [self._retire(slot, status="failed", error=str(exc))]
+        self._round_fail_streak += 1
+        rid = req.request_id
+        n = self._retries.get(rid, 0) + 1
+        if n > self.max_round_retries:
+            self._retries.pop(rid, None)
+            return [self._retire(
+                slot, status="failed",
+                error=f"admission failed after {n - 1} retries: {exc}")]
+        self._retries[rid] = n
+        self._stats.retries += 1
+        self.scheduler.defer(slot)
+        return []
+
+    def _on_phase_failure(self, items, exc: Exception, *,
+                          phase: str) -> List[ServeResult]:
+        """A batched prefill/decode phase raised: roll every rider back
+        to its last committed length (block-table truncation — the
+        paged pools' ``lens`` only ever advance at host commit, AFTER
+        the device sync, so truncating to ``lens`` releases exactly the
+        failed round's page growth), then retry-or-fail each request.
+        Surviving retries re-run next step with unchanged host state —
+        same ``round_idx``, hence bitwise-identical commits."""
+        out: List[ServeResult] = []
+        if self.kv_layout == "paged":
+            pools = [self.pool_t] + ([self.pool_d]
+                                     if self.pool_d is not None else [])
+            for slot, _ in items:
+                for pool in pools:
+                    pool.truncate(slot, int(pool.lens[slot]))
+        self._round_fail_streak += 1
+        if self.retry_backoff_s > 0:
+            time.sleep(self.retry_backoff_s
+                       * (2.0 ** min(self._round_fail_streak - 1, 4)))
+        for slot, st in items:
+            rid = st.request.request_id
+            n = self._retries.get(rid, 0) + 1
+            if n > self.max_round_retries:
+                self._retries.pop(rid, None)
+                out.append(self._retire(
+                    slot, status="failed",
+                    error=f"{phase} failed after {n - 1} retries: {exc}"))
+            else:
+                self._retries[rid] = n
+                self._stats.retries += 1
+        return out
+
+    def cancel(self, request_id: int) -> Optional[ServeResult]:
+        """Cancel a queued or in-flight request.
+
+        Queued: the entry leaves the pending list untouched-by-silicon.
+        In-flight: the slot retires mid-stream — PREFILLING or DECODING,
+        fork-group anchor or prefix-cache adoptee alike — returning its
+        (possibly shared, refcounted) pages to the pool and keeping the
+        tokens it already committed. Returns the terminal
+        ``status="cancelled"`` result (also appended to the engine's
+        result log), or None when the id is unknown/finished. Never
+        perturbs any OTHER request's stream — the survivor-bitwise
+        contract."""
+        e = self.scheduler.cancel_pending(request_id)
+        if e is not None:
+            self._stats.cancellations += 1
+            res = self._queue_result(e.request, "cancelled")
+            self._results.append(res)
+            return res
+        slot = self.scheduler.find_slot(request_id)
+        if slot is None:
+            return None
+        self._stats.cancellations += 1
+        res = self._retire(slot, status="cancelled")
+        self._results.append(res)
+        return res
 
     def run(self, max_steps: Optional[int] = None) -> List[ServeResult]:
         """Step until the queue and every slot are drained."""
@@ -667,6 +936,23 @@ class ServingEngine:
         return self._stats
 
     # -- internals ---------------------------------------------------------
+    def _admit_impossible(self, total: int) -> None:
+        """Raise when a reservation that does not fit NOW can never fit:
+        no active slot will ever free pages. Suppressed while a
+        ``page_exhaustion`` fault holds the free list — that shortage
+        is transient by construction (the pages return at step end), so
+        the admission defers instead. Raised BEFORE the caller defers,
+        so the slot is still seated and ``_on_admit_failure`` can
+        retire it cleanly."""
+        if any(self.scheduler.active()):
+            return
+        if (self.faults is not None
+                and self.faults.exhaustion_active(self.scheduler.step_idx)):
+            return
+        raise AdmissionImpossible(
+            "paged KV pool cannot hold a single request "
+            f"(need {total} positions); raise n_pages")
+
     def _admit(self, slot: int, state: SlotState) -> bool:
         """Back the slot with cache memory and start (or finish) its
         prefill. Returns False when a paged pool cannot back the
@@ -688,7 +974,10 @@ class ServingEngine:
             prefix = int(req.extra["vision_embeds"].shape[1])
         hit, runs = 0, None
         if self.kv_layout == "paged":
-            total = prefix + req.prompt_len + req.max_new_tokens
+            # fixed_window reserves the pinned speculative window too
+            # (zero unless fixed_window — the TPP path has its own)
+            total = (prefix + req.prompt_len + req.max_new_tokens
+                     + self._margin)
             # -- scenario fan-out: a group sibling forks the source's
             # prompt pages instead of prefilling its own copy
             src = self._fork_source_for(req)
@@ -717,11 +1006,8 @@ class ServingEngine:
             if ok and self.method == "sd":
                 ok = self.pool_d.can_admit(total, adopted_blocks=adopted)
             if not ok:
+                self._admit_impossible(total)
                 self.scheduler.defer(slot)
-                if not any(self.scheduler.active()):
-                    raise RuntimeError(
-                        "paged KV pool cannot hold a single request "
-                        f"(need {total} positions); raise n_pages")
                 return False
             self.pool_t.reserve(slot, total)
             if self.method == "sd":
@@ -830,11 +1116,8 @@ class ServingEngine:
             ok = self.pool_d.can_admit(total, adopted_blocks=adopted,
                                        cow_pages=cow)
         if not ok:
+            self._admit_impossible(total)
             self.scheduler.defer(slot)
-            if not any(self.scheduler.active()):
-                raise RuntimeError(
-                    "paged KV pool cannot hold a single request "
-                    f"(need {total} positions); raise n_pages")
             return False
         self.pool_t.reserve(slot, total)
         self.pool_t.fork(src["slot"], slot, plen)
@@ -923,6 +1206,7 @@ class ServingEngine:
             self.pool_t.pages = pg_t
             if sd:
                 self.pool_d.pages = pg_d
+            self._fault_barrier()
             for slot, st, n in work:
                 st.prefilled += n
                 self.pool_t.lens[slot] = st.prefilled    # commit the chunk
@@ -987,11 +1271,8 @@ class ServingEngine:
         if ok and self.method == "sd":
             ok = self.pool_d.can_admit(total, adopted_blocks=adopted)
         if not ok:
+            self._admit_impossible(total)
             self.scheduler.defer(slot)
-            if not any(self.scheduler.active()):
-                raise RuntimeError(
-                    "paged KV pool cannot hold a single request "
-                    f"(need {total} positions); raise n_pages")
             return False
         self.pool_t.reserve(slot, total)
         if self.method == "sd":
@@ -1086,6 +1367,7 @@ class ServingEngine:
             self.pool_t.pages = pg_t
             if sd:
                 self.pool_d.pages = pg_d
+            self._fault_barrier()
             for slot, st, n in work:
                 st.prefilled += n
                 self.pool_t.lens[slot] = st.prefilled
@@ -1111,10 +1393,18 @@ class ServingEngine:
             k_pend[slot] = st.pending
             ridx[slot] = st.round_idx
             keys[slot] = _as_key(st.request.rng)
+        if self.faults is not None:
+            bad = self.faults.nan_lane_slot(self.scheduler.step_idx)
+            if bad is not None and any(s == bad for s, _ in alive):
+                # poison ONE lane's pending event time; the round's
+                # per-lane ok flag quarantines exactly that request
+                t_pend[bad] = np.nan
+                self.faults.note_nan_injected(self.scheduler.step_idx,
+                                              self)
         return (jnp.asarray(t_pend), jnp.asarray(k_pend), jnp.stack(keys),
                 jnp.asarray(ridx))
 
-    def _tpp_sd_step(self, alive) -> None:
+    def _tpp_sd_step(self, alive) -> List[ServeResult]:
         """One paged TPP propose-verify round (fixed window — see the
         constructor note). Commit is append + block-table truncation,
         exactly like the token path, plus the float event-time lane."""
@@ -1130,16 +1420,19 @@ class ServingEngine:
         t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
         fn = tpp_rounds.tpp_sd_round_paged_fn(
             self.cfg_t, self.cfg_d, gamma, self.policy, self.max_len)
-        pg_t, pg_d, d_t, d_k, A, new_t, new_k = fn(
+        pg_t, pg_d, d_t, d_k, A, new_t, new_k, okl = fn(
             self.params_t, self.params_d, self.pool_t.pages,
             self.pool_d.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), self.pool_d.device_tables(),
             self.pool_d.device_lens(), t_pend, k_pend, keys, ridx)
         self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
         d_t, d_k, A = np.asarray(d_t), np.asarray(d_k), np.asarray(A)
-        new_t, new_k = np.asarray(new_t), np.asarray(new_k)
+        new_t, new_k, okl = (np.asarray(new_t), np.asarray(new_k),
+                             np.asarray(okl))
+        self._fault_barrier()
+        good = [(s, st) for s, st in alive if bool(okl[s])]
         delivered = 0
-        for slot, st in alive:
+        for slot, st in good:
             a = int(A[slot])
             budget = st.request.max_new_tokens
             before = min(len(st.out), budget)
@@ -1159,13 +1452,14 @@ class ServingEngine:
             self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
             self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
         self._stats.tokens += delivered
-        self._stats.drafted += gamma * len(alive)
-        self._stats.accepted += int(sum(int(A[s]) for s, _ in alive))
+        self._stats.drafted += gamma * len(good)
+        self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
         self._stats.target_forwards += 1
         self._stats.draft_forwards += gamma
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
-    def _tpp_ar_step(self, alive) -> None:
+    def _tpp_ar_step(self, alive) -> List[ServeResult]:
         """One committed event per alive slot through the paged pool."""
         len0 = {}
         for slot, _ in alive:
@@ -1175,12 +1469,15 @@ class ServingEngine:
         t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
         fn = tpp_rounds.tpp_ar_round_paged_fn(self.cfg_t, self.policy,
                                               self.max_len)
-        pg_t, new_t, new_k = fn(
+        pg_t, new_t, new_k, okl = fn(
             self.params_t, self.pool_t.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), t_pend, k_pend, keys, ridx)
         self.pool_t.pages = pg_t
-        new_t, new_k = np.asarray(new_t), np.asarray(new_k)
-        for slot, st in alive:
+        new_t, new_k, okl = (np.asarray(new_t), np.asarray(new_k),
+                             np.asarray(okl))
+        self._fault_barrier()
+        good = [(s, st) for s, st in alive if bool(okl[s])]
+        for slot, st in good:
             self.pool_t.truncate(slot, len0[slot] + 1)
             st.out.append(int(new_k[slot]))
             st.out_times.append(float(new_t[slot]))
@@ -1188,9 +1485,10 @@ class ServingEngine:
             st.t_pend = float(new_t[slot])
             st.round_idx += 1
             st.rounds += 1
-        self._stats.tokens += len(alive)
+        self._stats.tokens += len(good)
         self._stats.target_forwards += 1
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
     def fanout_headroom(self, prompt_len: int, max_new_tokens: int) -> int:
         """How many members of ONE fan-out group over a shared
@@ -1206,7 +1504,7 @@ class ServingEngine:
         if self.kv_layout != "paged":
             return self.max_batch
         total = prompt_len + max_new_tokens + (
-            self._tpp_margin if self.domain == "tpp" else 0)
+            self._tpp_margin if self.domain == "tpp" else self._margin)
         k = self.max_batch
         pools = [self.pool_t] + ([self.pool_d]
                                  if self.pool_d is not None else [])
@@ -1246,6 +1544,15 @@ class ServingEngine:
             temps[slot] = st.request.temperature
             active[slot] = True
             keys[slot] = _as_key(st.request.rng)
+        if self.faults is not None:
+            bad = self.faults.nan_lane_slot(self.scheduler.step_idx)
+            if bad is not None and active[bad]:
+                # poison ONE lane's temperature: its log-softmax goes
+                # NaN; the per-lane math (vmapped rows, softmax over the
+                # vocab axis) never lets it touch another lane
+                temps[bad] = np.nan
+                self.faults.note_nan_injected(self.scheduler.step_idx,
+                                              self)
         out = (jnp.asarray(pending), jnp.stack(keys), jnp.asarray(ridx),
                jnp.asarray(temps), jnp.asarray(active))
         if self.rules is None:
@@ -1263,8 +1570,16 @@ class ServingEngine:
         delivers at most gamma+1 tokens, so drafting more is pure waste
         — and (b) a non-ring KV buffer's capacity: the models' slot
         indexing wraps modulo the buffer, so writing beyond it would
-        silently overwrite the prompt's entries."""
+        silently overwrite the prompt's entries.
+
+        With ``fixed_window`` the policy window is returned untouched:
+        submit-time validation plus the per-request margin reservation
+        guarantee the pinned window always fits (both layouts), and
+        skipping the batch-dependent clamp is exactly what makes every
+        stream independent of batch composition."""
         gamma = self.draft_policy.gamma(self._policy_state)
+        if self.fixed_window:
+            return gamma
         max_remaining = max(st.request.max_new_tokens - len(st.out)
                             for _, st in alive)
         gamma = min(gamma, max(1, max_remaining - 1))
@@ -1301,19 +1616,21 @@ class ServingEngine:
                 gamma -= 1
         return gamma
 
-    def _sd_step(self, alive) -> None:
+    def _sd_step(self, alive) -> List[ServeResult]:
         gamma = self._clamped_gamma(alive)
         pending, keys, ridx, temps, active = self._round_inputs(alive)
         fn = _sd_round_fn(self.cfg_t, self.cfg_d, gamma)
         pt_ckpt, pd_ckpt = self.pool_t.tree, self.pool_d.tree
-        pt_out, pd_out, d_toks, A, extra = fn(
+        pt_out, pd_out, d_toks, A, extra, okl = fn(
             self.params_t, self.params_d, pt_ckpt, pd_ckpt, pending, keys,
             ridx, temps, active)
-        d_toks, A, extra = (np.asarray(d_toks), np.asarray(A),
-                            np.asarray(extra))
+        d_toks, A, extra, okl = (np.asarray(d_toks), np.asarray(A),
+                                 np.asarray(extra), np.asarray(okl))
+        self._fault_barrier()
+        good = [(s, st) for s, st in alive if bool(okl[s])]
         commits = {}
         delivered = 0
-        for slot, st in alive:
+        for slot, st in good:
             a = int(A[slot])
             toks = [int(st.pending)] + [int(t) for t in d_toks[slot, :a]]
             commits[slot] = (toks, a == gamma)
@@ -1327,21 +1644,23 @@ class ServingEngine:
             if len(st.out) > st.request.max_new_tokens:
                 del st.out[st.request.max_new_tokens:]
             delivered += len(st.out) - before
+        # quarantined lanes never enter `commits`, so the replay
+        # families skip their re-extend and the mask families' rolled
+        # slots are simply never read again (admission overwrites)
         self.pool_t.tree = self._rolled_pool(
             self.cfg_t, self.params_t, pt_ckpt, pt_out, commits)
         self.pool_d.tree = self._rolled_pool(
             self.cfg_d, self.params_d, pd_ckpt, pd_out, commits)
-        n_active = len(alive)
-        acc_sum = int(sum(int(A[s]) for s, _ in alive))
+        acc_sum = int(sum(int(A[s]) for s, _ in good))
         # one policy update per request, as in single-request serving —
         # a batch-aggregate (gamma*n, sum A) would only ever grow the
         # window when EVERY slot fully accepts, collapsing gamma under
         # real mixed traffic
-        for slot, _ in alive:
+        for slot, _ in good:
             self._policy_state = self.draft_policy.update(
                 self._policy_state, gamma, int(A[slot]))
         self._stats.tokens += delivered
-        self._stats.drafted += gamma * n_active
+        self._stats.drafted += gamma * len(good)
         self._stats.accepted += acc_sum
         self._stats.target_forwards += 1
         # gamma batched draft forwards produce the round's gamma draft
@@ -1351,8 +1670,22 @@ class ServingEngine:
         # single-slot engine draft_forwards == drafted exactly)
         self._stats.draft_forwards += gamma
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
-    def _sd_step_paged(self, alive) -> None:
+    def _quarantine(self, alive, okl) -> List[ServeResult]:
+        """Retire every lane whose round health flag came back False
+        (non-finite logits): ONE structured per-request failure, while
+        the lanes that shared the batch commit untouched — the per-lane
+        quarantine of the failure-semantics contract."""
+        out: List[ServeResult] = []
+        for slot, st in alive:
+            if not bool(okl[slot]):
+                out.append(self._retire(
+                    slot, status="failed",
+                    error=f"non-finite logits in round {st.round_idx}"))
+        return out
+
+    def _sd_step_paged(self, alive) -> List[ServeResult]:
         """One paged propose-verify round: grow block tables for the
         window's writes, run the jitted paged round (spec-verify kernel
         attention), then commit/rollback by block-table truncation —
@@ -1372,16 +1705,18 @@ class ServingEngine:
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
         fn = _sd_round_paged_fn(self.cfg_t, self.cfg_d, gamma, self.policy,
                                 self.max_len)
-        pg_t, pg_d, d_toks, A, extra = fn(
+        pg_t, pg_d, d_toks, A, extra, okl = fn(
             self.params_t, self.params_d, self.pool_t.pages,
             self.pool_d.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), self.pool_d.device_tables(),
             self.pool_d.device_lens(), pending, keys, ridx, temps)
         self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
-        d_toks, A, extra = (np.asarray(d_toks), np.asarray(A),
-                            np.asarray(extra))
+        d_toks, A, extra, okl = (np.asarray(d_toks), np.asarray(A),
+                                 np.asarray(extra), np.asarray(okl))
+        self._fault_barrier()
+        good = [(s, st) for s, st in alive if bool(okl[s])]
         delivered = 0
-        for slot, st in alive:
+        for slot, st in good:
             a = int(A[slot])
             before = len(st.out)
             st.out.extend([int(t) for t in d_toks[slot, :a]]
@@ -1399,37 +1734,41 @@ class ServingEngine:
             # invisible until the next round overwrites it
             self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
             self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
-        for slot, _ in alive:
+        for slot, _ in good:
             self._policy_state = self.draft_policy.update(
                 self._policy_state, gamma, int(A[slot]))
         self._stats.tokens += delivered
-        self._stats.drafted += gamma * len(alive)
-        self._stats.accepted += int(sum(int(A[s]) for s, _ in alive))
+        self._stats.drafted += gamma * len(good)
+        self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
         self._stats.target_forwards += 1
         self._stats.draft_forwards += gamma
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
-    def _ar_step_paged(self, alive) -> None:
+    def _ar_step_paged(self, alive) -> List[ServeResult]:
         for slot, _ in alive:
             self.pool_t.cow_for_append(slot)
             self.pool_t.ensure_blocks(slot, int(self.pool_t.lens[slot]) + 1)
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
         fn = _ar_round_paged_fn(self.cfg_t, self.policy, self.max_len)
-        pg_t, tok = fn(self.params_t, self.pool_t.pages,
-                       self.pool_t.device_tables(),
-                       self.pool_t.device_lens(), pending, keys, ridx,
-                       temps)
+        pg_t, tok, okl = fn(self.params_t, self.pool_t.pages,
+                            self.pool_t.device_tables(),
+                            self.pool_t.device_lens(), pending, keys, ridx,
+                            temps)
         self.pool_t.pages = pg_t
-        tok = np.asarray(tok)
-        for slot, st in alive:
+        tok, okl = np.asarray(tok), np.asarray(okl)
+        self._fault_barrier()
+        good = [(s, st) for s, st in alive if bool(okl[s])]
+        for slot, st in good:
             self.pool_t.truncate(slot, int(self.pool_t.lens[slot]) + 1)
             st.out.append(int(tok[slot]))
             st.pending = int(tok[slot])
             st.round_idx += 1
             st.rounds += 1
-        self._stats.tokens += len(alive)
+        self._stats.tokens += len(good)
         self._stats.target_forwards += 1
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
     def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
         """Final pool for this round. Mask families were rolled back
@@ -1450,23 +1789,33 @@ class ServingEngine:
             tree = jax.tree.map(lambda p, c: p.at[slot].set(c), tree, cache)
         return tree
 
-    def _ar_step(self, alive) -> None:
+    def _ar_step(self, alive) -> List[ServeResult]:
         pending, keys, ridx, temps, active = self._round_inputs(alive)
         fn = _ar_round_fn(self.cfg_t)
-        pt_out, tok = fn(self.params_t, self.pool_t.tree, pending, keys,
-                         ridx, temps, active)
-        tok = np.asarray(tok)
+        pt_out, tok, okl = fn(self.params_t, self.pool_t.tree, pending,
+                              keys, ridx, temps, active)
+        tok, okl = np.asarray(tok), np.asarray(okl)
+        self._fault_barrier()
         self.pool_t.tree = pt_out
-        for slot, st in alive:
+        good = [(s, st) for s, st in alive if bool(okl[s])]
+        for slot, st in good:
             st.out.append(int(tok[slot]))
             st.pending = int(tok[slot])
             st.round_idx += 1
             st.rounds += 1
-        self._stats.tokens += len(alive)
+        self._stats.tokens += len(good)
         self._stats.target_forwards += 1
         self._note_group_round(alive)
+        return self._quarantine(alive, okl)
 
-    def _retire(self, slot: int) -> ServeResult:
+    def _retire(self, slot: int, status: str = "ok",
+                error: Optional[str] = None) -> ServeResult:
+        """Vacate ``slot`` and build its terminal result. Every status
+        frees the same resources (slot, refcounted pages, fork-source
+        anchor role); only an "ok" retirement donates prompt pages to
+        the prefix cache or counts toward completions/goodput — a
+        failed lane's pages may hold poisoned K/V, and a cancelled or
+        expired request's prefill may be partial."""
         st = self.scheduler.retire(slot)
         req = st.request
         if self.kv_layout == "paged":
@@ -1474,7 +1823,8 @@ class ServingEngine:
                    if req.prefix_group is not None else None)
             if src is not None and src["state"] is st:
                 del self._fork_sources[req.prefix_group]
-            if self.prefix_cache is not None and not req.extra:
+            if (status == "ok" and self.prefix_cache is not None
+                    and not req.extra):
                 # donate the FULL prompt pages into the radix cache:
                 # full prompt pages are provably never rewritten or
                 # COWed (writes only land past the prompt), so their
@@ -1498,9 +1848,18 @@ class ServingEngine:
             self.pool_t.free_slot(slot)
             if self.pool_d is not None:
                 self.pool_d.free_slot(slot)
-        self._stats.requests_completed += 1
-        if req.is_tpp or req.prefix_group is not None:
-            self._stats.rollouts += 1
+        late = (req.deadline_s is not None
+                and time.perf_counter() - st.submit_t > req.deadline_s)
+        if status == "ok":
+            self._stats.requests_completed += 1
+            if req.is_tpp or req.prefix_group is not None:
+                self._stats.rollouts += 1
+            if late:
+                # finished, but past its deadline: still "ok" (the
+                # tokens are valid) yet excluded from goodput
+                self._stats.deadline_misses += 1
+        elif status == "failed":
+            self._stats.failed += 1
         if req.is_tpp:
             # trim to the budget, then to the horizon: event times are
             # strictly increasing, so `t <= t_end` keeps a prefix (the
@@ -1512,16 +1871,22 @@ class ServingEngine:
                 keep = int(np.searchsorted(etimes, np.float32(req.t_end),
                                            side="right"))
                 marks, etimes = marks[:keep], etimes[:keep]
-            return ServeResult(
+            res = ServeResult(
                 request_id=req.request_id, tokens=marks,
                 prompt_len=req.prompt_len,
                 drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
                 ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s,
-                prefix_hit_tokens=st.prefix_hit_tokens, times=etimes)
-        return ServeResult(
-            request_id=st.request.request_id,
-            tokens=np.asarray(st.out[:st.request.max_new_tokens], np.int32),
-            prompt_len=st.request.prompt_len,
-            drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
-            ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s,
-            prefix_hit_tokens=st.prefix_hit_tokens)
+                prefix_hit_tokens=st.prefix_hit_tokens, times=etimes,
+                status=status, error=error)
+        else:
+            res = ServeResult(
+                request_id=req.request_id,
+                tokens=np.asarray(st.out[:req.max_new_tokens], np.int32),
+                prompt_len=req.prompt_len,
+                drafted=st.drafted, accepted=st.accepted, rounds=st.rounds,
+                ttft_rounds=st.ttft_rounds, ttft_s=st.ttft_s,
+                prefix_hit_tokens=st.prefix_hit_tokens,
+                status=status, error=error)
+        if status == "ok" and not late:
+            self._stats.goodput_tokens += res.n
+        return res

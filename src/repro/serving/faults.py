@@ -1,0 +1,164 @@
+"""Deterministic fault injection for the serving engine (chaos harness).
+
+A ``FaultPlan`` is a list of ``FaultSpec``s the engine consults at fixed
+points of every ``step()``; faults fire by the scheduler's step index,
+never by wall clock or randomness, so a chaos run is exactly
+reproducible — CI asserts on it like on any other run. Four kinds:
+
+  ``step_error``       raise ``InjectedFault`` out of the device round
+                       AFTER the forward synchronizes but BEFORE any
+                       host commit — the worst-placed failure the
+                       engine's rollback-and-retry must absorb.
+  ``nan_lane``         poison ONE slot's round inputs (the token
+                       domain's temperature, the TPP domain's pending
+                       event time) so that lane's logits go non-finite;
+                       the engine's per-lane quarantine must fail that
+                       single request and keep every other stream
+                       bitwise intact.
+  ``page_exhaustion``  seize the paged pools' free lists for the step,
+                       so admissions defer and in-round page growth
+                       hits the pool's out-of-pages error; restored at
+                       step end (pages freed DURING the fault stay
+                       free — no page is ever lost to the harness).
+  ``slow_step``        sleep before the step's work — deadline and
+                       goodput accounting under a stalled device.
+
+The injection contract the chaos tests pin: under any plan plus any
+cancel schedule, every SURVIVING request's committed tokens are bitwise
+the fault-free run's (same ``fold_in`` streams — a retried round re-runs
+with the same ``round_idx``), and the pools leak zero pages.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+FAULT_KINDS = ("step_error", "nan_lane", "page_exhaustion", "slow_step")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``step_error`` spec at the engine's fault barrier."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault.
+
+    kind    : one of ``FAULT_KINDS``.
+    step    : first engine step (1-based, the scheduler's post-``tick``
+              index) the fault fires on.
+    times   : consecutive steps to keep firing (default 1).
+    slot    : ``nan_lane`` only — the lane to poison (ignored unless a
+              decoding request occupies it that step).
+    pool    : ``page_exhaustion`` only — "t" | "d" | "both".
+    seconds : ``slow_step`` only — stall length.
+    """
+
+    kind: str
+    step: int
+    times: int = 1
+    slot: int = 0
+    pool: str = "both"
+    seconds: float = 0.02
+    message: str = "injected device-step failure"
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"one of {FAULT_KINDS}")
+        if self.step < 1 or self.times < 1:
+            raise ValueError("fault step and times must be >= 1 (steps "
+                             "are 1-based engine step indices)")
+        if self.pool not in ("t", "d", "both"):
+            raise ValueError("pool must be 't', 'd' or 'both'")
+
+    def active(self, step: int) -> bool:
+        return self.step <= step < self.step + self.times
+
+
+class FaultPlan:
+    """A deterministic schedule of ``FaultSpec``s plus its firing log.
+
+    The engine drives it: ``begin_step``/``end_step`` bracket every
+    ``step()`` (exhaustion seizure + slow-step stalls), the round-input
+    builders ask ``nan_lane_slot``, and every decode/prefill commit
+    point passes through ``maybe_raise_step_error``. ``log`` records
+    ``(step, kind)`` per actual injection — a nan_lane spec aimed at an
+    empty slot injects nothing and logs nothing.
+    """
+
+    def __init__(self, *specs: FaultSpec):
+        self.specs: List[FaultSpec] = list(specs)
+        self.log: List[Tuple[int, str]] = []
+        self._seized: List[Tuple[Any, List[int]]] = []
+
+    @property
+    def injected(self) -> int:
+        return len(self.log)
+
+    def injected_of(self, kind: str) -> int:
+        return sum(1 for _, k in self.log if k == kind)
+
+    def reset(self) -> None:
+        """Clear the firing log for a fresh run of the same plan."""
+        if self._seized:
+            raise RuntimeError("reset() inside a seized step")
+        self.log.clear()
+
+    # -- engine hooks ------------------------------------------------------
+    def _active(self, kind: str, step: int) -> Optional[FaultSpec]:
+        for sp in self.specs:
+            if sp.kind == kind and sp.active(step):
+                return sp
+        return None
+
+    def _record(self, step: int, kind: str, engine) -> None:
+        self.log.append((step, kind))
+        engine._stats.faults_injected += 1
+
+    def _pools(self, engine, which: str):
+        out = []
+        if which in ("t", "both"):
+            out.append(engine.pool_t)
+        if which in ("d", "both") and engine.pool_d is not None:
+            out.append(engine.pool_d)
+        return [p for p in out if hasattr(p, "seize_free")]
+
+    def begin_step(self, engine, step: int) -> None:
+        sp = self._active("slow_step", step)
+        if sp is not None:
+            time.sleep(sp.seconds)
+            self._record(step, "slow_step", engine)
+        sp = self._active("page_exhaustion", step)
+        if sp is not None:
+            pools = self._pools(engine, sp.pool)
+            for pool in pools:
+                self._seized.append((pool, pool.seize_free()))
+            if pools:
+                self._record(step, "page_exhaustion", engine)
+
+    def end_step(self, engine, step: int) -> None:
+        while self._seized:
+            pool, pages = self._seized.pop()
+            pool.restore_free(pages)
+
+    def exhaustion_active(self, step: int) -> bool:
+        """True while a seized free list makes admission failures
+        transient (the engine defers instead of declaring the pool too
+        small for a single request)."""
+        return self._active("page_exhaustion", step) is not None
+
+    def nan_lane_slot(self, step: int) -> Optional[int]:
+        sp = self._active("nan_lane", step)
+        return None if sp is None else sp.slot
+
+    def note_nan_injected(self, step: int, engine) -> None:
+        """The engine confirms the poisoned lane actually rode a round."""
+        self._record(step, "nan_lane", engine)
+
+    def maybe_raise_step_error(self, step: int, engine) -> None:
+        sp = self._active("step_error", step)
+        if sp is not None:
+            self._record(step, "step_error", engine)
+            raise InjectedFault(f"{sp.message} (step {step})")

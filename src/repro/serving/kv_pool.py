@@ -412,6 +412,19 @@ class PagedKVCachePool:
         self.truncate(slot, 0)
         self.reserved[slot] = 0
 
+    def seize_free(self) -> List[int]:
+        """Take the whole free list (fault injection: forced page
+        exhaustion). The pool keeps running — allocations fail or fall
+        back to cache eviction until ``restore_free`` hands the pages
+        back; pages released while seized join the (empty) list as
+        usual, so seize/restore never loses or duplicates a page."""
+        pages, self.free = self.free, []
+        return pages
+
+    def restore_free(self, pages: List[int]) -> None:
+        """Return pages taken by ``seize_free``."""
+        self.free.extend(pages)
+
     def reset(self) -> None:
         """Return every page; keep the allocated page arrays (stale
         contents are overwritten before being readable). Rebuilds the

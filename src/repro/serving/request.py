@@ -63,6 +63,18 @@ class ServeRequest:
                       (the rollout starts from the BOS sentinel).
     t_end           : TPP domain only — absolute forecast-horizon end;
                       ``None`` leaves the budget as the only stop.
+    deadline_s      : wall-clock completion deadline in seconds from
+                      submission; ``None`` = none. A request past its
+                      deadline is retired with ``status="deadline"``
+                      and whatever tokens it committed (queued requests
+                      expire without running). Never affects the tokens
+                      a surviving request samples — only how long the
+                      engine keeps working on it.
+    max_wall_rounds : engine-step budget from submission (counts EVERY
+                      step since submit — queue wait, prefill and
+                      decode alike); ``None`` = none. The round-count
+                      analogue of ``deadline_s`` for deterministic
+                      tests and step-metered deployments.
     """
 
     prompt: Any
@@ -74,6 +86,8 @@ class ServeRequest:
     prefix_group: Optional[int] = None
     times: Optional[Any] = None
     t_end: Optional[float] = None
+    deadline_s: Optional[float] = None
+    max_wall_rounds: Optional[int] = None
     request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
 
     def __post_init__(self):
@@ -91,6 +105,10 @@ class ServeRequest:
             raise ValueError("t_end only applies to TPP requests (times=)")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None)")
+        if self.max_wall_rounds is not None and self.max_wall_rounds < 1:
+            raise ValueError("max_wall_rounds must be >= 1 (or None)")
         self.rng = _as_key(self.rng)
 
     @property
@@ -102,9 +120,25 @@ class ServeRequest:
         return self.times is not None
 
 
+#: Terminal request statuses a ``ServeResult`` can carry. Partial
+#: tokens committed before a non-"ok" retirement are still returned
+#: (and are a bitwise PREFIX of what the request would have produced —
+#: the per-request rng contract survives every failure path).
+RESULT_STATUSES = ("ok", "failed", "cancelled", "deadline", "shed")
+
+
 @dataclass(frozen=True)
 class ServeResult:
-    """Per-request outcome with acceptance accounting."""
+    """Per-request outcome with acceptance accounting.
+
+    ``status`` is the request's terminal state (``RESULT_STATUSES``):
+    "ok" (budget/horizon reached), "failed" (round retries exhausted or
+    this lane's logits went non-finite — ``error`` says which),
+    "cancelled" (``ServingEngine.cancel``), "deadline" (``deadline_s``
+    / ``max_wall_rounds`` exceeded), "shed" (dropped from the queue
+    under overload). Failures are per-request results, never
+    exceptions out of ``ServingEngine.run()``.
+    """
 
     request_id: int
     tokens: np.ndarray      # [n] int32 generated tokens
@@ -120,10 +154,16 @@ class ServeResult:
     times: Optional[np.ndarray] = None  # TPP domain: [n] float32 absolute
                                         # event times of the generated
                                         # events (tokens holds the marks)
+    status: str = "ok"                  # terminal state, RESULT_STATUSES
+    error: Optional[str] = None         # status == "failed": the cause
 
     @property
     def n(self) -> int:
         return int(self.tokens.shape[0])
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
 
     @property
     def acceptance_rate(self) -> float:
@@ -176,6 +216,17 @@ class EngineStats:
     rollouts: int = 0            # completed scenario rollouts
     group_forwards: Dict[int, int] = field(default_factory=dict)
     group_member_rounds: Dict[int, int] = field(default_factory=dict)
+    # failure-semantics counters (``requests_completed`` counts "ok"
+    # retirements only; the other terminal statuses count here)
+    retries: int = 0             # request-rounds re-run after a failure
+    failed: int = 0              # requests retired status="failed"
+    cancellations: int = 0       # requests retired status="cancelled"
+    deadline_misses: int = 0     # deadline/round-budget expiries, plus
+                                 # "ok" completions that landed late
+    shed: int = 0                # requests dropped under overload
+    faults_injected: int = 0     # FaultPlan injections that fired
+    goodput_tokens: int = 0      # tokens delivered by "ok" requests
+                                 # WITHIN their deadline
 
     @property
     def acceptance_rate(self) -> float:
@@ -202,6 +253,14 @@ class EngineStats:
     def rollouts_per_sec(self) -> float:
         return self.rollouts / max(1e-9, self.wall_s)
 
+    @property
+    def goodput(self) -> float:
+        """Completed-in-deadline tokens per second — the overload
+        metric: shed/failed/expired work contributes nothing, so a
+        saturated engine maximizes this by finishing what it admits
+        rather than admitting everything."""
+        return self.goodput_tokens / max(1e-9, self.wall_s)
+
     def group_sharing(self, gid: int) -> float:
         """Average members sharing each of group ``gid``'s forwards."""
         return (self.group_member_rounds.get(gid, 0)
@@ -216,4 +275,9 @@ class EngineStats:
                 f"prefill_tok={self.prefill_tokens} "
                 f"prefill_tok/s={self.prefill_tokens_per_sec:.1f} "
                 f"prefix_hit_rate={self.prefix_hit_rate:.2f} "
-                f"prefix_hit_tok={self.prefix_hit_tokens}")
+                f"prefix_hit_tok={self.prefix_hit_tokens} "
+                f"retries={self.retries} failed={self.failed} "
+                f"cancelled={self.cancellations} "
+                f"deadline_misses={self.deadline_misses} shed={self.shed} "
+                f"faults={self.faults_injected} "
+                f"goodput_tok_s={self.goodput:.1f}")

@@ -256,17 +256,48 @@ class Scheduler:
     def pending_count(self) -> int:
         return len(self.pending)
 
+    def cancel_pending(self, request_id: int) -> Optional[_QueueEntry]:
+        """Remove and return the queued entry for ``request_id`` (None if
+        it is not in the queue — it may be active, finished or unknown)."""
+        for i, e in enumerate(self.pending):
+            if e.request.request_id == request_id:
+                return self.pending.pop(i)
+        return None
+
+    def take_expired(self, now: float) -> List[_QueueEntry]:
+        """Remove and return pending entries whose ``deadline_s`` elapsed
+        while they waited in the queue (they never get a slot)."""
+        expired = [e for e in self.pending
+                   if e.request.deadline_s is not None
+                   and now - e.submit_t > e.request.deadline_s]
+        if expired:
+            gone = {id(e) for e in expired}
+            self.pending = [e for e in self.pending if id(e) not in gone]
+        return expired
+
+    def shed_over(self, depth: int) -> List[_QueueEntry]:
+        """Drop and return the policy-ranked tail of the queue beyond
+        ``depth`` entries (overload shedding: the policy's sort key is
+        the SAME order admission uses, so what sheds is exactly what
+        would have been admitted last — lowest priority under
+        "priority", longest job under "sjf", newest under FIFO)."""
+        if depth < 0:
+            raise ValueError("shed depth must be >= 0")
+        if len(self.pending) <= depth:
+            return []
+        ctx = self._policy_ctx()
+        self.pending.sort(
+            key=lambda e: self.policy.key_ctx(e, self.step_idx, ctx))
+        shed, self.pending = self.pending[depth:], self.pending[:depth]
+        return shed
+
     # -- slot side ---------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def admit(self) -> List[Tuple[int, SlotState]]:
-        """Fill free slots in policy order (one sort per call; the keys
-        only depend on the current step and the slot/queue snapshot)."""
-        placed = []
-        free = self.free_slots()
-        if not free or not self.pending:
-            return placed
+    def _policy_ctx(self) -> dict:
+        """The context the policies' ``key_ctx`` ranks on: which groups
+        hold slots now, and each pending group's oldest seq anchor."""
         ctx = {"active_groups": {
                    s.request.prefix_group for s in self.slots
                    if s is not None and s.request.prefix_group is not None},
@@ -276,6 +307,16 @@ class Scheduler:
             if g is not None:
                 prev = ctx["anchors"].get(g, e.seq)
                 ctx["anchors"][g] = min(prev, e.seq)
+        return ctx
+
+    def admit(self) -> List[Tuple[int, SlotState]]:
+        """Fill free slots in policy order (one sort per call; the keys
+        only depend on the current step and the slot/queue snapshot)."""
+        placed = []
+        free = self.free_slots()
+        if not free or not self.pending:
+            return placed
+        ctx = self._policy_ctx()
         self.pending.sort(
             key=lambda e: self.policy.key_ctx(e, self.step_idx, ctx))
         for i in free:
@@ -290,6 +331,13 @@ class Scheduler:
 
     def active(self) -> List[Tuple[int, SlotState]]:
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def find_slot(self, request_id: int) -> Optional[int]:
+        """The slot ``request_id`` currently occupies, or None."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.request.request_id == request_id:
+                return i
+        return None
 
     def retire(self, slot: int) -> SlotState:
         state = self.slots[slot]

@@ -79,7 +79,11 @@ def tpp_ar_round_paged_fn(cfg_t, policy, max_kv: int):
             tau = jax.vmap(tppm.sample_interval)(rs[:, 0], mix)
             logits = tppm.type_logits(cfg_t, params_t, h)
             kk = jax.vmap(jax.random.categorical)(rs[:, 1], logits)
-            return pg_t, t_pend + tau, kk.astype(jnp.int32)
+            new_t = t_pend + tau
+            # per-lane health: a NaN event time or NaN type logits mean
+            # this lane's round is unusable (the engine quarantines it)
+            ok = ~(jnp.isnan(new_t) | jnp.any(jnp.isnan(logits), axis=-1))
+            return pg_t, new_t, kk.astype(jnp.int32), ok
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
 
@@ -88,8 +92,9 @@ def tpp_sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy, max_kv: int):
     """One batched propose-verify round (Algorithm 1 on the paged pool).
 
     Returns (pg_t, pg_d, d_t [S,g], d_k [S,g], A [S], new_t [S],
-    new_k [S]); the host commits ``d_t/d_k[:A]`` plus the replacement
-    event and truncates both pools to ``len0 + 1 + A``.
+    new_k [S], ok [S]); the host commits ``d_t/d_k[:A]`` plus the
+    replacement event and truncates both pools to ``len0 + 1 + A``
+    (lanes with ``ok == False`` are quarantined instead).
     """
     key = ("tpp_sd_round", cfg_t, cfg_d, gamma, policy, max_kv)
     if key not in _FN_CACHE:
@@ -179,6 +184,9 @@ def tpp_sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy, max_kv: int):
             A, new_t, new_k = jax.vmap(lane)(
                 r_ver, r_new1, r_new2, r_new3, d_tau, d_k, d_mix,
                 d_logits, d_t, mix_t_all, logits_t_all, t_pend)
-            return pg_t, pg_d, d_t, d_k, A, new_t, new_k
+            # per-lane health (NaN anywhere in this lane's round)
+            ok = ~(jnp.any(jnp.isnan(logits_t_all), axis=(1, 2))
+                   | jnp.isnan(new_t) | jnp.any(jnp.isnan(d_t), axis=1))
+            return pg_t, pg_d, d_t, d_k, A, new_t, new_k, ok
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]

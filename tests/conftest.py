@@ -16,7 +16,7 @@ except ImportError:
     _HAVE_HYPOTHESIS = False
 
 #: fuzz suites that silently vanish from the run when hypothesis is absent
-_FUZZ_SUITES = ("test_property", "test_prefix_fuzz")
+_FUZZ_SUITES = ("test_property", "test_prefix_fuzz", "test_chaos_fuzz")
 
 
 def pytest_terminal_summary(terminalreporter, exitstatus, config):

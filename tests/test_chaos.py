@@ -1,0 +1,460 @@
+"""Serving under failure: the chaos-harness contracts.
+
+The one invariant everything here pins: under ANY ``FaultPlan`` plus any
+cancel schedule, every SURVIVING request's committed tokens are bitwise
+the fault-free run's, and the pools leak zero pages. Failures are
+per-request data (``ServeResult.status``), never exceptions out of
+``run()``. Coverage:
+
+  - survivor-bitwise under step_error / page_exhaustion / slow_step on
+    the paged pool with ref AND Pallas(interpret) kernels, plus dense;
+  - nan_lane quarantine fails exactly the poisoned request (its partial
+    tokens a bitwise PREFIX of its fault-free stream);
+  - cancellation mid-flight (active slot, queued request, fan-out
+    sibling) frees refcounted pages with zero leak;
+  - deadlines (``max_wall_rounds`` deterministic, ``deadline_s`` wall
+    clock) retire partial prefixes with status "deadline";
+  - load shedding under overload keeps goodput nonzero;
+  - ``run()`` survives retry exhaustion (the PR's stranded-slot
+    regression) and the engine serves fresh traffic afterwards;
+  - the TPP domain + forecast retry pass: quantiles bitwise equal the
+    fault-free forecast after per-member resubmission.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TPPConfig
+from repro.forecast import Forecaster, ForecastRequest
+from repro.models import registry, tpp
+from repro.serving import (FaultPlan, FaultSpec, InjectedFault,
+                           ServeRequest, ServingEngine)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+N_REQ = 4
+
+
+def _engine(pair, layout, kernel, **kw):
+    cfg_t, cfg_d, pt, pd = pair
+    kw.setdefault("fixed_window", True)
+    kw.setdefault("max_len", 32)
+    return ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, gamma=2,
+                         kv_layout=layout, kernel=kernel, **kw)
+
+
+def _submit_all(eng, n_req=N_REQ):
+    return [eng.submit(ServeRequest(
+        prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5 + i,
+        rng=100 + i, temperature=1.0 + 0.1 * (i % 3)))
+        for i in range(n_req)]
+
+
+def _run_workload(pair, layout, kernel, **kw):
+    eng = _engine(pair, layout, kernel, **kw)
+    order = _submit_all(eng)
+    by_id = {r.request_id: r for r in eng.run()}
+    return eng, order, by_id
+
+
+_BASELINES = {}
+
+
+def _baseline(pair, layout, kernel):
+    """Fault-free tokens by submit index, computed once per layout."""
+    key = (layout, kernel)
+    if key not in _BASELINES:
+        _, order, by_id = _run_workload(pair, layout, kernel)
+        _BASELINES[key] = [np.asarray(by_id[rid].tokens)
+                           for rid in order]
+    return _BASELINES[key]
+
+
+def _assert_leak_free(eng):
+    for pool in (eng.pool_t, eng.pool_d):
+        if pool is not None and hasattr(pool, "refcount"):
+            assert int(pool.refcount.sum()) == 0, "leaked page refcounts"
+            assert len(pool.free) == pool.n_pages - 1, "leaked free pages"
+
+
+def _assert_prefix(partial, full):
+    partial, full = np.asarray(partial), np.asarray(full)
+    assert partial.shape[0] <= full.shape[0]
+    np.testing.assert_array_equal(partial, full[:partial.shape[0]])
+
+
+# ---------------------------------------------------------------------------
+# survivor-bitwise under injected faults (ref AND pallas-interpret)
+# ---------------------------------------------------------------------------
+
+_PLANS = {
+    "step_error": lambda: FaultPlan(FaultSpec(kind="step_error", step=2,
+                                              times=2)),
+    "page_exhaustion": lambda: FaultPlan(FaultSpec(kind="page_exhaustion",
+                                                   step=2, times=2)),
+    "slow_step": lambda: FaultPlan(FaultSpec(kind="slow_step", step=1,
+                                             times=2, seconds=0.002)),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(_PLANS))
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_survivors_bitwise_paged(dense_pair, kind, kernel):
+    """Every request completes "ok" with tokens bitwise the fault-free
+    run's, under each fault kind, on both kernels."""
+    plan = _PLANS[kind]()
+    eng, order, by_id = _run_workload(dense_pair, "paged", kernel,
+                                      faults=plan)
+    assert plan.injected >= 1, "fault never fired"
+    assert plan.injected_of(kind) == plan.injected
+    ref = _baseline(dense_pair, "paged", kernel)
+    for i, rid in enumerate(order):
+        assert by_id[rid].ok, by_id[rid].error
+        np.testing.assert_array_equal(np.asarray(by_id[rid].tokens),
+                                      ref[i])
+    if kind == "step_error":
+        assert eng.stats().retries >= 1
+    _assert_leak_free(eng)
+
+
+def test_step_error_dense_survivors_bitwise(dense_pair):
+    plan = FaultPlan(FaultSpec(kind="step_error", step=2))
+    eng, order, by_id = _run_workload(dense_pair, "dense", "ref",
+                                      faults=plan)
+    assert plan.injected == 1 and eng.stats().retries >= 1
+    ref = _baseline(dense_pair, "dense", "ref")
+    for i, rid in enumerate(order):
+        assert by_id[rid].ok
+        np.testing.assert_array_equal(np.asarray(by_id[rid].tokens),
+                                      ref[i])
+
+
+def test_page_exhaustion_inapplicable_on_dense(dense_pair):
+    """The dense pool has no free list to seize: the plan is a no-op
+    (injects nothing) and the run is clean."""
+    plan = FaultPlan(FaultSpec(kind="page_exhaustion", step=1, times=3))
+    _, order, by_id = _run_workload(dense_pair, "dense", "ref",
+                                    faults=plan)
+    assert plan.injected == 0
+    ref = _baseline(dense_pair, "dense", "ref")
+    for i, rid in enumerate(order):
+        assert by_id[rid].ok
+        np.testing.assert_array_equal(np.asarray(by_id[rid].tokens),
+                                      ref[i])
+
+
+# ---------------------------------------------------------------------------
+# nan_lane quarantine: one failed request, survivors bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_nan_lane_quarantines_one_request(dense_pair, kernel):
+    plan = FaultPlan(FaultSpec(kind="nan_lane", step=2, slot=1))
+    eng, order, by_id = _run_workload(dense_pair, "paged", kernel,
+                                      faults=plan)
+    assert plan.injected == 1
+    ref = _baseline(dense_pair, "paged", kernel)
+    statuses = [by_id[rid].status for rid in order]
+    assert statuses.count("failed") == 1
+    for i, rid in enumerate(order):
+        res = by_id[rid]
+        if res.ok:
+            np.testing.assert_array_equal(np.asarray(res.tokens), ref[i])
+        else:
+            assert "non-finite logits" in res.error
+            # the poisoned lane keeps its pre-fault commits: a bitwise
+            # PREFIX of its own fault-free stream
+            _assert_prefix(res.tokens, ref[i])
+    st = eng.stats()
+    assert st.failed == 1 and st.requests_completed == N_REQ - 1
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# cancellation: active slot, queued request, fan-out sibling
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["ref", "pallas"])
+def test_cancel_active_and_queued_under_faults(dense_pair, kernel):
+    """Cancel one decoding slot and one still-queued request while a
+    step_error plan is firing: cancelled streams are prefixes, the
+    survivors stay bitwise, nothing leaks."""
+    plan = FaultPlan(FaultSpec(kind="step_error", step=3))
+    eng = _engine(dense_pair, "paged", kernel, faults=plan)
+    order = _submit_all(eng)            # max_batch=3: order[3] queues
+    results = list(eng.step())
+    c_active = eng.cancel(order[1])
+    c_queued = eng.cancel(order[3])
+    assert eng.cancel(10 ** 9) is None  # unknown id
+    results += eng.run()
+    by_id = {r.request_id: r for r in results}
+    ref = _baseline(dense_pair, "paged", kernel)
+    assert c_active.status == "cancelled"
+    _assert_prefix(c_active.tokens, ref[1])
+    assert c_queued.status == "cancelled" and c_queued.n == 0
+    for i in (0, 2):
+        assert by_id[order[i]].ok
+        np.testing.assert_array_equal(np.asarray(by_id[order[i]].tokens),
+                                      ref[i])
+    st = eng.stats()
+    assert st.cancellations == 2 and plan.injected == 1
+    _assert_leak_free(eng)
+
+
+def test_cancel_fanout_sibling(dense_pair):
+    """Cancelling one copy-on-write sibling mid-flight releases its
+    refcounted pages and leaves the other siblings bitwise."""
+    cfg_t, cfg_d, pt, pd = dense_pair
+
+    def fan(cancel_one):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, max_len=32,
+                            gamma=2, kv_layout="paged", kernel="ref",
+                            fixed_window=True)
+        ids = eng.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                         max_new_tokens=6, rng=7, fanout=3)
+        out = []
+        if cancel_one:
+            out += eng.step()
+            out.append(eng.cancel(ids[1]))
+        out += eng.run()
+        return eng, ids, {r.request_id: r for r in out}
+
+    eng_r, ids_r, ref = fan(cancel_one=False)
+    eng_c, ids_c, got = fan(cancel_one=True)
+    assert got[ids_c[1]].status == "cancelled"
+    _assert_prefix(got[ids_c[1]].tokens, ref[ids_r[1]].tokens)
+    for j in (0, 2):
+        assert got[ids_c[j]].ok
+        np.testing.assert_array_equal(np.asarray(got[ids_c[j]].tokens),
+                                      np.asarray(ref[ids_r[j]].tokens))
+    _assert_leak_free(eng_r)
+    _assert_leak_free(eng_c)
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_max_wall_rounds_deadline_is_bitwise_prefix(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = _engine(dense_pair, "paged", "ref")
+    rid = eng.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                     max_new_tokens=8, rng=100, max_wall_rounds=1)
+    res = {r.request_id: r for r in eng.run()}[rid]
+    assert res.status == "deadline" and 0 < res.n < 8
+    eng2 = _engine(dense_pair, "paged", "ref")
+    rid2 = eng2.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                       max_new_tokens=8, rng=100)
+    full = {r.request_id: r for r in eng2.run()}[rid2]
+    _assert_prefix(res.tokens, full.tokens)
+    assert eng.stats().deadline_misses == 1
+    _assert_leak_free(eng)
+
+
+def test_deadline_s_expires_queued_request(dense_pair):
+    """A queued request whose wall-clock deadline passes before a slot
+    frees retires "deadline" with zero tokens, from the queue."""
+    eng = _engine(dense_pair, "paged", "ref")
+    order = _submit_all(eng, n_req=3)   # fills all 3 slots
+    late = eng.submit(ServeRequest(prompt=jnp.arange(5, dtype=jnp.int32),
+                                   max_new_tokens=5, rng=9,
+                                   deadline_s=1e-6))
+    by_id = {r.request_id: r for r in eng.run()}
+    assert by_id[late].status == "deadline" and by_id[late].n == 0
+    assert all(by_id[rid].ok for rid in order)
+    assert eng.stats().deadline_misses >= 1
+    _assert_leak_free(eng)
+
+
+def test_slow_step_forces_active_deadline(dense_pair):
+    """slow_step stalls past an active request's deadline_s: it retires
+    "deadline" mid-flight with a bitwise-prefix stream."""
+    plan = FaultPlan(FaultSpec(kind="slow_step", step=1, times=4,
+                               seconds=0.05))
+    eng = _engine(dense_pair, "paged", "ref", faults=plan)
+    rid = eng.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                     max_new_tokens=12, rng=100, deadline_s=0.01)
+    res = {r.request_id: r for r in eng.run()}[rid]
+    assert res.status == "deadline" and res.n < 12
+    ref = _baseline(dense_pair, "paged", "ref")
+    _assert_prefix(res.tokens, ref[0])  # same prompt/rng as workload[0]
+    assert plan.injected >= 1
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# load shedding
+# ---------------------------------------------------------------------------
+
+def test_shed_queue_drops_overload_keeps_goodput(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=2, max_len=32,
+                        gamma=2, kv_layout="paged", kernel="ref",
+                        fixed_window=True, shed_queue=0)
+    order = _submit_all(eng, n_req=5)
+    by_id = {r.request_id: r for r in eng.run()}
+    statuses = [by_id[rid].status for rid in order]
+    assert statuses.count("shed") >= 1
+    assert statuses.count("ok") >= 2
+    for rid in order:
+        if by_id[rid].status == "shed":
+            assert by_id[rid].n == 0
+    st = eng.stats()
+    assert st.shed == statuses.count("shed")
+    assert st.goodput_tokens > 0 and st.goodput > 0
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# run() survives retry exhaustion and keeps serving (the stranded-slot
+# regression this PR fixes)
+# ---------------------------------------------------------------------------
+
+def test_run_survives_retry_exhaustion_then_recovers(dense_pair):
+    plan = FaultPlan(FaultSpec(kind="step_error", step=1))
+    eng = _engine(dense_pair, "paged", "ref", faults=plan,
+                  max_round_retries=0)
+    order = _submit_all(eng, n_req=3)
+    by_id = {r.request_id: r for r in eng.run()}   # must NOT raise
+    for rid in order:
+        assert by_id[rid].status == "failed"
+        assert "injected device-step failure" in by_id[rid].error
+    _assert_leak_free(eng)
+    # the engine is still healthy: a fresh request (plan expired) runs
+    # to completion and matches a clean engine bitwise
+    rid = eng.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                     max_new_tokens=5, rng=100)
+    res = {r.request_id: r for r in eng.run()}[rid]
+    assert res.ok
+    ref = _baseline(dense_pair, "paged", "ref")
+    np.testing.assert_array_equal(np.asarray(res.tokens), ref[0][:5])
+    _assert_leak_free(eng)
+
+
+def test_injected_fault_is_runtime_error():
+    assert issubclass(InjectedFault, RuntimeError)
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor", step=1)
+    with pytest.raises(ValueError, match="1-based"):
+        FaultSpec(kind="step_error", step=0)
+
+
+# ---------------------------------------------------------------------------
+# fixed_window validation + stats surface
+# ---------------------------------------------------------------------------
+
+def test_fixed_window_needs_static_policy_and_room(dense_pair):
+    cfg_t, cfg_d, pt, pd = dense_pair
+    with pytest.raises(ValueError, match="fixed_window"):
+        ServingEngine(cfg_t, pt, cfg_d, pd, gamma=2, fixed_window=True,
+                      draft_policy="adaptive")
+    eng = _engine(dense_pair, "paged", "ref", max_len=16)
+    with pytest.raises(ValueError, match="fixed speculative window"):
+        # 5 prompt + 10 budget + 2 margin > 16
+        eng.submit(prompt=jnp.arange(5, dtype=jnp.int32),
+                   max_new_tokens=10, rng=0)
+
+
+def test_stats_goodput_and_describe(dense_pair):
+    eng, order, by_id = _run_workload(dense_pair, "paged", "ref")
+    st = eng.stats()
+    assert st.goodput_tokens == sum(by_id[rid].n for rid in order)
+    text = st.describe()
+    for field in ("retries=", "failed=", "cancelled=", "deadline_misses=",
+                  "shed=", "faults=", "goodput_tok_s="):
+        assert field in text
+
+
+# ---------------------------------------------------------------------------
+# TPP domain + forecast retry pass
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tpp_pair():
+    cfg_t = TPPConfig(name="ch-t", encoder="thp", num_layers=2,
+                      num_heads=2, d_model=16, d_ff=32, num_marks=3,
+                      num_mix=4)
+    cfg_d = cfg_t.replace(name="ch-d", num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    return cfg_t, cfg_d, pt, pd
+
+
+def _history(n=4, seed=3):
+    r = np.random.default_rng(seed)
+    times = np.cumsum(r.exponential(0.5, size=n)).astype(np.float32)
+    marks = r.integers(0, 3, size=n).astype(np.int32)
+    return times, marks
+
+
+_TPP_KW = dict(method="sd", max_batch=4, max_len=16, gamma=2,
+               kernel="ref", sched="grouped", page_size=4)
+
+
+def test_tpp_step_error_survivors_bitwise(tpp_pair):
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    times, marks = _history()
+
+    def run(faults):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, faults=faults,
+                            **_TPP_KW)
+        ids = eng.submit(prompt=marks, times=times,
+                         t_end=float(times[-1]) + 6.0, max_new_tokens=6,
+                         rng=jax.random.PRNGKey(42), fanout=4)
+        return eng, ids, {r.request_id: r for r in eng.run()}
+
+    plan = FaultPlan(FaultSpec(kind="step_error", step=2))
+    _, ids_r, ref = run(None)
+    eng, ids_c, got = run(plan)
+    assert plan.injected == 1 and eng.stats().retries >= 1
+    for a, b in zip(ids_c, ids_r):
+        assert got[a].ok
+        np.testing.assert_array_equal(np.asarray(got[a].tokens),
+                                      np.asarray(ref[b].tokens))
+        np.testing.assert_array_equal(np.asarray(got[a].times),
+                                      np.asarray(ref[b].times))
+    _assert_leak_free(eng)
+
+
+def test_forecast_retry_recovers_quarantined_rollout(tpp_pair):
+    """A nan_lane fault quarantines one wave member; the Forecaster's
+    retry pass resubmits it at its member offset, so the final
+    quantiles are BITWISE the fault-free forecast's."""
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    times, marks = _history()
+    req = ForecastRequest(history_times=times, history_marks=marks,
+                          horizon=6.0, n_rollouts=5, bins=4,
+                          max_events=6, rng=jax.random.PRNGKey(42))
+
+    eng0 = ServingEngine(cfg_t, pt, cfg_d, pd, **_TPP_KW)
+    res0 = Forecaster(eng0).forecast(req)
+
+    plan = FaultPlan(FaultSpec(kind="nan_lane", step=2, slot=1))
+    eng1 = ServingEngine(cfg_t, pt, cfg_d, pd, faults=plan, **_TPP_KW)
+    res1 = Forecaster(eng1).forecast(req)
+
+    assert plan.injected >= 1, "fault never fired"
+    assert res1.failed_rollouts == 0, "retry pass did not recover"
+    np.testing.assert_array_equal(res0.quantiles, res1.quantiles)
+    np.testing.assert_array_equal(res0.mean, res1.mean)
+    assert res1.events == res0.events
+    _assert_leak_free(eng1)

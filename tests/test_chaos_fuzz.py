@@ -1,0 +1,190 @@
+"""Chaos fuzz (hypothesis): random fault plans + cancel schedules.
+
+Two properties, checked over randomized schedules rather than the
+hand-picked ones in ``test_chaos``:
+
+  - pool lifecycle: random ensure/truncate/free/fork schedules
+    interleaved with the fault harness's ``seize_free``/``restore_free``
+    cycles keep the page bookkeeping airtight — every page's refcount
+    equals the number of block-table entries holding it, and
+    free list + seized list together hold exactly the refcount-0 pages
+    (each once);
+  - engine chaos: under ANY generated ``FaultPlan`` plus an optional
+    mid-flight cancellation, ``run()`` never raises, every result
+    carries a legal status, "ok" streams are BITWISE the fault-free
+    baseline's, non-"ok" streams are bitwise prefixes of it, and the
+    pools leak zero pages.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import (FAULT_KINDS, FaultPlan, FaultSpec,
+                           RESULT_STATUSES, ServeRequest, ServingEngine)
+from repro.serving.kv_pool import PagedKVCachePool
+
+settings.register_profile("chaos", max_examples=10, deadline=None)
+settings.load_profile("chaos")
+
+PAGE, SLOTS, MAXLEN = 4, 3, 16
+
+
+def _cfg(num_layers=2, name="t"):
+    return ModelConfig(name=name, family="dense", num_layers=num_layers,
+                       d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                       vocab_size=31, dtype="float32",
+                       param_dtype="float32", remat=False)
+
+
+# ---------------------------------------------------------------------------
+# pool lifecycle under seize/restore cycles
+# ---------------------------------------------------------------------------
+
+def _check_books(pool, seized):
+    """Refcounts == table entries; free+seized == the refcount-0 pages."""
+    counts = np.zeros(pool.n_pages, np.int64)
+    for s in range(SLOTS):
+        for b in range(int(pool.n_blocks[s])):
+            counts[pool.tables[s, b]] += 1
+    counts[0] = 0                              # null page: never counted
+    np.testing.assert_array_equal(counts, pool.refcount)
+    out = sorted(list(pool.free) + [p for ps in seized for p in ps])
+    want = sorted(p for p in range(1, pool.n_pages)
+                  if pool.refcount[p] == 0)
+    assert out == want, "free+seized != refcount-0 pages"
+
+
+_POOL_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("ensure"), st.integers(0, SLOTS - 1),
+                  st.integers(1, MAXLEN)),
+        st.tuples(st.just("truncate"), st.integers(0, SLOTS - 1),
+                  st.integers(0, MAXLEN)),
+        st.tuples(st.just("free"), st.integers(0, SLOTS - 1)),
+        st.tuples(st.just("fork"), st.integers(0, SLOTS - 1),
+                  st.integers(0, SLOTS - 1)),
+        st.tuples(st.just("seize")),
+        st.tuples(st.just("restore")),
+    ),
+    min_size=1, max_size=40)
+
+
+@given(ops=_POOL_OPS)
+def test_pool_books_exact_under_seize_cycles(ops):
+    pool = PagedKVCachePool(SLOTS, _cfg(1), page_size=PAGE,
+                            max_len=MAXLEN)
+    seized = []
+    for op in ops:
+        kind = op[0]
+        if kind == "ensure":
+            _, slot, n = op
+            need = -(-n // PAGE) - int(pool.n_blocks[slot])
+            try:
+                pool.ensure_blocks(slot, n)
+            except RuntimeError:
+                # legal only when the free list really can't cover it
+                # (e.g. mid-seize) — anything else is a leak/deadlock
+                assert need > len(pool.free)
+        elif kind == "truncate":
+            _, slot, n = op
+            pool.truncate(slot, min(n, int(pool.lens[slot])))
+        elif kind == "free":
+            pool.free_slot(op[1])
+        elif kind == "fork":
+            _, src, dst = op
+            if src != dst and int(pool.lens[dst]) == 0 \
+                    and int(pool.n_blocks[dst]) == 0 \
+                    and int(pool.lens[src]) > 0:
+                pool.fork(src, dst, int(pool.lens[src]))
+        elif kind == "seize":
+            seized.append(pool.seize_free())
+        elif kind == "restore":
+            if seized:
+                pool.restore_free(seized.pop())
+        _check_books(pool, seized)
+    while seized:                              # harness end_step contract
+        pool.restore_free(seized.pop())
+    _check_books(pool, seized)
+
+
+# ---------------------------------------------------------------------------
+# engine chaos: random plans + cancellation, survivors bitwise
+# ---------------------------------------------------------------------------
+
+N_REQ = 4
+_STATE = {}
+
+
+def _pair():
+    if "pair" not in _STATE:
+        cfg_t, cfg_d = _cfg(2), _cfg(1, name="d")
+        mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+        _STATE["pair"] = (cfg_t, cfg_d,
+                          mt.init_params(jax.random.PRNGKey(0)),
+                          md.init_params(jax.random.PRNGKey(1)))
+    return _STATE["pair"]
+
+
+def _run(faults=None, cancel_idx=None):
+    cfg_t, cfg_d, pt, pd = _pair()
+    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, max_len=32,
+                        gamma=2, kv_layout="paged", kernel="ref",
+                        fixed_window=True, faults=faults)
+    order = [eng.submit(ServeRequest(
+        prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5 + i,
+        rng=100 + i, temperature=1.0 + 0.1 * (i % 3)))
+        for i in range(N_REQ)]
+    results = []
+    if cancel_idx is not None:
+        results += eng.step()
+        c = eng.cancel(order[cancel_idx])
+        if c is not None:
+            results.append(c)
+    results += eng.run()
+    return eng, order, {r.request_id: r for r in results}
+
+
+def _baseline():
+    if "base" not in _STATE:
+        _, order, by_id = _run()
+        _STATE["base"] = [np.asarray(by_id[rid].tokens) for rid in order]
+    return _STATE["base"]
+
+
+_SPEC = st.builds(
+    FaultSpec,
+    kind=st.sampled_from(FAULT_KINDS),
+    step=st.integers(1, 4),
+    times=st.integers(1, 2),
+    slot=st.integers(0, 2),
+    seconds=st.just(0.001))
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=2),
+       cancel_idx=st.one_of(st.none(), st.integers(0, N_REQ - 1)))
+def test_engine_survivors_bitwise_under_random_chaos(specs, cancel_idx):
+    ref = _baseline()
+    plan = FaultPlan(*specs)
+    eng, order, by_id = _run(faults=plan, cancel_idx=cancel_idx)
+    for i, rid in enumerate(order):
+        res = by_id.get(rid)
+        assert res is not None, "request vanished without a result"
+        assert res.status in RESULT_STATUSES
+        got = np.asarray(res.tokens)
+        if res.ok:
+            np.testing.assert_array_equal(got, ref[i])
+        else:
+            # failed/cancelled/deadline streams stop early but never
+            # diverge: a bitwise prefix of the fault-free stream
+            assert got.shape[0] <= ref[i].shape[0]
+            np.testing.assert_array_equal(got, ref[i][:got.shape[0]])
+    for pool in (eng.pool_t, eng.pool_d):
+        assert int(pool.refcount.sum()) == 0
+        assert len(pool.free) == pool.n_pages - 1

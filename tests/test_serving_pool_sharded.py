@@ -88,7 +88,7 @@ def sharded_serving_out():
     env = dict(os.environ, PYTHONPATH=SRC)
     env.pop("JAX_PLATFORMS", None)
     r = subprocess.run([sys.executable, "-c", _SCRIPT],
-                       capture_output=True, text=True, env=env, timeout=560)
+                       capture_output=True, text=True, env=env, timeout=900)
     assert r.returncode == 0, r.stderr[-3000:]
     return json.loads(r.stdout.strip().splitlines()[-1])
 
