@@ -66,16 +66,25 @@ class _Query:
     pending: set = field(default_factory=set)
 
 
-def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
+def drive(engine, queries: List[Dict], rate: float, seed: int = 0,
+          loop: str = "sync"):
     """Open-loop drive: submit query i at its Poisson arrival offset,
     stepping the engine in between; returns (per-query records,
-    per-status result counts, wall)."""
+    per-status result counts, wall).
+
+    ``loop="async"`` runs the engine's pipelined step: the device round
+    is dispatched non-blocking and arrivals are polled INSIDE the
+    overlap window (while the device is busy), so under overload the
+    async loop admits sooner and wastes no host time idling at the
+    transfer barrier."""
     arrivals = poisson_arrivals(rate, len(queries), seed)
     recs: List[_Query] = []
     statuses: Dict[str, int] = {}
     next_q = 0
     t0 = time.perf_counter()
-    while next_q < len(queries) or engine.scheduler.has_work():
+
+    def submit_due():
+        nonlocal next_q
         now = time.perf_counter() - t0
         while next_q < len(queries) and arrivals[next_q] <= now:
             ids = engine.submit(**queries[next_q])
@@ -84,8 +93,13 @@ def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
                                member_ids=ids, submit_s=now,
                                pending=set(ids)))
             next_q += 1
+
+    overlap = (engine.async_overlap(poll=submit_due)
+               if loop == "async" else None)
+    while next_q < len(queries) or engine.scheduler.has_work():
+        submit_due()
         if engine.scheduler.has_work():
-            for res in engine.step():
+            for res in engine.step(overlap=overlap):
                 statuses[res.status] = statuses.get(res.status, 0) + 1
                 for q in recs:
                     if res.request_id in q.pending:
@@ -94,6 +108,7 @@ def drive(engine, queries: List[Dict], rate: float, seed: int = 0):
                             q.done_s = time.perf_counter() - t0
         elif next_q < len(queries):
             # idle gap until the next scheduled arrival
+            now = time.perf_counter() - t0
             time.sleep(min(0.01, max(0.0, arrivals[next_q] - now)))
     return recs, statuses, time.perf_counter() - t0
 
@@ -171,6 +186,9 @@ def main():
                     help="bound the pending queue: after each step's "
                          "admissions the backlog past this depth is "
                          "shed (status='shed'); -1 = never shed")
+    ap.add_argument("--loop", default="sync", choices=["sync", "async"],
+                    help="sync = blocking step; async = pipelined step "
+                         "(arrival polling rides the overlap window)")
     ap.add_argument("--bench-json", dest="bench_json",
                     action="store_true",
                     help="merge an overload row into BENCH_serving.json")
@@ -184,7 +202,8 @@ def main():
     eng.run()
     eng.reset()
 
-    recs, statuses, wall = drive(eng, queries, args.rate, args.seed)
+    recs, statuses, wall = drive(eng, queries, args.rate, args.seed,
+                                 loop=args.loop)
     st = eng.stats()
     lat = np.sort(np.array([q.done_s - q.arrival_s for q in recs]))
     # sustained rate over the active window (first arrival -> last
@@ -196,9 +215,11 @@ def main():
     offered = (len(recs) - 1) / span if len(recs) > 1 else args.rate
     goodput = st.goodput_tokens / window
     p50, p95, p99 = (float(np.percentile(lat, q)) for q in (50, 95, 99))
-    print(f"target={args.target} rate={args.rate:.2f} "
+    print(f"target={args.target} loop={args.loop} rate={args.rate:.2f} "
           f"(realized {offered:.2f}) q/s queries={len(recs)} fanout="
           f"{args.fanout if args.target == 'forecast' else 1}")
+    print(f"breakdown host_ms={st.host_ms:.0f} device_ms={st.device_ms:.0f} "
+          f"overlap_ms={st.overlap_ms:.1f}")
     print(f"sustained={sustained:.2f} queries/s | "
           f"rollouts/s={st.rollouts / window:.1f} | "
           f"tokens={st.tokens} | wall={wall:.1f}s")
@@ -217,15 +238,22 @@ def main():
                "p50_s": round(p50, 4), "p95_s": round(p95, 4),
                "p99_s": round(p99, 4),
                "goodput_tok_s": round(goodput, 1),
+               "loop": args.loop,
+               "host_ms": round(st.host_ms, 1),
+               "device_ms": round(st.device_ms, 1),
+               "overlap_ms": round(st.overlap_ms, 1),
+               "backend": jax.default_backend(),
                "deadline_s": args.deadline or None,
                "shed_queue": args.shed_queue
                if args.shed_queue >= 0 else None}
         row.update({f"n_{k}": statuses.get(k, 0)
                     for k in ("ok", "deadline", "shed")})
-        _merge_bench_serving(
-            {f"loadgen_{args.target}_overload"
-             if (args.shed_queue >= 0 or args.deadline) else
-             f"loadgen_{args.target}": row})
+        key = (f"loadgen_{args.target}_overload"
+               if (args.shed_queue >= 0 or args.deadline) else
+               f"loadgen_{args.target}")
+        if args.loop == "async":
+            key += "_async"
+        _merge_bench_serving({key: row})
 
 
 if __name__ == "__main__":

@@ -57,7 +57,8 @@ class AnalysisConfig:
     #: methods that legitimately transfer page ownership instead of
     #: releasing (consumed by refcount-pairing)
     ownership_transfer_methods: Tuple[str, ...] = ("insert", "adopt",
-                                                   "donate", "fork")
+                                                   "donate", "fork",
+                                                   "transfer_slot")
 
     def applies(self, rule_id: str, path: str) -> bool:
         if any(fnmatch(path, g) for g in self.global_exclude):

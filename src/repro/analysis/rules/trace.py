@@ -10,7 +10,12 @@ diverged from the compiled program.
 ``.block_until_ready()`` inside the jitted round/step functions —
 each one either breaks tracing outright or forces a device sync in the
 middle of the serving hot loop. (``jax.debug.print`` is trace-safe and
-not flagged.)
+not flagged.) Also flags the HOST-side shape of the same bug:
+per-element ``np.asarray(x[i])`` / ``x[i].item()`` /
+``jax.device_get(x[i])`` inside a ``for`` loop — one device sync per
+slot where a single batched fetch of the packed array would do. The
+per-element narrowing is deliberate: ``np.asarray(whole_array)``
+outside or inside a loop is one transfer and stays legal.
 
 Traced-function detection is shared, module-local and intraprocedural:
 
@@ -432,13 +437,16 @@ class HostSyncInHotPath(Rule):
     id = "host-sync-in-hot-path"
     description = ("numpy coercion / time.* / print / "
                    "block_until_ready inside jitted round or step "
-                   "functions")
+                   "functions; per-element device->host transfers in "
+                   "host loops")
 
     def check(self, ctx: FileContext) -> Iterator[Finding]:
         traced = find_traced_functions(ctx)
+        traced_nodes: Set[int] = set()
         seen = set()
         for info in traced.values():
             for node in ast.walk(info.node):
+                traced_nodes.add(id(node))
                 if id(node) in seen:
                     continue
                 seen.add(id(node))
@@ -469,3 +477,43 @@ class HostSyncInHotPath(Rule):
                         self.id, node,
                         f"{bad} — inside traced function "
                         f"{_fname(info)} ({info.why})")
+        yield from self._host_loop_scan(ctx, traced_nodes)
+
+    def _host_loop_scan(self, ctx: FileContext,
+                        traced_nodes: Set[int]) -> Iterator[Finding]:
+        """Flag per-ELEMENT device->host transfers inside host ``for``
+        loops: ``np.asarray(x[i])``, ``x[i].item()`` and
+        ``jax.device_get(x[i])`` each force one device sync per
+        iteration (per slot, in the serving engine's commit loops) —
+        pack the outputs and fetch the whole array once instead. Only
+        subscripted arguments are flagged: a whole-array ``asarray``
+        is a single transfer and stays legal wherever it sits."""
+        flagged = set()
+        for loop in ast.walk(ctx.tree):
+            if not isinstance(loop, ast.For) or id(loop) in traced_nodes:
+                continue
+            for sub in ast.walk(loop):
+                if (not isinstance(sub, ast.Call)
+                        or id(sub) in traced_nodes
+                        or id(sub) in flagged):
+                    continue
+                name = dotted_name(sub.func)
+                if (name in ("np.asarray", "numpy.asarray",
+                             "jax.device_get", "device_get")
+                        and sub.args
+                        and isinstance(sub.args[0], ast.Subscript)):
+                    flagged.add(id(sub))
+                    yield ctx.finding(
+                        self.id, sub,
+                        f"{name}() on a subscript inside a host loop — "
+                        "one device sync per element; batch into a "
+                        "single packed fetch outside the loop")
+                elif (isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "item"
+                        and isinstance(sub.func.value, ast.Subscript)):
+                    flagged.add(id(sub))
+                    yield ctx.finding(
+                        self.id, sub,
+                        ".item() on a subscript inside a host loop — "
+                        "one device sync per element; batch into a "
+                        "single packed fetch outside the loop")

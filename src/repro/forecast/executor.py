@@ -120,13 +120,19 @@ class Forecaster:
     ``forecast`` is called; the call owns the engine until it returns.
     """
 
-    def __init__(self, engine, max_retries: int = 2):
+    def __init__(self, engine, max_retries: int = 2, loop: str = "sync"):
         if getattr(engine, "domain", None) != "tpp":
             raise ValueError("Forecaster needs a TPP serving engine "
                              "(built from a TPPConfig)")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if loop not in ("sync", "async"):
+            raise ValueError("loop must be 'sync' or 'async'")
         self.engine = engine
+        #: "async" drains each wave with the engine's pipelined
+        #: ``run_async()`` (bitwise == ``run()``; the host folds the
+        #: PREVIOUS wave's aggregation while the device decodes)
+        self.loop = loop
         #: per-member resubmission budget: a rollout the engine retired
         #: non-"ok" (injected fault, quarantined lane, cancellation) is
         #: resubmitted alone with ``fanout_offset = member``, which
@@ -160,7 +166,7 @@ class Forecaster:
                              max_new_tokens=req.max_events, rng=req.rng,
                              fanout=k, fanout_offset=done)
             member = {rid: done + j for j, rid in enumerate(ids)}
-            results = eng.run()
+            results = eng.run() if self.loop == "sync" else eng.run_async()
             # fold this wave and forget it: the host buffer is one wave
             # ([K <= max_batch, budget]), never the full fan-out. Only
             # "ok" retirements enter the buffer — the aggregator counts
@@ -194,7 +200,8 @@ class Forecaster:
                                  times=req.history_times, t_end=t_end,
                                  max_new_tokens=req.max_events,
                                  rng=req.rng, fanout=1, fanout_offset=j)
-                results = eng.run()
+                results = (eng.run() if self.loop == "sync"
+                           else eng.run_async())
                 r = results[0] if results else None
                 if r is None or not r.ok:
                     still.append(j)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from ..configs import ARCHS, get_arch, smoke_variant
 from ..models import registry
-from ..serving import ServeRequest, ServingEngine
+from ..serving import DisaggServingEngine, ServeRequest, ServingEngine
 
 
 def build_engine(args):
@@ -37,8 +37,8 @@ def build_engine(args):
         from .mesh import resolve_serving_mesh
         mesh = resolve_serving_mesh()
         print(f"sharded serving on mesh {dict(mesh.shape)}")
-    return cfg_t, ServingEngine(
-        cfg_t, pt, cfg_d, pd, method=args.method, max_batch=args.max_batch,
+    kw = dict(
+        method=args.method, max_batch=args.max_batch,
         max_len=args.max_len, gamma=args.gamma,
         draft_policy=args.draft_policy, mesh=mesh,
         kv_layout=args.kv_layout, kernel=args.kernel,
@@ -47,6 +47,12 @@ def build_engine(args):
         prefill_budget=args.prefill_budget or None,
         prefix_cache=args.prefix_cache == "on",
         shed_queue=args.shed if args.shed >= 0 else None)
+    if args.disagg:
+        kw["kv_layout"] = "paged" if args.kv_layout == "auto" \
+            else args.kv_layout
+        return cfg_t, DisaggServingEngine(
+            cfg_t, pt, cfg_d, pd, prefill_slots=args.prefill_slots, **kw)
+    return cfg_t, ServingEngine(cfg_t, pt, cfg_d, pd, **kw)
 
 
 def main():
@@ -118,6 +124,21 @@ def main():
     ap.add_argument("--priorities", default="0",
                     help="CSV of request priorities, cycled across "
                          "--requests (ranked by --sched priority)")
+    ap.add_argument("--loop", default="sync", choices=["sync", "async"],
+                    help="sync = blocking step; async = pipelined step "
+                         "(dispatch round N, stage round N+1's host "
+                         "work in the overlap window, one batched "
+                         "device fetch, commit at the fault barrier)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode workers: "
+                         "admission pinned to --prefill-slots slots, "
+                         "completed prompts handed to decode slots by "
+                         "block-table transfer (paged layout + chunked "
+                         "admission)")
+    ap.add_argument("--prefill-slots", dest="prefill_slots", type=int,
+                    default=1,
+                    help="slots the prefill worker owns under --disagg "
+                         "(the remaining max_batch - N slots decode)")
     ap.add_argument("--sharded", action="store_true",
                     help="place the slot pool + params on a device mesh "
                          "(the serving mesh when 256+ devices are "
@@ -131,9 +152,14 @@ def main():
     print(f"serving {cfg_t.name} (target 4L, draft {args.draft_layers}L, "
           f"method={args.method}, gamma={args.gamma}, "
           f"policy={args.draft_policy}, sched={args.sched}, "
+          f"loop={args.loop}, "
           f"prefill_chunk={args.prefill_chunk or 'off'}, "
           f"prefix_cache={args.prefix_cache}, fanout={args.fanout}, "
           f"max_batch={args.max_batch}, requests={args.requests})")
+    if args.disagg:
+        print(f"disaggregated: prefill worker slots="
+              f"{list(engine.prefill_worker.slots)} decode worker slots="
+              f"{list(engine.decode_worker.slots)}")
     submitted = []
     for r in range(args.requests):
         prompt = jax.random.randint(
@@ -146,8 +172,9 @@ def main():
         submitted.extend(ids if isinstance(ids, list) else [ids])
     results = []
     steps = 0
+    overlap = engine.async_overlap() if args.loop == "async" else None
     while engine.scheduler.has_work():
-        for res in engine.step():
+        for res in engine.step(overlap=overlap):
             results.append(res)
             print(f"request {res.request_id}: {res.n} tokens, "
                   f"{res.rounds} rounds, alpha={res.acceptance_rate:.2f}, "
@@ -176,6 +203,9 @@ def main():
     print(f"admission: prefill_tokens={st.prefill_tokens} "
           f"prefill_tok_per_sec={st.prefill_tokens_per_sec:.0f} "
           f"ttft_p50={p50 * 1e3:.0f}ms ttft_p95={p95 * 1e3:.0f}ms")
+    print(f"step breakdown: host_ms={st.host_ms:.0f} "
+          f"device_ms={st.device_ms:.0f} overlap_ms={st.overlap_ms:.1f} "
+          f"handoffs={st.handoffs}")
     print(f"prefix sharing: hit_rate={st.prefix_hit_rate:.2f} "
           f"({st.prefix_hits}/{st.prefix_lookups} admissions) "
           f"prefix_hit_tokens={st.prefix_hit_tokens}")

@@ -16,6 +16,8 @@ are per-request results, never exceptions out of ``run()``. The
 ``faults`` module is the deterministic chaos harness that exercises
 those paths in CI.
 """
+from .disagg import (DecodeWorker, DisaggServingEngine, Handoff,
+                     HandoffQueue, PrefillWorker)
 from .engine import AdmissionImpossible, ServingEngine
 from .faults import FAULT_KINDS, FaultPlan, FaultSpec, InjectedFault
 from .kv_pool import (KVCachePool, PagedKVCachePool, paged_supported,
@@ -29,6 +31,8 @@ from .scheduler import (FifoPolicy, GroupedPolicy, PriorityPolicy,
 
 __all__ = ["ServingEngine", "ServeRequest", "ServeResult", "EngineStats",
            "RESULT_STATUSES", "AdmissionImpossible",
+           "DisaggServingEngine", "PrefillWorker", "DecodeWorker",
+           "Handoff", "HandoffQueue",
            "FaultPlan", "FaultSpec", "InjectedFault", "FAULT_KINDS",
            "Scheduler", "SlotState", "SchedulingPolicy", "FifoPolicy",
            "PriorityPolicy", "SJFPolicy", "GroupedPolicy",

@@ -1,0 +1,254 @@
+"""Disaggregated prefill/decode serving over one paged KV pool.
+
+Production serving splits prompt processing (prefill: long, compute-
+bound, bursty) from token generation (decode: short steps, latency-
+bound) so neither starves the other. This module layers that split on
+the unified ``ServingEngine``:
+
+  - a ``PrefillWorker`` owns the first ``prefill_slots`` scheduler
+    slots; every admission lands there and streams its prompt into the
+    paged pool in chunks (the PR 5 chunked-admission path, unchanged);
+  - a ``DecodeWorker`` owns the remaining slots; only its slots ever
+    ride decode rounds;
+  - a completed prompt moves between them through the ``HandoffQueue``
+    as a **block-table transfer**: the destination slot retains the
+    source slot's page ids and the source releases them
+    (``PagedKVCachePool.transfer_slot``) — net refcounts unchanged,
+    free list untouched, zero K/V bytes copied. Pages have been the
+    unit of ownership since PR 6, so the "transfer" is bookkeeping.
+
+The handoff barrier is a chaos fault point: a ``handoff_error``
+``FaultSpec`` (``serving/faults.py``) models a prefill worker dying
+mid-transfer. The fault fires BEFORE any ownership moves, so the retry
+contract is the round-retry contract: the parked request re-attempts
+the handoff on a later step with its pages still on the prefill slot
+and its rng stream untouched — survivors stay bitwise, and a request
+whose retry budget is spent retires ``status="failed"`` with zero
+leaked pages.
+
+Determinism: the handoff delays WHEN a request's first decode round
+runs, never WHAT it samples — the first token is still the
+``fold_in(rng, 0)`` draw from the prompt's last-position logits
+(sampled at handoff, riding that step's round as a lazy device scalar),
+and every later draw comes from ``fold_in(rng, round_idx)``. Under
+``method="ar"``, or ``method="sd"`` with ``fixed_window=True`` (no
+batch-composition-dependent window clamp), the disaggregated engine's
+committed streams are bitwise the unified engine's.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from .engine import ServingEngine
+from .faults import InjectedFault
+from .request import ServeResult
+from .scheduler import PREFILLING, SlotState
+
+__all__ = ["Handoff", "HandoffQueue", "PrefillWorker", "DecodeWorker",
+           "DisaggServingEngine"]
+
+
+@dataclass
+class Handoff:
+    """One completed prompt parked for prefill→decode transfer.
+
+    ``slot`` is the prefill-worker slot still owning the pages;
+    ``row`` is the prompt's last-position logits as a LAZY device row
+    (the first-token draw happens at adoption, not here — a retried
+    handoff must not have consumed any randomness)."""
+
+    slot: int
+    state: SlotState
+    row: Any
+
+
+class HandoffQueue:
+    """FIFO of prompts awaiting a decode slot. Host-side bookkeeping
+    only — the KV pages stay exactly where the prefill worker wrote
+    them until ``transfer_slot`` moves the block-table references."""
+
+    def __init__(self):
+        self._q: List[Handoff] = []
+
+    def push(self, h: Handoff) -> None:
+        self._q.append(h)
+
+    def peek(self) -> Handoff:
+        return self._q[0]
+
+    def pop(self) -> Handoff:
+        return self._q.pop(0)
+
+    def discard(self, state: SlotState) -> bool:
+        """Drop a parked entry by its slot state (cancellation/expiry
+        of a request that never reached a decode slot)."""
+        for i, h in enumerate(self._q):
+            if h.state is state:
+                del self._q[i]
+                return True
+        return False
+
+    def clear(self) -> None:
+        self._q.clear()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
+@dataclass(frozen=True)
+class PrefillWorker:
+    """Owns the admission slots: prompts stream into the pool here and
+    never ride a decode round while seated on this worker."""
+
+    slots: Tuple[int, ...]
+    name: str = "prefill-0"
+
+    def owns(self, slot: int) -> bool:
+        return slot in self.slots
+
+
+@dataclass(frozen=True)
+class DecodeWorker:
+    """Owns the decode slots: every draft/verify round batches over
+    (a subset of) these, and only these."""
+
+    slots: Tuple[int, ...]
+    name: str = "decode-0"
+
+    def owns(self, slot: int) -> bool:
+        return slot in self.slots
+
+
+class DisaggServingEngine(ServingEngine):
+    """``ServingEngine`` with admission pinned to a prefill worker's
+    slots and completed prompts handed to the decode worker by
+    block-table transfer (see module docstring).
+
+    ``prefill_slots``: how many of ``max_batch`` slots the prefill
+    worker owns (the rest decode). Token domain, paged layout, chunked
+    admission only — the disaggregation point IS the chunked-prefill
+    completion hook."""
+
+    def __init__(self, *args, prefill_slots: int = 1, **kw):
+        kw.setdefault("prefill_chunk", 32)
+        super().__init__(*args, **kw)
+        if self.domain != "token":
+            raise ValueError("DisaggServingEngine serves the token domain "
+                             "(TPP prefill has no logits row to hand off)")
+        if self.kv_layout != "paged" or self.prefill_chunk is None:
+            raise ValueError("disaggregated serving needs the paged layout "
+                             "with chunked admission (prefill_chunk)")
+        if not (1 <= prefill_slots < self.max_batch):
+            raise ValueError(
+                f"prefill_slots must be in [1, max_batch) = "
+                f"[1, {self.max_batch}), got {prefill_slots}")
+        self.prefill_worker = PrefillWorker(
+            slots=tuple(range(prefill_slots)))
+        self.decode_worker = DecodeWorker(
+            slots=tuple(range(prefill_slots, self.max_batch)))
+        self._admit_slots = self.prefill_worker.slots
+        self._handoffs = HandoffQueue()
+        # the handoff retry budget is SEPARATE from the round-retry
+        # dict: a parked request still counts as PREFILLING, and the
+        # engine clears round retries for prefilling states after every
+        # clean prefill step — which would silently refill a dying
+        # worker's budget
+        self._handoff_retries: Dict[int, int] = {}
+
+    def reset(self, force: bool = False) -> None:
+        super().reset(force)
+        self._handoffs.clear()
+        self._handoff_retries.clear()
+
+    # -- the prefill side: park instead of decode ---------------------------
+    def _on_prompt_complete(self, slot: int, st: SlotState, row) -> None:
+        """A prefill-worker slot finished its prompt: park it (phase
+        stays PREFILLING, so it neither rides rounds nor retires) and
+        queue the handoff. No randomness is consumed here — the first
+        token is drawn when a decode slot adopts the pages, so a
+        retried handoff replays nothing."""
+        assert st.phase == PREFILLING
+        self._handoffs.push(Handoff(slot=slot, state=st, row=row))
+
+    # -- the handoff barrier ------------------------------------------------
+    def _drain_handoffs(self) -> List[ServeResult]:
+        """Move parked prompts into free decode slots, oldest first.
+        Runs at the top of every step (before prefill), so a prompt
+        completing in step k starts decoding in step k+1 — one step of
+        handoff latency, zero extra device syncs. The fault barrier
+        sits BEFORE any ownership movement: a ``handoff_error`` here
+        leaves the queue, the pages and the rng stream untouched, and
+        the retry next step is bitwise the un-failed handoff."""
+        out: List[ServeResult] = []
+        while self._handoffs:
+            free = [i for i in self.decode_worker.slots
+                    if self.scheduler.slots[i] is None]
+            if not free:
+                break
+            if self.faults is not None:
+                try:
+                    self.faults.maybe_raise_handoff_error(
+                        self.scheduler.step_idx, self)
+                except InjectedFault as e:
+                    out.extend(self._on_handoff_failure(e))
+                    break
+            h = self._handoffs.pop()
+            self._adopt_handoff(h, free[0])
+        return out
+
+    def _on_handoff_failure(self, exc: Exception) -> List[ServeResult]:
+        """The prefill worker died at the barrier: charge the HEAD
+        request's retry budget (it is the one whose transfer failed)
+        and leave everything else queued. Past the budget it retires
+        ``status="failed"`` from its prefill slot — pages freed there,
+        nothing leaked, no other stream perturbed."""
+        h = self._handoffs.peek()
+        rid = h.state.request.request_id
+        n = self._handoff_retries.get(rid, 0) + 1
+        if n > self.max_round_retries:
+            self._handoff_retries.pop(rid, None)
+            return [self._retire(
+                h.slot, status="failed",
+                error=f"handoff failed after {n - 1} retries: {exc}")]
+        self._handoff_retries[rid] = n
+        self._stats.retries += 1
+        return []
+
+    def _adopt_handoff(self, h: Handoff, dst: int) -> None:
+        """Commit one handoff: reseat the slot state, transfer the
+        block tables (refcount retain into ``dst``, release from the
+        prefill slot — zero K/V copy), then run the unified engine's
+        prompt-completion hook on the DECODE slot, which samples the
+        ``fold_in(rng, 0)`` first token as a lazy device scalar riding
+        this step's round."""
+        st = h.state
+        self._handoff_retries.pop(st.request.request_id, None)
+        self.scheduler.slots[h.slot] = None
+        st.slot = dst
+        self.scheduler.slots[dst] = st
+        self.pool_t.transfer_slot(h.slot, dst)
+        if self.pool_d is not None:
+            self.pool_d.transfer_slot(h.slot, dst)
+        g = st.request.prefix_group
+        if g is not None:
+            src = self._fork_sources.get(g)
+            if src is not None and src["state"] is st:
+                src["slot"] = dst
+        self._stats.handoffs += 1
+        ServingEngine._on_prompt_complete(self, dst, st, h.row)
+
+    # -- lifecycle ----------------------------------------------------------
+    def _retire(self, slot: int, status: str = "ok",
+                error: Optional[str] = None) -> ServeResult:
+        """A parked request can retire straight off its prefill slot
+        (cancel / deadline / spent handoff retries): purge its queue
+        entry first so the drain never adopts a vacated state."""
+        st = self.scheduler.slots[slot]
+        if st is not None:
+            self._handoffs.discard(st)
+            self._handoff_retries.pop(st.request.request_id, None)
+        return super()._retire(slot, status=status, error=error)

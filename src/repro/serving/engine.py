@@ -122,7 +122,8 @@ def _ar_round_fn(cfg_t):
             # per-lane health: NaN (inf logits go NaN through
             # log_softmax; -inf alone is a legal zero-probability)
             ok = ~jnp.any(jnp.isnan(lp), axis=-1)
-            return select_slots(active, pt2, pt_tree), tok, ok
+            packed = jnp.stack([tok, ok.astype(jnp.int32)], axis=1)
+            return select_slots(active, pt2, pt_tree), packed
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -178,10 +179,13 @@ def _sd_verdict(gamma, r_v, r_a, r_b, d_toks, d_logps, lp_t_all):
 def _sd_round_fn(cfg_t, cfg_d, gamma: int):
     """One batched propose-verify round (static draft window ``gamma``).
 
-    Returns (pool_t', pool_d', d_toks [S,g], A [S], extra [S]). For mask
-    families the returned pools are already rolled back to the committed
-    prefix (and idle slots restored); replay families get the
-    post-forward pools back and the engine re-extends on the host.
+    Returns (pool_t', pool_d', packed [S, g+3]) where packed is the
+    int32 concatenation ``d_toks ‖ A ‖ extra ‖ ok`` — every host-bound
+    scalar of the round in ONE array, so committing costs a single
+    device→host fetch. For mask families the returned pools are already
+    rolled back to the committed prefix (and idle slots restored);
+    replay families get the post-forward pools back and the engine
+    re-extends on the host.
     """
     key = ("sd_round", cfg_t, cfg_d, gamma)
     if key not in _FN_CACHE:
@@ -232,7 +236,10 @@ def _sd_round_fn(cfg_t, cfg_d, gamma: int):
                 rolled = jax.vmap(lambda c, n: rollback_one(cfg_d, c, n))(
                     pd2, len0_d + 1 + A)
                 pd_out = select_slots(active, rolled, pd_tree)
-            return pt_out, pd_out, d_toks, A, extra, ok
+            packed = jnp.concatenate(
+                [d_toks, A[:, None], extra[:, None],
+                 ok.astype(jnp.int32)[:, None]], axis=1)
+            return pt_out, pd_out, packed
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -284,7 +291,10 @@ def _sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy: KernelPolicy,
                                    lp_t_all)
             ok = ~(jnp.any(jnp.isnan(lp_t_all), axis=(1, 2))
                    | jnp.any(jnp.isnan(d_logps), axis=(1, 2)))
-            return pg_t, pg_d, d_toks, A, extra, ok
+            packed = jnp.concatenate(
+                [d_toks, A[:, None], extra[:, None],
+                 ok.astype(jnp.int32)[:, None]], axis=1)
+            return pg_t, pg_d, packed
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -294,10 +304,13 @@ def _prefill_chunk_fn(cfg_t, cfg_d, chunk: int, policy: KernelPolicy,
                       max_kv: int):
     """One batched prefill chunk THROUGH the paged pools: write the
     chunk's K/V into the target (and draft) pages and return the target
-    logits for every chunk position. Lanes with ``nvalid == 0`` (idle /
-    decoding slots sharing the batch) write the null page and are
-    untouched. One compilation per engine (the chunk length is static;
-    partial final chunks ride the same program right-padded)."""
+    logits of each lane's LAST VALID position — the only row the host
+    ever consumes (first-token sampling + fork-source logits), gathered
+    in-jit so the per-step fetch is [S, V] instead of [S, chunk, V].
+    Lanes with ``nvalid == 0`` (idle / decoding slots sharing the batch)
+    write the null page and are untouched. One compilation per engine
+    (the chunk length is static; partial final chunks ride the same
+    program right-padded)."""
     key = ("prefill_chunk", cfg_t, cfg_d, chunk, policy, max_kv)
     if key not in _FN_CACHE:
 
@@ -310,7 +323,9 @@ def _prefill_chunk_fn(cfg_t, cfg_d, chunk: int, policy: KernelPolicy,
                 _, pg_d = tfm.prefill_paged(
                     cfg_d, params_d, pg_d, bt_d, lens, tokens, nvalid,
                     policy=policy, max_kv=max_kv)
-            return lg, pg_t, pg_d
+            last = jnp.maximum(nvalid - 1, 0)
+            lg_last = lg[jnp.arange(lg.shape[0]), last]
+            return lg_last, pg_t, pg_d
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
@@ -329,10 +344,30 @@ def _ar_round_paged_fn(cfg_t, policy: KernelPolicy, max_kv: int):
             rks = jax.vmap(jax.random.fold_in)(keys, ridx)
             tok = jax.vmap(jax.random.categorical)(rks, lp).astype(jnp.int32)
             ok = ~jnp.any(jnp.isnan(lp), axis=-1)
-            return pg_t, tok, ok
+            packed = jnp.stack([tok, ok.astype(jnp.int32)], axis=1)
+            return pg_t, packed
 
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
+
+
+class _InflightRound:
+    """A dispatched-but-uncommitted decode round.
+
+    ``arrays`` is the pytree of un-fetched device outputs (JAX async
+    dispatch returns them immediately); ``commit`` is the host
+    continuation that consumes the fetched numpy pytree and returns the
+    round's quarantined results. ``step()`` fetches every inflight
+    array — round outputs plus any deferred first tokens — in ONE
+    ``jax.device_get`` at its commit point, which is both the
+    batched-transfer fast path of the synchronous loop and the seam the
+    async double-buffer overlaps host work into."""
+
+    __slots__ = ("arrays", "commit")
+
+    def __init__(self, arrays, commit):
+        self.arrays = arrays
+        self.commit = commit
 
 
 class ServingEngine:
@@ -566,6 +601,15 @@ class ServingEngine:
             self._margin = gamma
         self._retries: Dict[int, int] = {}   # request_id -> failed steps
         self._round_fail_streak = 0          # consecutive failed steps
+        # admission slot filter: None = any free slot; the disaggregated
+        # engine restricts admission to its prefill worker's slots
+        self._admit_slots: Optional[Tuple[int, ...]] = None
+        # first tokens sampled as LAZY device scalars by chunked prefill
+        # this step, committed at the step's single batched fetch; each
+        # entry: {"state", "slot", "tok0", "row"} (row = last-position
+        # logits kept only for fork sources, else None). Always fully
+        # drained before step() returns.
+        self._deferred: List[Dict[str, Any]] = []
         self._stats = EngineStats()
         self._results: List[ServeResult] = []
 
@@ -609,6 +653,7 @@ class ServingEngine:
             self._policy_state = self.draft_policy.init_state()
         self._retries = {}
         self._round_fail_streak = 0
+        self._deferred = []
         if self.faults is not None:
             self.faults.reset()
         self._stats = EngineStats()
@@ -683,10 +728,10 @@ class ServingEngine:
             rng=jax.random.fold_in(req.rng, fanout_offset + k),
             extra=req.extra, priority=req.priority, prefix_group=gid,
             times=req.times, t_end=req.t_end, deadline_s=req.deadline_s,
-            max_wall_rounds=req.max_wall_rounds))
+            max_wall_rounds=req.max_wall_rounds, on_tokens=req.on_tokens))
             for k in range(fanout)]
 
-    def step(self) -> List[ServeResult]:
+    def step(self, *, overlap=None) -> List[ServeResult]:
         """One scheduler round; returns requests completed this round.
 
         A mixed round: admission (policy-ordered), then chunked-prefill
@@ -694,7 +739,20 @@ class ServingEngine:
         ONE batched draft+verify (or decode) round for the DECODING
         slots. Slots that finish prefilling inside this step join the
         same step's decode round — with no budget the schedule is
-        exactly the staging engine's.
+        exactly the staging engine's. The step is PIPELINED: the round
+        is dispatched without blocking (chunked first tokens ride it as
+        lazy device scalars), every host-bound output is fetched in ONE
+        ``jax.device_get``, and only then does the host commit — so the
+        synchronous loop already pays a single device sync per step.
+
+        ``overlap``: optional zero-arg callable run in the double-buffer
+        window — after the round (and any deferred first-token draws)
+        has been dispatched, BEFORE the batched fetch that commits it.
+        Host work done there (input staging, arrival polling; see
+        ``run_async``/``async_overlap``) hides behind device compute.
+        The window never touches scheduler state that feeds round
+        composition, so ``step(overlap=...)`` commits bitwise what
+        ``step()`` commits.
 
         A failed phase never raises out of here: admission, prefill and
         the decode round each run under the retry wrapper, which rolls
@@ -706,6 +764,7 @@ class ServingEngine:
         shed sweep runs right after admission, trimming only the
         backlog the slots could not absorb."""
         t0 = time.perf_counter()
+        dev0, ov0 = self._stats.device_ms, self._stats.overlap_ms
         step_idx = self.scheduler.tick()
         done: List[ServeResult] = []
         if self.faults is not None:
@@ -713,7 +772,8 @@ class ServingEngine:
         try:
             done.extend(self._sweep_lifecycle())
             blocked = False
-            for slot, state in self.scheduler.admit():
+            for slot, state in self.scheduler.admit(
+                    allowed=self._admit_slots):
                 if blocked:
                     # admission-order under page pressure: once one
                     # admission defers, later placements wait behind it
@@ -725,6 +785,7 @@ class ServingEngine:
                     blocked = True
                     done.extend(self._on_admit_failure(slot, state, e))
             done.extend(self._shed_sweep())
+            done.extend(self._drain_handoffs())
             if self.prefill_chunk is not None:
                 pref = [(s, st) for s, st in self.scheduler.active()
                         if st.phase == PREFILLING]
@@ -747,9 +808,39 @@ class ServingEngine:
                     done.append(self._retire(slot))
                 else:
                     alive.append((slot, state))
+            inflight: Optional[_InflightRound] = None
+            round_exc: Optional[Exception] = None
             if alive:
                 try:
-                    quarantined = self._dispatch_round(alive)
+                    inflight = self._dispatch_round(alive)
+                except Exception as e:
+                    round_exc = e
+            if overlap is not None and (inflight is not None
+                                        or self._deferred):
+                t_ov = time.perf_counter()
+                try:
+                    overlap()
+                finally:
+                    self._stats.overlap_ms += \
+                        (time.perf_counter() - t_ov) * 1e3
+            round_host = None
+            if inflight is not None or self._deferred:
+                t_dev = time.perf_counter()
+                first_host, round_host = jax.device_get(
+                    ([(d["tok0"], d["row"]) for d in self._deferred],
+                     inflight.arrays if inflight is not None else None))
+                self._stats.device_ms += \
+                    (time.perf_counter() - t_dev) * 1e3
+                # first tokens commit before the round barrier — the
+                # order the staging path (prefill then round) produces
+                done.extend(self._commit_first_tokens(first_host))
+            if round_exc is not None:
+                done.extend(self._on_phase_failure(
+                    alive, round_exc, phase="round"))
+            elif inflight is not None:
+                try:
+                    self._fault_barrier()
+                    quarantined = inflight.commit(round_host)
                 except Exception as e:
                     done.extend(self._on_phase_failure(
                         alive, e, phase="round"))
@@ -767,21 +858,33 @@ class ServingEngine:
         finally:
             if self.faults is not None:
                 self.faults.end_step(self, step_idx)
-        self._stats.wall_s += time.perf_counter() - t0
+        wall = time.perf_counter() - t0
+        self._stats.wall_s += wall
+        self._stats.host_ms += max(
+            0.0, wall * 1e3 - (self._stats.device_ms - dev0)
+            - (self._stats.overlap_ms - ov0))
         self._results.extend(done)
         return done
 
-    def _dispatch_round(self, alive) -> List[ServeResult]:
-        """Route the step's decode round; returns the round's
-        quarantined (non-finite-lane) retirements."""
+    def _dispatch_round(self, alive) -> _InflightRound:
+        """Build and dispatch the step's decode round WITHOUT blocking:
+        the jitted call returns un-fetched device arrays (JAX async
+        dispatch), packaged with the host commit continuation.
+        ``step()`` fetches everything at its single commit point."""
         if self.domain == "tpp":
-            return (self._tpp_sd_step if self.method == "sd"
-                    else self._tpp_ar_step)(alive)
+            return (self._tpp_sd_dispatch if self.method == "sd"
+                    else self._tpp_ar_dispatch)(alive)
         if self.method == "sd":
-            return (self._sd_step_paged if self.kv_layout == "paged"
-                    else self._sd_step)(alive)
-        return (self._ar_step_paged if self.kv_layout == "paged"
-                else self._ar_step)(alive)
+            return (self._sd_dispatch_paged if self.kv_layout == "paged"
+                    else self._sd_dispatch)(alive)
+        return (self._ar_dispatch_paged if self.kv_layout == "paged"
+                else self._ar_dispatch)(alive)
+
+    def _drain_handoffs(self) -> List[ServeResult]:
+        """Disaggregated engines move completed prompts from prefill
+        slots to decode slots here (``serving/disagg.py``); the unified
+        engine has nothing to drain."""
+        return []
 
     def _fault_barrier(self) -> None:
         """Chaos hook, called after a round's device work synchronized
@@ -791,6 +894,72 @@ class ServingEngine:
         if self.faults is not None:
             self.faults.maybe_raise_step_error(self.scheduler.step_idx,
                                                self)
+
+    # -- deferred first tokens + streaming ---------------------------------
+    def _defer_first_token(self, st: SlotState, slot: int, tok0,
+                           row) -> None:
+        """Park a freshly-prefilled slot's first token as a LAZY device
+        scalar: the slot flips to DECODING now (it joins this step's
+        round, which ingests ``tok0`` on device via
+        ``_inject_deferred``), but the host integer only materializes at
+        the step's single batched fetch. TTFT is stamped here — the
+        wall moment the prompt completed, same as the eager path."""
+        st.phase = DECODING
+        st.first_pending = True
+        st.ttft_rounds = self.scheduler.step_idx - st.submit_step
+        st.ttft_s = time.perf_counter() - st.submit_t
+        self._deferred.append({"state": st, "slot": slot, "tok0": tok0,
+                               "row": row})
+
+    def _commit_first_tokens(self, first_host) -> List[ServeResult]:
+        """Commit the step's deferred first tokens from the batched
+        fetch. Runs BEFORE the round's fault barrier and commit: the
+        staging schedule commits first tokens in the prefill phase, and
+        a round retry must find them already in ``out``. Always drains
+        ``_deferred`` completely — deferral never crosses a step."""
+        out: List[ServeResult] = []
+        for d, (tok0, row) in zip(self._deferred, first_host):
+            st = d["state"]
+            st.first_pending = False
+            if self.scheduler.slots[d["slot"]] is not st:
+                continue            # retired mid-step; nothing to commit
+            if row is not None:
+                src = self._fork_sources.get(st.request.prefix_group)
+                if src is not None and src["state"] is st:
+                    src["logits"] = np.asarray(row)
+            tok0 = int(tok0)
+            st.out.append(tok0)
+            st.pending = tok0
+            self._stats.prefills += 1
+            self._stats.tokens += 1
+            self._stream(st, 0)
+        self._deferred = []
+        return out
+
+    def _inject_deferred(self, pending):
+        """Splice this step's deferred first tokens (device scalars)
+        into the round's pending lane — the decode round chains on the
+        prefill output with no host sync in between."""
+        for d in self._deferred:
+            st = d["state"]
+            if st.first_pending and self.scheduler.slots[d["slot"]] is st:
+                pending = pending.at[d["slot"]].set(d["tok0"])
+        return pending
+
+    def _stream(self, st: SlotState, before: int) -> None:
+        """Feed the request's incremental ``on_tokens`` callback with
+        the tokens this commit delivered inside the budget, in commit
+        order: the concatenation of every chunk a request receives is a
+        prefix of its final ``ServeResult.tokens`` (TPP callbacks carry
+        marks; horizon trimming at retire may drop a streamed tail).
+        Callbacks must not mutate the engine — they run mid-commit."""
+        cb = st.request.on_tokens
+        if cb is None:
+            return
+        budget = st.request.max_new_tokens
+        lo, hi = min(before, budget), min(len(st.out), budget)
+        if hi > lo:
+            cb(st.request.request_id, [int(t) for t in st.out[lo:hi]])
 
     def _sweep_lifecycle(self) -> List[ServeResult]:
         """Deadline expiry (queued AND active)."""
@@ -932,6 +1101,48 @@ class ServingEngine:
                 break
         return out
 
+    def _overlap_stage(self) -> None:
+        """Host work safe to run while a round is in flight on device:
+        materialize the host-side prompt copies the NEXT step's prefill
+        staging and admission matching will need. Reads scheduler state
+        but never mutates it — round composition is already fixed when
+        this runs, so the pipelined step stays bitwise the sync step."""
+        for _, st in self.scheduler.active():
+            if st.phase == PREFILLING:
+                st.request.prompt_np()
+        for e in self.scheduler.pending[:self.max_batch]:
+            if not e.request.is_tpp:
+                e.request.prompt_np()
+
+    def async_overlap(self, poll=None):
+        """The double-buffer window body for ``step(overlap=...)``:
+        warm next-step host state (``_overlap_stage``), then run the
+        caller's ``poll`` (arrival intake, stream draining) — all while
+        the dispatched round is still computing on device."""
+        def window():
+            self._overlap_stage()
+            if poll is not None:
+                poll()
+        return window
+
+    def run_async(self, max_steps: Optional[int] = None, *,
+                  poll=None) -> List[ServeResult]:
+        """``run()`` with the double-buffered pipeline engaged: each
+        step dispatches its round, then overlaps next-step host staging
+        (and the optional ``poll`` callback) with device compute before
+        the single batched fetch commits the round. Token streams are
+        bitwise ``run()``'s — same ``fold_in(rng, round_idx)`` streams,
+        same commit order; only host wall-time moves."""
+        ov = self.async_overlap(poll)
+        out: List[ServeResult] = []
+        steps = 0
+        while self.scheduler.has_work():
+            out.extend(self.step(overlap=ov))
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out
+
     def stats(self) -> EngineStats:
         return self._stats
 
@@ -993,7 +1204,7 @@ class ServingEngine:
             if (self.prefix_cache is not None and not req.extra
                     and self.prefill_chunk is not None):
                 hit, runs = self.prefix_cache.match(
-                    np.asarray(req.prompt), req.prompt_len - 1)
+                    req.prompt_np(), req.prompt_len - 1)
             adopted = hit // self.pool_t.page
             # admission under memory pressure: reserve the request's
             # WHOLE lifetime (prefix + prompt + budget) up front, so
@@ -1152,6 +1363,7 @@ class ServingEngine:
         state.ttft_s = time.perf_counter() - state.submit_t
         self._stats.prefills += 1
         self._stats.tokens += 1
+        self._stream(state, 0)
 
     def _prefill_step(self) -> None:
         """Chunked-prefill work for this step: batched ``prefill_paged``
@@ -1160,7 +1372,9 @@ class ServingEngine:
         growth is per chunk, always inside the slot's admission-time
         reservation, so it can never exhaust the free list. A slot
         whose prompt completes samples its first token from the final
-        chunk's last valid row — bitwise the staging path's draw."""
+        chunk's last valid row — bitwise the staging path's draw — as a
+        LAZY device draw the step's single commit fetch materializes
+        (``_on_prompt_complete``)."""
         budget = self.prefill_budget or (1 << 30)
         chunk = self.prefill_chunk
         t0 = time.perf_counter()
@@ -1179,8 +1393,8 @@ class ServingEngine:
                 n = min(chunk, st.request.prompt_len - st.prefilled, budget)
                 if n <= 0:
                     continue                     # budget spent this call
-                tokens[slot, :n] = np.asarray(
-                    st.request.prompt[st.prefilled:st.prefilled + n])
+                tokens[slot, :n] = \
+                    st.request.prompt_np()[st.prefilled:st.prefilled + n]
                 nvalid[slot] = n
                 lens[slot] = st.prefilled
                 budget -= n
@@ -1197,7 +1411,7 @@ class ServingEngine:
                 break
             fn = _prefill_chunk_fn(self.cfg_t, self.cfg_d if sd else None,
                                    chunk, self.policy, self.max_len)
-            lg, pg_t, pg_d = fn(
+            lg_last, pg_t, pg_d = fn(
                 self.params_t, self.params_d, self.pool_t.pages,
                 self.pool_t.device_tables(),
                 self.pool_d.pages if sd else None,
@@ -1214,19 +1428,39 @@ class ServingEngine:
                     self.pool_d.lens[slot] = st.prefilled
                 self._stats.prefill_tokens += n
                 if st.prefilled == st.request.prompt_len:
-                    src = (self._fork_sources.get(st.request.prefix_group)
-                           if st.request.prefix_group is not None else None)
-                    if src is not None and src["state"] is st:
-                        # the group's siblings sample THEIR first token
-                        # from this temperature-free row
-                        src["logits"] = np.asarray(lg[slot, n - 1])
-                        src["ready"] = True
-                    lp = jax.nn.log_softmax(
-                        lg[slot, n - 1] / st.request.temperature)
-                    tok0 = int(jax.random.categorical(
-                        jax.random.fold_in(st.request.rng, 0), lp))
-                    self._first_token(st, tok0)
+                    self._on_prompt_complete(slot, st, lg_last[slot])
         self._stats.prefill_s += time.perf_counter() - t0
+
+    def _on_prompt_complete(self, slot: int, st: SlotState, row) -> None:
+        """A chunked slot's prompt is fully in the pool; ``row`` is the
+        final chunk's last-valid-position logits as a LAZY device row.
+        The first token is the same ``fold_in(rng, 0)`` draw as the
+        staging path, built here as un-fetched device ops so the step's
+        single batched fetch materializes it with the round outputs —
+        the decode round ingests it as a device value, so a slot that
+        completes prefill still joins this step's round, exactly the
+        synchronous schedule. The disaggregated engine overrides this
+        to park the slot for handoff to a decode worker instead."""
+        req = st.request
+        src = (self._fork_sources.get(req.prefix_group)
+               if req.prefix_group is not None else None)
+        is_src = src is not None and src["state"] is st
+        if is_src:
+            # the group's siblings sample THEIR first token from this
+            # temperature-free row; it materializes at the commit fetch,
+            # before any sibling's next-step admission reads it
+            src["ready"] = True
+        lp = jax.nn.log_softmax(row / req.temperature)
+        tok0 = jax.random.categorical(jax.random.fold_in(req.rng, 0), lp)
+        if req.max_new_tokens == 1:
+            # the whole budget is the first token: commit eagerly so the
+            # slot retires (freeing its pages) BEFORE this step's round,
+            # the schedule the staging path produces
+            if is_src:
+                src["logits"] = np.asarray(row)
+            self._first_token(st, int(tok0))
+            return
+        self._defer_first_token(st, slot, tok0, row if is_src else None)
 
     # -- TPP (event-sequence) serving --------------------------------------
     def _tpp_enc(self, req: ServeRequest):
@@ -1241,7 +1475,7 @@ class ServingEngine:
         enc_k = np.full((n,), int(self.cfg_t.num_marks), np.int32)
         if n > 1:
             enc_t[1:] = req.times[:-1]
-            enc_k[1:] = np.asarray(req.prompt)[:-1]
+            enc_k[1:] = req.prompt_np()[:-1]
         return enc_t, enc_k
 
     def _tpp_admit(self, slot: int, state: SlotState) -> bool:
@@ -1307,7 +1541,7 @@ class ServingEngine:
         req = state.request
         if req.prompt_len > 0:
             state.t_pend = float(req.times[-1])
-            state.pending = int(np.asarray(req.prompt)[-1])
+            state.pending = int(req.prompt_np()[-1])
         else:
             state.t_pend = 0.0
             state.pending = int(self.cfg_t.num_marks)
@@ -1404,10 +1638,12 @@ class ServingEngine:
         return (jnp.asarray(t_pend), jnp.asarray(k_pend), jnp.stack(keys),
                 jnp.asarray(ridx))
 
-    def _tpp_sd_step(self, alive) -> List[ServeResult]:
-        """One paged TPP propose-verify round (fixed window — see the
-        constructor note). Commit is append + block-table truncation,
-        exactly like the token path, plus the float event-time lane."""
+    def _tpp_sd_dispatch(self, alive) -> _InflightRound:
+        """Dispatch one paged TPP propose-verify round (fixed window —
+        see the constructor note). Commit is append + block-table
+        truncation, exactly like the token path, plus the float
+        event-time lane; all host-bound scalars arrive as one int32
+        [S, g+3] + one float32 [S, g+1] packed pair."""
         gamma = self.tpp_gamma
         len0_t, len0_d = {}, {}
         for slot, _ in alive:
@@ -1420,47 +1656,52 @@ class ServingEngine:
         t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
         fn = tpp_rounds.tpp_sd_round_paged_fn(
             self.cfg_t, self.cfg_d, gamma, self.policy, self.max_len)
-        pg_t, pg_d, d_t, d_k, A, new_t, new_k, okl = fn(
+        pg_t, pg_d, packed_i, packed_f = fn(
             self.params_t, self.params_d, self.pool_t.pages,
             self.pool_d.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), self.pool_d.device_tables(),
             self.pool_d.device_lens(), t_pend, k_pend, keys, ridx)
         self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
-        d_t, d_k, A = np.asarray(d_t), np.asarray(d_k), np.asarray(A)
-        new_t, new_k, okl = (np.asarray(new_t), np.asarray(new_k),
-                             np.asarray(okl))
-        self._fault_barrier()
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        delivered = 0
-        for slot, st in good:
-            a = int(A[slot])
-            budget = st.request.max_new_tokens
-            before = min(len(st.out), budget)
-            st.out.extend(int(m) for m in d_k[slot, :a])
-            st.out_times.extend(float(t) for t in d_t[slot, :a])
-            st.out.append(int(new_k[slot]))
-            st.out_times.append(float(new_t[slot]))
-            st.pending = int(new_k[slot])
-            st.t_pend = float(new_t[slot])
-            st.round_idx += 1
-            st.drafted += gamma
-            st.accepted += a
-            st.rounds += 1
-            # the over-budget tail is trimmed at retire (out and
-            # out_times must stay aligned); count delivered within it
-            delivered += min(len(st.out), budget) - before
-            self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
-            self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
-        self._stats.tokens += delivered
-        self._stats.drafted += gamma * len(good)
-        self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
-        self._stats.target_forwards += 1
-        self._stats.draft_forwards += gamma
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
 
-    def _tpp_ar_step(self, alive) -> List[ServeResult]:
-        """One committed event per alive slot through the paged pool."""
+        def commit(host) -> List[ServeResult]:
+            pk_i, pk_f = host
+            d_k, A = pk_i[:, :gamma], pk_i[:, gamma]
+            new_k, okl = pk_i[:, gamma + 1], pk_i[:, gamma + 2].astype(bool)
+            d_t, new_t = pk_f[:, :gamma], pk_f[:, gamma]
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            delivered = 0
+            for slot, st in good:
+                a = int(A[slot])
+                budget = st.request.max_new_tokens
+                before = min(len(st.out), budget)
+                st.out.extend(int(m) for m in d_k[slot, :a])
+                st.out_times.extend(float(t) for t in d_t[slot, :a])
+                st.out.append(int(new_k[slot]))
+                st.out_times.append(float(new_t[slot]))
+                st.pending = int(new_k[slot])
+                st.t_pend = float(new_t[slot])
+                st.round_idx += 1
+                st.drafted += gamma
+                st.accepted += a
+                st.rounds += 1
+                # the over-budget tail is trimmed at retire (out and
+                # out_times must stay aligned); count delivered within it
+                delivered += min(len(st.out), budget) - before
+                self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
+                self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
+                self._stream(st, before)
+            self._stats.tokens += delivered
+            self._stats.drafted += gamma * len(good)
+            self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
+            self._stats.target_forwards += 1
+            self._stats.draft_forwards += gamma
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound((packed_i, packed_f), commit)
+
+    def _tpp_ar_dispatch(self, alive) -> _InflightRound:
+        """Dispatch one committed event per alive slot (paged pool)."""
         len0 = {}
         for slot, _ in alive:
             len0[slot] = int(self.pool_t.lens[slot])
@@ -1469,26 +1710,31 @@ class ServingEngine:
         t_pend, k_pend, keys, ridx = self._tpp_round_inputs(alive)
         fn = tpp_rounds.tpp_ar_round_paged_fn(self.cfg_t, self.policy,
                                               self.max_len)
-        pg_t, new_t, new_k, okl = fn(
+        pg_t, packed_i, new_t = fn(
             self.params_t, self.pool_t.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), t_pend, k_pend, keys, ridx)
         self.pool_t.pages = pg_t
-        new_t, new_k, okl = (np.asarray(new_t), np.asarray(new_k),
-                             np.asarray(okl))
-        self._fault_barrier()
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        for slot, st in good:
-            self.pool_t.truncate(slot, len0[slot] + 1)
-            st.out.append(int(new_k[slot]))
-            st.out_times.append(float(new_t[slot]))
-            st.pending = int(new_k[slot])
-            st.t_pend = float(new_t[slot])
-            st.round_idx += 1
-            st.rounds += 1
-        self._stats.tokens += len(good)
-        self._stats.target_forwards += 1
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
+
+        def commit(host) -> List[ServeResult]:
+            pk_i, new_t = host
+            new_k, okl = pk_i[:, 0], pk_i[:, 1].astype(bool)
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            for slot, st in good:
+                before = min(len(st.out), st.request.max_new_tokens)
+                self.pool_t.truncate(slot, len0[slot] + 1)
+                st.out.append(int(new_k[slot]))
+                st.out_times.append(float(new_t[slot]))
+                st.pending = int(new_k[slot])
+                st.t_pend = float(new_t[slot])
+                st.round_idx += 1
+                st.rounds += 1
+                self._stream(st, before)
+            self._stats.tokens += len(good)
+            self._stats.target_forwards += 1
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound((packed_i, new_t), commit)
 
     def fanout_headroom(self, prompt_len: int, max_new_tokens: int) -> int:
         """How many members of ONE fan-out group over a shared
@@ -1580,8 +1826,13 @@ class ServingEngine:
         gamma = self.draft_policy.gamma(self._policy_state)
         if self.fixed_window:
             return gamma
-        max_remaining = max(st.request.max_new_tokens - len(st.out)
-                            for _, st in alive)
+        # a deferred first token is already committed as far as the
+        # budget is concerned (the staging schedule has it in `out` by
+        # round time); count it or the window drifts from staging
+        max_remaining = max(
+            st.request.max_new_tokens - len(st.out)
+            - (1 if st.first_pending else 0)
+            for _, st in alive)
         gamma = min(gamma, max(1, max_remaining - 1))
         for cfg, pool in ((self.cfg_t, self.pool_t),
                           (self.cfg_d, self.pool_d)):
@@ -1616,61 +1867,66 @@ class ServingEngine:
                 gamma -= 1
         return gamma
 
-    def _sd_step(self, alive) -> List[ServeResult]:
+    def _sd_dispatch(self, alive) -> _InflightRound:
         gamma = self._clamped_gamma(alive)
         pending, keys, ridx, temps, active = self._round_inputs(alive)
         fn = _sd_round_fn(self.cfg_t, self.cfg_d, gamma)
         pt_ckpt, pd_ckpt = self.pool_t.tree, self.pool_d.tree
-        pt_out, pd_out, d_toks, A, extra, okl = fn(
+        pt_out, pd_out, packed = fn(
             self.params_t, self.params_d, pt_ckpt, pd_ckpt, pending, keys,
             ridx, temps, active)
-        d_toks, A, extra, okl = (np.asarray(d_toks), np.asarray(A),
-                                 np.asarray(extra), np.asarray(okl))
-        self._fault_barrier()
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        commits = {}
-        delivered = 0
-        for slot, st in good:
-            a = int(A[slot])
-            toks = [int(st.pending)] + [int(t) for t in d_toks[slot, :a]]
-            commits[slot] = (toks, a == gamma)
-            before = len(st.out)
-            st.out.extend(toks[1:] + [int(extra[slot])])
-            st.pending = int(extra[slot])
-            st.round_idx += 1
-            st.drafted += gamma
-            st.accepted += a
-            st.rounds += 1
-            if len(st.out) > st.request.max_new_tokens:
-                del st.out[st.request.max_new_tokens:]
-            delivered += len(st.out) - before
-        # quarantined lanes never enter `commits`, so the replay
-        # families skip their re-extend and the mask families' rolled
-        # slots are simply never read again (admission overwrites)
-        self.pool_t.tree = self._rolled_pool(
-            self.cfg_t, self.params_t, pt_ckpt, pt_out, commits)
-        self.pool_d.tree = self._rolled_pool(
-            self.cfg_d, self.params_d, pd_ckpt, pd_out, commits)
-        acc_sum = int(sum(int(A[s]) for s, _ in good))
-        # one policy update per request, as in single-request serving —
-        # a batch-aggregate (gamma*n, sum A) would only ever grow the
-        # window when EVERY slot fully accepts, collapsing gamma under
-        # real mixed traffic
-        for slot, _ in good:
-            self._policy_state = self.draft_policy.update(
-                self._policy_state, gamma, int(A[slot]))
-        self._stats.tokens += delivered
-        self._stats.drafted += gamma * len(good)
-        self._stats.accepted += acc_sum
-        self._stats.target_forwards += 1
-        # gamma batched draft forwards produce the round's gamma draft
-        # distributions; the trailing extend only maintains the draft
-        # cache and is not a drafting forward (same convention as the
-        # host loops' `drafted` counter in sampling/loops.py, so for a
-        # single-slot engine draft_forwards == drafted exactly)
-        self._stats.draft_forwards += gamma
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
+
+        def commit(out) -> List[ServeResult]:
+            d_toks = out[:, :gamma]
+            A, extra = out[:, gamma], out[:, gamma + 1]
+            okl = out[:, gamma + 2].astype(bool)
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            commits = {}
+            delivered = 0
+            for slot, st in good:
+                a = int(A[slot])
+                toks = [int(st.pending)] + [int(t) for t in d_toks[slot, :a]]
+                commits[slot] = (toks, a == gamma)
+                before = len(st.out)
+                st.out.extend(toks[1:] + [int(extra[slot])])
+                st.pending = int(extra[slot])
+                st.round_idx += 1
+                st.drafted += gamma
+                st.accepted += a
+                st.rounds += 1
+                if len(st.out) > st.request.max_new_tokens:
+                    del st.out[st.request.max_new_tokens:]
+                delivered += len(st.out) - before
+                self._stream(st, before)
+            # quarantined lanes never enter `commits`, so the replay
+            # families skip their re-extend and the mask families' rolled
+            # slots are simply never read again (admission overwrites)
+            self.pool_t.tree = self._rolled_pool(
+                self.cfg_t, self.params_t, pt_ckpt, pt_out, commits)
+            self.pool_d.tree = self._rolled_pool(
+                self.cfg_d, self.params_d, pd_ckpt, pd_out, commits)
+            acc_sum = int(sum(int(A[s]) for s, _ in good))
+            # one policy update per request, as in single-request serving —
+            # a batch-aggregate (gamma*n, sum A) would only ever grow the
+            # window when EVERY slot fully accepts, collapsing gamma under
+            # real mixed traffic
+            for slot, _ in good:
+                self._policy_state = self.draft_policy.update(
+                    self._policy_state, gamma, int(A[slot]))
+            self._stats.tokens += delivered
+            self._stats.drafted += gamma * len(good)
+            self._stats.accepted += acc_sum
+            self._stats.target_forwards += 1
+            # gamma batched draft forwards produce the round's gamma draft
+            # distributions; the trailing extend only maintains the draft
+            # cache and is not a drafting forward (same convention as the
+            # host loops' `drafted` counter in sampling/loops.py, so for a
+            # single-slot engine draft_forwards == drafted exactly)
+            self._stats.draft_forwards += gamma
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound(packed, commit)
 
     def _quarantine(self, alive, okl) -> List[ServeResult]:
         """Retire every lane whose round health flag came back False
@@ -1685,11 +1941,13 @@ class ServingEngine:
                     error=f"non-finite logits in round {st.round_idx}"))
         return out
 
-    def _sd_step_paged(self, alive) -> List[ServeResult]:
-        """One paged propose-verify round: grow block tables for the
-        window's writes, run the jitted paged round (spec-verify kernel
-        attention), then commit/rollback by block-table truncation —
-        no cache rewrite in either direction."""
+    def _sd_dispatch_paged(self, alive) -> _InflightRound:
+        """Dispatch one paged propose-verify round: grow block tables
+        for the window's writes and launch the jitted paged round
+        (spec-verify kernel attention). Commit/rollback stays host-side
+        block-table truncation, driven by ONE packed [S, gamma+3] fetch
+        (d_toks ‖ A ‖ extra ‖ ok) instead of four per-array
+        transfers."""
         gamma = self._clamped_gamma(alive)
         len0_t, len0_d = {}, {}
         for slot, _ in alive:
@@ -1703,72 +1961,86 @@ class ServingEngine:
             self.pool_t.ensure_blocks(slot, len0_t[slot] + gamma + 1)
             self.pool_d.ensure_blocks(slot, len0_d[slot] + gamma + 1)
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
+        pending = self._inject_deferred(pending)
         fn = _sd_round_paged_fn(self.cfg_t, self.cfg_d, gamma, self.policy,
                                 self.max_len)
-        pg_t, pg_d, d_toks, A, extra, okl = fn(
+        pg_t, pg_d, packed = fn(
             self.params_t, self.params_d, self.pool_t.pages,
             self.pool_d.pages, self.pool_t.device_tables(),
             self.pool_t.device_lens(), self.pool_d.device_tables(),
             self.pool_d.device_lens(), pending, keys, ridx, temps)
         self.pool_t.pages, self.pool_d.pages = pg_t, pg_d
-        d_toks, A, extra, okl = (np.asarray(d_toks), np.asarray(A),
-                                 np.asarray(extra), np.asarray(okl))
-        self._fault_barrier()
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        delivered = 0
-        for slot, st in good:
-            a = int(A[slot])
-            before = len(st.out)
-            st.out.extend([int(t) for t in d_toks[slot, :a]]
-                          + [int(extra[slot])])
-            st.pending = int(extra[slot])
-            st.round_idx += 1
-            st.drafted += gamma
-            st.accepted += a
-            st.rounds += 1
-            if len(st.out) > st.request.max_new_tokens:
-                del st.out[st.request.max_new_tokens:]
-            delivered += len(st.out) - before
-            # rollback == truncation: surplus pages return to the free
-            # list; the stale K/V past the committed length is causally
-            # invisible until the next round overwrites it
-            self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
-            self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
-        for slot, _ in good:
-            self._policy_state = self.draft_policy.update(
-                self._policy_state, gamma, int(A[slot]))
-        self._stats.tokens += delivered
-        self._stats.drafted += gamma * len(good)
-        self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
-        self._stats.target_forwards += 1
-        self._stats.draft_forwards += gamma
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
 
-    def _ar_step_paged(self, alive) -> List[ServeResult]:
+        def commit(out) -> List[ServeResult]:
+            d_toks = out[:, :gamma]
+            A, extra = out[:, gamma], out[:, gamma + 1]
+            okl = out[:, gamma + 2].astype(bool)
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            delivered = 0
+            for slot, st in good:
+                a = int(A[slot])
+                before = len(st.out)
+                st.out.extend([int(t) for t in d_toks[slot, :a]]
+                              + [int(extra[slot])])
+                st.pending = int(extra[slot])
+                st.round_idx += 1
+                st.drafted += gamma
+                st.accepted += a
+                st.rounds += 1
+                if len(st.out) > st.request.max_new_tokens:
+                    del st.out[st.request.max_new_tokens:]
+                delivered += len(st.out) - before
+                # rollback == truncation: surplus pages return to the
+                # free list; the stale K/V past the committed length is
+                # causally invisible until the next round overwrites it
+                self.pool_t.truncate(slot, len0_t[slot] + 1 + a)
+                self.pool_d.truncate(slot, len0_d[slot] + 1 + a)
+                self._stream(st, before)
+            for slot, _ in good:
+                self._policy_state = self.draft_policy.update(
+                    self._policy_state, gamma, int(A[slot]))
+            self._stats.tokens += delivered
+            self._stats.drafted += gamma * len(good)
+            self._stats.accepted += int(sum(int(A[s]) for s, _ in good))
+            self._stats.target_forwards += 1
+            self._stats.draft_forwards += gamma
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound(packed, commit)
+
+    def _ar_dispatch_paged(self, alive) -> _InflightRound:
+        len0 = {}
         for slot, _ in alive:
+            len0[slot] = int(self.pool_t.lens[slot])
             self.pool_t.cow_for_append(slot)
-            self.pool_t.ensure_blocks(slot, int(self.pool_t.lens[slot]) + 1)
+            self.pool_t.ensure_blocks(slot, len0[slot] + 1)
         pending, keys, ridx, temps, _ = self._round_inputs(alive)
+        pending = self._inject_deferred(pending)
         fn = _ar_round_paged_fn(self.cfg_t, self.policy, self.max_len)
-        pg_t, tok, okl = fn(self.params_t, self.pool_t.pages,
-                            self.pool_t.device_tables(),
-                            self.pool_t.device_lens(), pending, keys, ridx,
-                            temps)
+        pg_t, packed = fn(self.params_t, self.pool_t.pages,
+                          self.pool_t.device_tables(),
+                          self.pool_t.device_lens(), pending, keys, ridx,
+                          temps)
         self.pool_t.pages = pg_t
-        tok, okl = np.asarray(tok), np.asarray(okl)
-        self._fault_barrier()
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        for slot, st in good:
-            self.pool_t.truncate(slot, int(self.pool_t.lens[slot]) + 1)
-            st.out.append(int(tok[slot]))
-            st.pending = int(tok[slot])
-            st.round_idx += 1
-            st.rounds += 1
-        self._stats.tokens += len(good)
-        self._stats.target_forwards += 1
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
+
+        def commit(out) -> List[ServeResult]:
+            tok, okl = out[:, 0], out[:, 1].astype(bool)
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            for slot, st in good:
+                before = len(st.out)
+                self.pool_t.truncate(slot, len0[slot] + 1)
+                st.out.append(int(tok[slot]))
+                st.pending = int(tok[slot])
+                st.round_idx += 1
+                st.rounds += 1
+                self._stream(st, before)
+            self._stats.tokens += len(good)
+            self._stats.target_forwards += 1
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound(packed, commit)
 
     def _rolled_pool(self, cfg, params, ckpt_tree, out_tree, commits):
         """Final pool for this round. Mask families were rolled back
@@ -1789,24 +2061,29 @@ class ServingEngine:
             tree = jax.tree.map(lambda p, c: p.at[slot].set(c), tree, cache)
         return tree
 
-    def _ar_step(self, alive) -> List[ServeResult]:
+    def _ar_dispatch(self, alive) -> _InflightRound:
         pending, keys, ridx, temps, active = self._round_inputs(alive)
         fn = _ar_round_fn(self.cfg_t)
-        pt_out, tok, okl = fn(self.params_t, self.pool_t.tree, pending,
-                              keys, ridx, temps, active)
-        tok, okl = np.asarray(tok), np.asarray(okl)
-        self._fault_barrier()
-        self.pool_t.tree = pt_out
-        good = [(s, st) for s, st in alive if bool(okl[s])]
-        for slot, st in good:
-            st.out.append(int(tok[slot]))
-            st.pending = int(tok[slot])
-            st.round_idx += 1
-            st.rounds += 1
-        self._stats.tokens += len(good)
-        self._stats.target_forwards += 1
-        self._note_group_round(alive)
-        return self._quarantine(alive, okl)
+        pt_out, packed = fn(self.params_t, self.pool_t.tree, pending,
+                            keys, ridx, temps, active)
+
+        def commit(out) -> List[ServeResult]:
+            tok, okl = out[:, 0], out[:, 1].astype(bool)
+            self.pool_t.tree = pt_out
+            good = [(s, st) for s, st in alive if bool(okl[s])]
+            for slot, st in good:
+                before = len(st.out)
+                st.out.append(int(tok[slot]))
+                st.pending = int(tok[slot])
+                st.round_idx += 1
+                st.rounds += 1
+                self._stream(st, before)
+            self._stats.tokens += len(good)
+            self._stats.target_forwards += 1
+            self._note_group_round(alive)
+            return self._quarantine(alive, okl)
+
+        return _InflightRound(packed, commit)
 
     def _retire(self, slot: int, status: str = "ok",
                 error: Optional[str] = None) -> ServeResult:
@@ -1841,7 +2118,7 @@ class ServingEngine:
                     if req.is_tpp:
                         keys_arr = tpp_history_key(*self._tpp_enc(req))
                     else:
-                        keys_arr = np.asarray(req.prompt)
+                        keys_arr = req.prompt_np()
                     self.prefix_cache.insert(keys_arr, pages)
             # finish returns the slot's (unshared) pages to the free
             # list; shared pages just drop one reference

@@ -3,7 +3,7 @@
 A ``FaultPlan`` is a list of ``FaultSpec``s the engine consults at fixed
 points of every ``step()``; faults fire by the scheduler's step index,
 never by wall clock or randomness, so a chaos run is exactly
-reproducible — CI asserts on it like on any other run. Four kinds:
+reproducible — CI asserts on it like on any other run. Five kinds:
 
   ``step_error``       raise ``InjectedFault`` out of the device round
                        AFTER the forward synchronizes but BEFORE any
@@ -22,6 +22,13 @@ reproducible — CI asserts on it like on any other run. Four kinds:
                        free — no page is ever lost to the harness).
   ``slow_step``        sleep before the step's work — deadline and
                        goodput accounting under a stalled device.
+  ``handoff_error``    raise ``InjectedFault`` at the disaggregated
+                       engine's prefill→decode handoff barrier — a
+                       prefill worker dying mid-transfer. Retried with
+                       the same rollback contract as ``step_error``
+                       (the handoff re-runs, pages still owned by the
+                       prefill slot); a unified engine never reaches
+                       the barrier, so the spec is inert there.
 
 The injection contract the chaos tests pin: under any plan plus any
 cancel schedule, every SURVIVING request's committed tokens are bitwise
@@ -34,7 +41,8 @@ import time
 from dataclasses import dataclass
 from typing import Any, List, Optional, Tuple
 
-FAULT_KINDS = ("step_error", "nan_lane", "page_exhaustion", "slow_step")
+FAULT_KINDS = ("step_error", "nan_lane", "page_exhaustion", "slow_step",
+               "handoff_error")
 
 
 class InjectedFault(RuntimeError):
@@ -162,3 +170,15 @@ class FaultPlan:
         if sp is not None:
             self._record(step, "step_error", engine)
             raise InjectedFault(f"{sp.message} (step {step})")
+
+    def maybe_raise_handoff_error(self, step: int, engine) -> None:
+        """Fires at the disaggregated prefill→decode handoff barrier
+        (``serving/disagg.py``), BEFORE any ownership moves — the retry
+        finds the pages still on the prefill slot. Unified engines
+        never call this, so a ``handoff_error`` spec injects (and logs)
+        nothing there."""
+        sp = self._active("handoff_error", step)
+        if sp is not None:
+            self._record(step, "handoff_error", engine)
+            raise InjectedFault(
+                f"injected prefill-worker handoff failure (step {step})")

@@ -385,6 +385,28 @@ class PagedKVCachePool:
         self.lens[dst] = upto_len
         return nb
 
+    def transfer_slot(self, src: int, dst: int) -> int:
+        """Move ``src``'s whole cache to empty slot ``dst`` — the
+        disaggregated prefill→decode handoff. Pure block-table
+        transfer: each page is retained into ``dst`` then released
+        from ``src`` (``free_slot``), so net refcounts are unchanged,
+        the free list is untouched, and zero K/V bytes move. Shared
+        pages (fork/prefix-cache) stay shared — ownership of ``src``'s
+        REFERENCES moves, not the pages themselves. Returns the number
+        of pages transferred."""
+        if int(self.n_blocks[dst]) != 0 or int(self.lens[dst]) != 0:
+            raise ValueError(f"transfer target slot {dst} is not empty")
+        nb = int(self.n_blocks[src])
+        for b in range(nb):
+            pid = int(self.tables[src, b])
+            self.retain(pid)
+            self.tables[dst, b] = pid
+        self.n_blocks[dst] = nb
+        self.lens[dst] = int(self.lens[src])
+        self.reserved[dst] = int(self.reserved[src])
+        self.free_slot(src)
+        return nb
+
     def adopt(self, slot: int, page_ids: List[int]) -> None:
         """Adopt a prefix-cache run of FULL pages into an empty slot:
         the matched prefix is already resident, prefill resumes at

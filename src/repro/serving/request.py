@@ -75,6 +75,14 @@ class ServeRequest:
                       decode alike); ``None`` = none. The round-count
                       analogue of ``deadline_s`` for deterministic
                       tests and step-metered deployments.
+    on_tokens       : optional streaming callback
+                      ``on_tokens(request_id, tokens: List[int])``, fed
+                      at every engine commit with the newly committed
+                      tokens in commit order; the concatenation of all
+                      chunks a request receives is a prefix of its
+                      final ``ServeResult.tokens``. Runs mid-commit on
+                      the engine thread — it must not call back into
+                      the engine. Never affects the sampled tokens.
     """
 
     prompt: Any
@@ -88,7 +96,12 @@ class ServeRequest:
     t_end: Optional[float] = None
     deadline_s: Optional[float] = None
     max_wall_rounds: Optional[int] = None
+    on_tokens: Optional[Any] = field(default=None, repr=False,
+                                     compare=False)
     request_id: int = field(default_factory=lambda: next(_REQUEST_IDS))
+    # lazily cached host copy of ``prompt`` (see ``prompt_np``)
+    _prompt_np: Optional[np.ndarray] = field(default=None, repr=False,
+                                             compare=False)
 
     def __post_init__(self):
         self.prompt = jnp.asarray(self.prompt, jnp.int32)
@@ -114,6 +127,17 @@ class ServeRequest:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    def prompt_np(self) -> np.ndarray:
+        """Host-side copy of the prompt, fetched once and cached.
+
+        Every host consumer (prefill staging, prefix-cache matching,
+        retire-time cache keys) reads this instead of pulling the
+        device array per use — and the async loop's overlap window can
+        warm it while a round is still computing on device."""
+        if self._prompt_np is None:
+            self._prompt_np = np.asarray(self.prompt)
+        return self._prompt_np
 
     @property
     def is_tpp(self) -> bool:
@@ -227,6 +251,16 @@ class EngineStats:
     faults_injected: int = 0     # FaultPlan injections that fired
     goodput_tokens: int = 0      # tokens delivered by "ok" requests
                                  # WITHIN their deadline
+    # per-phase wall breakdown of ``step()`` (milliseconds): device_ms
+    # is time blocked on the batched device fetch, overlap_ms is host
+    # work hidden inside the double-buffer window while the round
+    # computes, host_ms is the remaining (non-overlapped) host time —
+    # so overlap_ms > 0 is the observable proof the async loop overlaps
+    host_ms: float = 0.0
+    device_ms: float = 0.0
+    overlap_ms: float = 0.0
+    handoffs: int = 0            # prefill->decode KV-page handoffs
+                                 # (disaggregated engine)
 
     @property
     def acceptance_rate(self) -> float:
@@ -280,4 +314,8 @@ class EngineStats:
                 f"cancelled={self.cancellations} "
                 f"deadline_misses={self.deadline_misses} shed={self.shed} "
                 f"faults={self.faults_injected} "
-                f"goodput_tok_s={self.goodput:.1f}")
+                f"goodput_tok_s={self.goodput:.1f} "
+                f"host_ms={self.host_ms:.1f} "
+                f"device_ms={self.device_ms:.1f} "
+                f"overlap_ms={self.overlap_ms:.1f} "
+                f"handoffs={self.handoffs}")

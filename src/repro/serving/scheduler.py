@@ -33,7 +33,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 from .request import ServeRequest
 
@@ -69,6 +69,10 @@ class SlotState:
     submit_t: float = 0.0
     ttft_rounds: int = 0  # engine steps from submission to first token
     ttft_s: float = 0.0
+    # pipelined steps: the slot finished prefilling this step and its
+    # first token is still a lazy device scalar riding the decode round
+    # (committed at the step's single batched fetch)
+    first_pending: bool = False
     # TPP (event-sequence) domain: the pending event is a (time, mark)
     # pair and generation also stops once it passes the horizon
     t_pend: float = 0.0   # absolute time of the pending event
@@ -309,11 +313,17 @@ class Scheduler:
                 ctx["anchors"][g] = min(prev, e.seq)
         return ctx
 
-    def admit(self) -> List[Tuple[int, SlotState]]:
+    def admit(self, allowed: Optional[Sequence[int]] = None,
+              ) -> List[Tuple[int, SlotState]]:
         """Fill free slots in policy order (one sort per call; the keys
-        only depend on the current step and the slot/queue snapshot)."""
+        only depend on the current step and the slot/queue snapshot).
+        ``allowed`` restricts which slot indices admissions may land in
+        (disaggregated engines admit only into prefill-worker slots)."""
         placed = []
         free = self.free_slots()
+        if allowed is not None:
+            ok = set(allowed)
+            free = [i for i in free if i in ok]
         if not free or not self.pending:
             return placed
         ctx = self._policy_ctx()

@@ -83,7 +83,12 @@ def tpp_ar_round_paged_fn(cfg_t, policy, max_kv: int):
             # per-lane health: a NaN event time or NaN type logits mean
             # this lane's round is unusable (the engine quarantines it)
             ok = ~(jnp.isnan(new_t) | jnp.any(jnp.isnan(logits), axis=-1))
-            return pg_t, new_t, kk.astype(jnp.int32), ok
+            # pack the int lanes so the host fetch is one [S,2] + one
+            # [S] array per round (engine commits from a single
+            # batched device_get)
+            packed_i = jnp.stack(
+                [kk.astype(jnp.int32), ok.astype(jnp.int32)], axis=1)
+            return pg_t, packed_i, new_t
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]
 
@@ -91,10 +96,13 @@ def tpp_ar_round_paged_fn(cfg_t, policy, max_kv: int):
 def tpp_sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy, max_kv: int):
     """One batched propose-verify round (Algorithm 1 on the paged pool).
 
-    Returns (pg_t, pg_d, d_t [S,g], d_k [S,g], A [S], new_t [S],
-    new_k [S], ok [S]); the host commits ``d_t/d_k[:A]`` plus the
-    replacement event and truncates both pools to ``len0 + 1 + A``
-    (lanes with ``ok == False`` are quarantined instead).
+    Returns (pg_t, pg_d, packed_i [S,g+3] int32 = d_k ‖ A ‖ new_k ‖ ok,
+    packed_f [S,g+1] float32 = d_t ‖ new_t); the host commits
+    ``d_t/d_k[:A]`` plus the replacement event and truncates both pools
+    to ``len0 + 1 + A`` (lanes with ``ok == False`` are quarantined
+    instead). The int/float packing keeps the round's host-bound
+    scalars to exactly two device arrays for the engine's single
+    batched fetch.
     """
     key = ("tpp_sd_round", cfg_t, cfg_d, gamma, policy, max_kv)
     if key not in _FN_CACHE:
@@ -187,6 +195,11 @@ def tpp_sd_round_paged_fn(cfg_t, cfg_d, gamma: int, policy, max_kv: int):
             # per-lane health (NaN anywhere in this lane's round)
             ok = ~(jnp.any(jnp.isnan(logits_t_all), axis=(1, 2))
                    | jnp.isnan(new_t) | jnp.any(jnp.isnan(d_t), axis=1))
-            return pg_t, pg_d, d_t, d_k, A, new_t, new_k, ok
+            packed_i = jnp.concatenate(
+                [d_k, A[:, None].astype(jnp.int32),
+                 new_k[:, None].astype(jnp.int32),
+                 ok.astype(jnp.int32)[:, None]], axis=1)
+            packed_f = jnp.concatenate([d_t, new_t[:, None]], axis=1)
+            return pg_t, pg_d, packed_i, packed_f
         _FN_CACHE[key] = jax.jit(fn)
     return _FN_CACHE[key]

@@ -12,3 +12,13 @@ def round_fn(x):
     print("round took", t0)
     x.block_until_ready()
     return y
+
+
+def commit_loop(out, slots):
+    # one device sync PER SLOT — the packed-fetch antipattern
+    toks = []
+    for slot in slots:
+        toks.append(np.asarray(out[slot]))
+        toks.append(out[slot].item())
+        toks.append(jax.device_get(out[slot]))
+    return toks

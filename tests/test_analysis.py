@@ -68,6 +68,19 @@ def test_bad_fixtures_flag_multiple_sites():
     assert len(rep.findings) >= 3 and len(kinds) >= 3
 
 
+def test_host_loop_per_element_transfers_flagged():
+    # the host-loop sub-check: np.asarray(x[i]) / x[i].item() /
+    # jax.device_get(x[i]) inside a for loop each flag — one finding
+    # per call site, none for the traced-function sites' lines
+    rep = _run("host_sync_bad.py", rules=["host-sync-in-hot-path"])
+    loop_hits = [f for f in rep.findings if "host loop" in f.message]
+    assert len(loop_hits) == 3, [f.render() for f in rep.findings]
+    # the good fixture's loop (one batched device_get, whole-array
+    # asarray, plain numpy indexing) stays clean
+    rep = _run("host_sync_good.py", rules=["host-sync-in-hot-path"])
+    assert not rep.findings, [f.render() for f in rep.findings]
+
+
 # -- suppression semantics --------------------------------------------------
 
 def test_suppression_with_reason_moves_finding():

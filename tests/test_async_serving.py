@@ -1,0 +1,207 @@
+"""Async double-buffered serving: ``run_async()`` == ``run()`` bitwise.
+
+The pinned contract: the pipelined loop (dispatch round N, overlap host
+staging, ONE batched fetch, commit at the fault barrier) only reorders
+HOST work — round composition and every ``fold_in(rng, round_idx)``
+draw are untouched — so ``run_async()`` commits token streams bitwise
+identical to the synchronous ``run()``:
+
+  - across the matrix method (ar | sd) x layout (paged | dense) x
+    kernel (ref | pallas-interpret), chunked prefill on the paged legs
+    (the deferred-first-token path rides the decode round as a lazy
+    device scalar on BOTH loops);
+  - under an injected ``step_error`` FaultPlan (the retry contract is
+    loop-agnostic);
+  - in the TPP (event-sequence) domain;
+  - with the per-phase wall breakdown observable: the async loop books
+    nonzero ``overlap_ms``, the sync loop books zero.
+
+Streaming: ``ServeRequest.on_tokens`` chunks arrive in commit order and
+concatenate to exactly the final ``ServeResult.tokens``, on both loops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TPPConfig
+from repro.models import registry, tpp
+from repro.serving import (FaultPlan, FaultSpec, ServeRequest,
+                           ServingEngine)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, vocab=31, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=vocab, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+def _engine(pair, method, layout, kernel, **kw):
+    cfg_t, cfg_d, pt, pd = pair
+    kw.setdefault("max_len", 32)
+    if layout == "paged":
+        # chunked admission on the paged legs: prompts complete
+        # mid-step and their first tokens take the DEFERRED path
+        kw.setdefault("prefill_chunk", 3)
+    if method == "ar":
+        return ServingEngine(cfg_t, pt, method="ar", max_batch=3,
+                             kv_layout=layout, kernel=kernel, **kw)
+    return ServingEngine(cfg_t, pt, cfg_d, pd, method="sd", max_batch=3,
+                         gamma=2, kv_layout=layout, kernel=kernel, **kw)
+
+
+def _submit_all(eng, n_req=4, cb=None):
+    return [eng.submit(ServeRequest(
+        prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5 + i,
+        rng=100 + i, temperature=1.0 + 0.1 * (i % 3), on_tokens=cb))
+        for i in range(n_req)]
+
+
+def _by_id(results):
+    return {r.request_id: r for r in results}
+
+
+MATRIX = [
+    ("ar", "paged", "ref"),
+    ("ar", "paged", "pallas"),
+    ("ar", "dense", "ref"),
+    ("sd", "paged", "ref"),
+    ("sd", "paged", "pallas"),
+    ("sd", "dense", "ref"),
+]
+
+
+@pytest.mark.parametrize("method,layout,kernel", MATRIX)
+def test_async_bitwise_equals_sync(pair, method, layout, kernel):
+    eng_s = _engine(pair, method, layout, kernel)
+    order = _submit_all(eng_s)
+    sync = _by_id(eng_s.run())
+
+    eng_a = _engine(pair, method, layout, kernel)
+    _submit_all(eng_a)
+    polled = []
+    got = _by_id(eng_a.run_async(poll=lambda: polled.append(1)))
+
+    assert len(got) == len(sync) == len(order)
+    for rid_s, rid_a in zip(sorted(sync), sorted(got)):
+        assert sync[rid_s].ok and got[rid_a].ok
+        np.testing.assert_array_equal(np.asarray(sync[rid_s].tokens),
+                                      np.asarray(got[rid_a].tokens))
+    assert polled, "the overlap window never ran the poll callback"
+    # the breakdown is observable: async books overlap, sync books none
+    assert eng_a.stats().overlap_ms > 0
+    assert eng_a.stats().device_ms > 0
+    assert eng_s.stats().overlap_ms == 0.0
+
+
+@pytest.mark.parametrize("layout", ["paged", "dense"])
+def test_async_bitwise_under_faults(pair, layout):
+    """A step_error retried mid-run commits the same streams on both
+    loops — the rollback contract is loop-agnostic."""
+    base = _engine(pair, "sd", layout, "ref", fixed_window=True)
+    _submit_all(base)
+    want = [np.asarray(r.tokens) for r in sorted(base.run(),
+                                                 key=lambda r: r.request_id)]
+    for loop in ("sync", "async"):
+        plan = FaultPlan(FaultSpec(kind="step_error", step=2, times=2))
+        eng = _engine(pair, "sd", layout, "ref", fixed_window=True,
+                      faults=plan)
+        _submit_all(eng)
+        res = sorted(eng.run() if loop == "sync" else eng.run_async(),
+                     key=lambda r: r.request_id)
+        assert plan.injected >= 1
+        assert eng.stats().retries >= 1
+        for r, w in zip(res, want):
+            assert r.ok, r.error
+            np.testing.assert_array_equal(np.asarray(r.tokens), w)
+
+
+def test_async_bitwise_tpp():
+    cfg_t = TPPConfig(name="as-t", encoder="thp", num_layers=2,
+                      num_heads=2, d_model=16, d_ff=32, num_marks=3,
+                      num_mix=4)
+    cfg_d = cfg_t.replace(name="as-d", num_layers=1, num_heads=1)
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    r = np.random.default_rng(3)
+    times = np.cumsum(r.exponential(0.5, size=4)).astype(np.float32)
+    marks = r.integers(0, 3, size=4).astype(np.int32)
+
+    def go(loop):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
+                            max_batch=2, max_len=24, gamma=2)
+        for i in range(3):
+            eng.submit(prompt=marks, times=times, max_new_tokens=6,
+                       rng=50 + i)
+        res = eng.run() if loop == "sync" else eng.run_async()
+        return sorted(res, key=lambda x: x.request_id)
+
+    for a, b in zip(go("sync"), go("async")):
+        assert a.ok and b.ok
+        np.testing.assert_array_equal(np.asarray(a.tokens),
+                                      np.asarray(b.tokens))
+        np.testing.assert_array_equal(np.asarray(a.times),
+                                      np.asarray(b.times))
+
+
+# ---------------------------------------------------------------------------
+# streaming callbacks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loop", ["sync", "async"])
+@pytest.mark.parametrize("method,layout", [("sd", "paged"),
+                                           ("ar", "paged"),
+                                           ("sd", "dense")])
+def test_streaming_chunks_prefix_of_final(pair, loop, method, layout):
+    """on_tokens chunks arrive in commit order; their concatenation IS
+    the final token stream (including the deferred first token on the
+    chunked paged legs)."""
+    chunks = {}
+
+    def cb(rid, toks):
+        assert toks, "empty streaming chunk"
+        chunks.setdefault(rid, []).append(list(toks))
+
+    eng = _engine(pair, method, layout, "ref")
+    _submit_all(eng, cb=cb)
+    res = _by_id(eng.run() if loop == "sync" else eng.run_async())
+    assert set(chunks) == set(res)
+    for rid, r in res.items():
+        assert r.ok
+        streamed = [t for c in chunks[rid] for t in c]
+        np.testing.assert_array_equal(np.asarray(streamed, np.int32),
+                                      np.asarray(r.tokens))
+        # every chunk was a prefix extension: cumulative lengths grow
+        lens = np.cumsum([len(c) for c in chunks[rid]])
+        assert lens[-1] == r.n and all(lens[:-1] < r.n)
+
+
+def test_streaming_fanout_members_get_callbacks(pair):
+    chunks = {}
+
+    def cb(rid, toks):
+        chunks.setdefault(rid, []).append(list(toks))
+
+    eng = _engine(pair, "sd", "paged", "ref")
+    ids = eng.submit(ServeRequest(
+        prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5,
+        rng=7, on_tokens=cb), fanout=3)
+    res = _by_id(eng.run_async())
+    assert set(chunks) == set(ids)
+    for rid in ids:
+        streamed = [t for c in chunks[rid] for t in c]
+        np.testing.assert_array_equal(np.asarray(streamed, np.int32),
+                                      np.asarray(res[rid].tokens))

@@ -26,8 +26,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
-from repro.serving import (FAULT_KINDS, FaultPlan, FaultSpec,
-                           RESULT_STATUSES, ServeRequest, ServingEngine)
+from repro.serving import (FAULT_KINDS, DisaggServingEngine, FaultPlan,
+                           FaultSpec, RESULT_STATUSES, ServeRequest,
+                           ServingEngine)
 from repro.serving.kv_pool import PagedKVCachePool
 
 settings.register_profile("chaos", max_examples=10, deadline=None)
@@ -70,6 +71,8 @@ _POOL_OPS = st.lists(
         st.tuples(st.just("free"), st.integers(0, SLOTS - 1)),
         st.tuples(st.just("fork"), st.integers(0, SLOTS - 1),
                   st.integers(0, SLOTS - 1)),
+        st.tuples(st.just("transfer"), st.integers(0, SLOTS - 1),
+                  st.integers(0, SLOTS - 1)),
         st.tuples(st.just("seize")),
         st.tuples(st.just("restore")),
     ),
@@ -103,6 +106,11 @@ def test_pool_books_exact_under_seize_cycles(ops):
                     and int(pool.n_blocks[dst]) == 0 \
                     and int(pool.lens[src]) > 0:
                 pool.fork(src, dst, int(pool.lens[src]))
+        elif kind == "transfer":
+            _, src, dst = op
+            if src != dst and int(pool.lens[dst]) == 0 \
+                    and int(pool.n_blocks[dst]) == 0:
+                pool.transfer_slot(src, dst)
         elif kind == "seize":
             seized.append(pool.seize_free())
         elif kind == "restore":
@@ -132,11 +140,19 @@ def _pair():
     return _STATE["pair"]
 
 
-def _run(faults=None, cancel_idx=None):
+def _run(faults=None, cancel_idx=None, disagg=False):
     cfg_t, cfg_d, pt, pd = _pair()
-    eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, max_len=32,
-                        gamma=2, kv_layout="paged", kernel="ref",
-                        fixed_window=True, faults=faults)
+    if disagg:
+        # prefill worker on slot 0, decode on 1-2: the handoff barrier
+        # is live, so handoff_error specs actually fire
+        eng = DisaggServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3,
+                                  max_len=32, gamma=2, kv_layout="paged",
+                                  kernel="ref", fixed_window=True,
+                                  prefill_slots=1, faults=faults)
+    else:
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, max_batch=3, max_len=32,
+                            gamma=2, kv_layout="paged", kernel="ref",
+                            fixed_window=True, faults=faults)
     order = [eng.submit(ServeRequest(
         prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5 + i,
         rng=100 + i, temperature=1.0 + 0.1 * (i % 3)))
@@ -151,11 +167,12 @@ def _run(faults=None, cancel_idx=None):
     return eng, order, {r.request_id: r for r in results}
 
 
-def _baseline():
-    if "base" not in _STATE:
-        _, order, by_id = _run()
-        _STATE["base"] = [np.asarray(by_id[rid].tokens) for rid in order]
-    return _STATE["base"]
+def _baseline(disagg=False):
+    key = "base_disagg" if disagg else "base"
+    if key not in _STATE:
+        _, order, by_id = _run(disagg=disagg)
+        _STATE[key] = [np.asarray(by_id[rid].tokens) for rid in order]
+    return _STATE[key]
 
 
 _SPEC = st.builds(
@@ -167,12 +184,11 @@ _SPEC = st.builds(
     seconds=st.just(0.001))
 
 
-@given(specs=st.lists(_SPEC, min_size=1, max_size=2),
-       cancel_idx=st.one_of(st.none(), st.integers(0, N_REQ - 1)))
-def test_engine_survivors_bitwise_under_random_chaos(specs, cancel_idx):
-    ref = _baseline()
+def _assert_chaos_contract(specs, cancel_idx, disagg):
+    ref = _baseline(disagg=disagg)
     plan = FaultPlan(*specs)
-    eng, order, by_id = _run(faults=plan, cancel_idx=cancel_idx)
+    eng, order, by_id = _run(faults=plan, cancel_idx=cancel_idx,
+                             disagg=disagg)
     for i, rid in enumerate(order):
         res = by_id.get(rid)
         assert res is not None, "request vanished without a result"
@@ -188,3 +204,21 @@ def test_engine_survivors_bitwise_under_random_chaos(specs, cancel_idx):
     for pool in (eng.pool_t, eng.pool_d):
         assert int(pool.refcount.sum()) == 0
         assert len(pool.free) == pool.n_pages - 1
+    if disagg:
+        assert len(eng._handoffs) == 0, "parked handoff leaked"
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=2),
+       cancel_idx=st.one_of(st.none(), st.integers(0, N_REQ - 1)))
+def test_engine_survivors_bitwise_under_random_chaos(specs, cancel_idx):
+    _assert_chaos_contract(specs, cancel_idx, disagg=False)
+
+
+@given(specs=st.lists(_SPEC, min_size=1, max_size=2),
+       cancel_idx=st.one_of(st.none(), st.integers(0, N_REQ - 1)))
+def test_disagg_survivors_bitwise_under_random_chaos(specs, cancel_idx):
+    """Same property with the prefill/decode split engaged; the fault
+    alphabet (``FAULT_KINDS``) now includes ``handoff_error``, which is
+    only live here — the handoff barrier is a disagg-only fault
+    point."""
+    _assert_chaos_contract(specs, cancel_idx, disagg=True)

@@ -1,0 +1,299 @@
+"""Disaggregated prefill/decode serving (``repro.serving.disagg``).
+
+The pinned contracts:
+
+  - the split is bitwise-neutral: with admission pinned to the prefill
+    worker and completed prompts handed to decode slots by block-table
+    transfer, the committed streams equal the unified engine's under
+    ``method="ar"`` and ``method="sd", fixed_window=True`` (the handoff
+    delays WHEN a request decodes, never WHAT it samples — same
+    ``fold_in(rng, round_idx)`` streams);
+  - the handoff barrier is a fault point: an injected ``handoff_error``
+    fires BEFORE any ownership moves, so retried handoffs replay
+    nothing (survivors bitwise), and a request whose retry budget is
+    spent fails alone with zero leaked pages;
+  - ``PagedKVCachePool.transfer_slot`` is pure bookkeeping: page ids
+    move ``src``→``dst``, net refcounts unchanged, free list untouched,
+    shared (forked) pages stay shared;
+  - a parked request (prompt done, no free decode slot) can be
+    cancelled: its queue entry is purged and its pages freed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TPPConfig
+from repro.models import registry, tpp
+from repro.serving import (DisaggServingEngine, FaultPlan, FaultSpec,
+                           ServeRequest, ServingEngine)
+from repro.serving.kv_pool import PagedKVCachePool
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _dense(num_layers=2, name="t", **kw):
+    base = dict(name=name, family="dense", num_layers=num_layers,
+                d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                vocab_size=31, dtype="float32", param_dtype="float32",
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_t, cfg_d = _dense(2), _dense(1, name="d")
+    mt, md = registry.get_model(cfg_t), registry.get_model(cfg_d)
+    return (cfg_t, cfg_d, mt.init_params(RNG),
+            md.init_params(jax.random.PRNGKey(1)))
+
+
+def _kw(method, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("prefill_chunk", 3)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("kernel", "ref")
+    if method == "sd":
+        kw.setdefault("gamma", 2)
+        kw.setdefault("fixed_window", True)
+    return kw
+
+
+def _unified(pair, method, **kw):
+    cfg_t, cfg_d, pt, pd = pair
+    kw = _kw(method, **kw)
+    if method == "ar":
+        return ServingEngine(cfg_t, pt, method="ar", **kw)
+    return ServingEngine(cfg_t, pt, cfg_d, pd, method="sd", **kw)
+
+
+def _disagg(pair, method, **kw):
+    cfg_t, cfg_d, pt, pd = pair
+    kw = _kw(method, **kw)
+    if method == "ar":
+        return DisaggServingEngine(cfg_t, pt, method="ar", **kw)
+    return DisaggServingEngine(cfg_t, pt, cfg_d, pd, method="sd", **kw)
+
+
+def _submit_all(eng, n_req=4):
+    return [eng.submit(ServeRequest(
+        prompt=jnp.arange(5, dtype=jnp.int32), max_new_tokens=5 + i,
+        rng=100 + i, temperature=1.0 + 0.1 * (i % 3)))
+        for i in range(n_req)]
+
+
+def _tokens_by_id(results):
+    return {r.request_id: np.asarray(r.tokens) for r in results}
+
+
+def _assert_leak_free(eng):
+    for pool in (eng.pool_t, eng.pool_d):
+        if pool is None:
+            continue
+        assert int(pool.refcount.sum()) == 0
+        assert len(pool.free) == pool.n_pages - 1
+    assert len(eng._handoffs) == 0
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity with the unified engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["ar", "sd"])
+@pytest.mark.parametrize("prefill_slots", [1, 2])
+def test_disagg_bitwise_equals_unified(pair, method, prefill_slots):
+    base = _unified(pair, method)
+    order = _submit_all(base)
+    want = _tokens_by_id(base.run())
+
+    eng = _disagg(pair, method, prefill_slots=prefill_slots)
+    _submit_all(eng)
+    got = _tokens_by_id(eng.run())
+
+    assert len(got) == len(want) == len(order)
+    for rid_w, rid_g in zip(sorted(want), sorted(got)):
+        np.testing.assert_array_equal(want[rid_w], got[rid_g])
+    assert eng.stats().handoffs == len(order)
+    assert eng.prefill_worker.slots == tuple(range(prefill_slots))
+    assert eng.decode_worker.slots == tuple(range(prefill_slots, 3))
+    _assert_leak_free(eng)
+
+
+def test_disagg_async_loop_bitwise(pair):
+    """The two tentpole halves compose: run_async() on the disagg
+    engine still equals the unified sync run."""
+    base = _unified(pair, "sd")
+    _submit_all(base)
+    want = _tokens_by_id(base.run())
+
+    eng = _disagg(pair, "sd", prefill_slots=1)
+    _submit_all(eng)
+    got = _tokens_by_id(eng.run_async())
+    for rid_w, rid_g in zip(sorted(want), sorted(got)):
+        np.testing.assert_array_equal(want[rid_w], got[rid_g])
+    assert eng.stats().overlap_ms > 0
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# the handoff barrier as a fault point
+# ---------------------------------------------------------------------------
+
+def test_handoff_fault_retries_bitwise(pair):
+    base = _unified(pair, "sd")
+    _submit_all(base)
+    want = _tokens_by_id(base.run())
+
+    # prompt(5) in chunks of 3 completes at step 2; the first drain
+    # attempt is step 3's — fail it twice, the third attempt lands
+    plan = FaultPlan(FaultSpec(kind="handoff_error", step=3, times=2))
+    eng = _disagg(pair, "sd", prefill_slots=1, faults=plan)
+    _submit_all(eng)
+    got = {r.request_id: r for r in eng.run()}
+
+    assert plan.injected_of("handoff_error") >= 1
+    assert eng.stats().retries >= 1
+    assert eng.stats().handoffs == len(want)
+    for rid_w, rid_g in zip(sorted(want), sorted(got)):
+        assert got[rid_g].ok, got[rid_g].error
+        np.testing.assert_array_equal(want[rid_w],
+                                      np.asarray(got[rid_g].tokens))
+    _assert_leak_free(eng)
+
+
+def test_handoff_retry_exhaustion_fails_head_only(pair):
+    base = _unified(pair, "sd")
+    base_order = _submit_all(base)
+    want = _tokens_by_id(base.run())
+
+    plan = FaultPlan(FaultSpec(kind="handoff_error", step=3, times=4))
+    eng = _disagg(pair, "sd", prefill_slots=1, max_round_retries=1,
+                  faults=plan)
+    order = _submit_all(eng)
+    results = {r.request_id: r for r in eng.run()}
+
+    failed = [r for r in results.values() if not r.ok]
+    assert len(failed) == 1
+    # r0's handoff lands at step 2, before the fault window opens; r1
+    # is the queue HEAD while the window is live, so it alone is
+    # charged — once per failed drain — until its budget is spent
+    assert failed[0].request_id == order[1]
+    assert failed[0].status == "failed"
+    assert "handoff" in failed[0].error
+    assert len(failed[0].tokens) == 0      # never reached a decode slot
+    # survivors are bitwise the unified streams for THEIR requests
+    for i in (0, 2, 3):
+        r = results[order[i]]
+        assert r.ok, r.error
+        np.testing.assert_array_equal(want[base_order[i]],
+                                      np.asarray(r.tokens))
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# transfer_slot bookkeeping
+# ---------------------------------------------------------------------------
+
+def test_transfer_slot_moves_references_not_pages():
+    pool = PagedKVCachePool(3, _dense(1), page_size=4, max_len=16)
+    pool.reserve(0, 10)
+    pool.ensure_blocks(0, 10)
+    pool.lens[0] = 10
+    pages = [int(pool.tables[0, b]) for b in range(int(pool.n_blocks[0]))]
+    free_before = sorted(pool.free)
+    rc_before = pool.refcount.copy()
+
+    nb = pool.transfer_slot(0, 2)
+
+    assert nb == len(pages) == 3
+    assert [int(pool.tables[2, b]) for b in range(3)] == pages
+    assert int(pool.lens[2]) == 10
+    assert int(pool.n_blocks[2]) == 3
+    assert int(pool.reserved[2]) == 3
+    # src fully vacated
+    assert int(pool.lens[0]) == 0
+    assert int(pool.n_blocks[0]) == 0
+    assert int(pool.reserved[0]) == 0
+    # zero net effect on the allocator: refcounts and free list exact
+    np.testing.assert_array_equal(pool.refcount, rc_before)
+    assert sorted(pool.free) == free_before
+
+
+def test_transfer_slot_rejects_nonempty_dst():
+    pool = PagedKVCachePool(3, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 4)
+    pool.lens[0] = 4
+    pool.ensure_blocks(1, 4)
+    pool.lens[1] = 4
+    with pytest.raises(ValueError, match="not empty"):
+        pool.transfer_slot(0, 1)
+
+
+def test_transfer_slot_keeps_forked_pages_shared():
+    pool = PagedKVCachePool(3, _dense(1), page_size=4, max_len=16)
+    pool.ensure_blocks(0, 8)
+    pool.lens[0] = 8
+    pool.fork(0, 1, 8)                     # slots 0 and 1 share 2 pages
+    shared = [int(pool.tables[0, b]) for b in range(2)]
+    assert all(int(pool.refcount[p]) == 2 for p in shared)
+
+    pool.transfer_slot(0, 2)
+    # the fork partner's view is untouched; refcounts still 2
+    assert [int(pool.tables[1, b]) for b in range(2)] == shared
+    assert [int(pool.tables[2, b]) for b in range(2)] == shared
+    assert all(int(pool.refcount[p]) == 2 for p in shared)
+
+
+# ---------------------------------------------------------------------------
+# parked-request lifecycle
+# ---------------------------------------------------------------------------
+
+def test_cancel_parked_request_purges_queue(pair):
+    # 2 prefill slots, 1 decode slot: both prompts finish together but
+    # only one can be adopted — the other stays parked in the queue
+    eng = _disagg(pair, "sd", prefill_slots=2)
+    order = _submit_all(eng, n_req=2)
+    done = []
+    for _ in range(3):
+        done.extend(eng.step())
+    assert len(eng._handoffs) == 1
+    parked = eng._handoffs.peek().state.request.request_id
+    assert parked == order[1]              # FIFO: oldest adopted first
+
+    res = eng.cancel(parked)
+    assert res is not None and res.status == "cancelled"
+    assert len(eng._handoffs) == 0
+
+    done.extend(eng.run())
+    by_id = {r.request_id: r for r in done}
+    assert by_id[order[0]].ok
+    _assert_leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# constructor validation
+# ---------------------------------------------------------------------------
+
+def test_rejects_bad_prefill_slots(pair):
+    for bad in (0, 3, 7):
+        with pytest.raises(ValueError, match="prefill_slots"):
+            _disagg(pair, "ar", prefill_slots=bad)
+
+
+def test_rejects_dense_layout(pair):
+    with pytest.raises(ValueError):
+        _disagg(pair, "ar", kv_layout="dense")
+
+
+def test_rejects_tpp_domain():
+    cfg_t = TPPConfig(name="dg-t", encoder="thp", num_layers=1,
+                      num_heads=1, d_model=16, d_ff=32, num_marks=3,
+                      num_mix=4)
+    cfg_d = cfg_t.replace(name="dg-d")
+    pt = tpp.init_params(cfg_t, jax.random.PRNGKey(0))
+    pd = tpp.init_params(cfg_d, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError):
+        DisaggServingEngine(cfg_t, pt, cfg_d, pd, method="sd",
+                            max_batch=3, max_len=24, gamma=2)

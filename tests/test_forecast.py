@@ -161,6 +161,31 @@ def test_waves_bitwise_equal_single_fanout(tpp_pair, method, kernel):
     np.testing.assert_array_equal(res.quantiles, want)
 
 
+def test_forecaster_async_loop_bitwise(tpp_pair):
+    """Forecaster(loop="async") drains waves with run_async(); the
+    quantile surface and collected rollouts are bitwise the sync
+    executor's."""
+    cfg_t, cfg_d, pt, pd = tpp_pair
+    times, marks = _history(4)
+    kw = dict(method="sd", max_batch=4, max_len=16, gamma=2,
+              kernel="ref", sched="grouped", page_size=4, n_pages=12)
+    req = ForecastRequest(history_times=times, history_marks=marks,
+                          horizon=6.0, n_rollouts=5, bins=4,
+                          max_events=6, rng=jax.random.PRNGKey(42))
+
+    def go(loop):
+        eng = ServingEngine(cfg_t, pt, cfg_d, pd, **kw)
+        return Forecaster(eng, loop=loop).forecast(req, collect=True)
+
+    a, b = go("sync"), go("async")
+    np.testing.assert_array_equal(a.quantiles, b.quantiles)
+    for (mk_a, ts_a), (mk_b, ts_b) in zip(a.rollouts, b.rollouts):
+        np.testing.assert_array_equal(mk_a, mk_b)
+        np.testing.assert_array_equal(ts_a, ts_b)
+    with pytest.raises(ValueError, match="loop"):
+        Forecaster(ServingEngine(cfg_t, pt, cfg_d, pd, **kw), loop="bogus")
+
+
 def test_forecaster_requires_tpp_and_idle_engine(tpp_pair):
     cfg_t, cfg_d, pt, pd = tpp_pair
     tok = ModelConfig(name="tk", family="dense", num_layers=1, d_model=16,
